@@ -1,0 +1,38 @@
+"""Partition-time comparison (paper Fig. 14): OpST's O(N²·d) vs AKDTree's
+O(N/3·logN) across densities — the motivation for threshold T0."""
+from __future__ import annotations
+
+from repro.core import amr
+from repro.core.akdtree import akdtree_partition
+from repro.core.blocks import make_block_grid
+from repro.core.opst import opst_partition
+
+from .common import timed, write_csv
+
+DENSITIES = [0.1, 0.3, 0.5, 0.7, 0.9]
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 32 if quick else 48
+    for d in (DENSITIES[::2] if quick else DENSITIES):
+        ds = amr.synthetic_amr((n, n, n), densities=[d, 1 - d],
+                               refine_block=4, seed=1)
+        lvl = ds.levels[0]
+        grid = make_block_grid(lvl.data, lvl.mask, unit=4)
+        sbs_o, t_opst = timed(opst_partition, grid)
+        sbs_a, t_akd = timed(akdtree_partition, grid)
+        rows.append((round(d, 2), round(t_opst * 1e3, 2),
+                     round(t_akd * 1e3, 2), len(sbs_o), len(sbs_a)))
+    path = write_csv("partition_time",
+                     ["density", "opst_ms", "akdtree_ms", "opst_blocks",
+                      "akdtree_blocks"], rows)
+    # the paper's claim: OpST time grows with density, AKDTree stays flat
+    opst_growth = rows[-1][1] / max(rows[0][1], 1e-9)
+    akd_growth = rows[-1][2] / max(rows[0][2], 1e-9)
+    return {"csv": path, "opst_time_growth": round(opst_growth, 1),
+            "akdtree_time_growth": round(akd_growth, 1)}
+
+
+if __name__ == "__main__":
+    print(run())

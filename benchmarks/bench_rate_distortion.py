@@ -1,0 +1,60 @@
+"""Rate-distortion curves (paper Figs. 20–27): TAC+/TAC vs the baselines
+on the Table-I-like synthetic datasets, for both Lor/Reg and Interp."""
+from __future__ import annotations
+
+from repro.core import baselines, hybrid, metrics
+
+from .common import dataset, eb_for, write_csv
+
+DATASETS = ["run1_z10", "run1_z5", "run1_z2", "run2_t3", "run3_z1",
+            "warpx_800", "iamr_90", "iamr_150"]
+REL_EBS = [3e-2, 1e-2, 6.7e-3, 3e-3, 1e-3, 3e-4]
+
+METHODS = {
+    "TAC+":       lambda ds, eb: hybrid.compress_amr(ds, eb=eb, unit=8,
+                                                     algorithm="lor_reg",
+                                                     she=True),
+    "TAC/lorreg": lambda ds, eb: hybrid.compress_amr(ds, eb=eb, unit=8,
+                                                     algorithm="lor_reg",
+                                                     she=False),
+    "TAC/interp": lambda ds, eb: hybrid.compress_amr(ds, eb=eb, unit=8,
+                                                     algorithm="interp",
+                                                     she=False),
+    "1D":         lambda ds, eb: baselines.compress_1d_naive(ds, eb),
+    "zMesh":      lambda ds, eb: baselines.compress_zmesh(ds, eb),
+    "3D":         lambda ds, eb: baselines.compress_3d_baseline(ds, eb),
+}
+
+
+def run(quick: bool = False):
+    rows = []
+    names = DATASETS[:3] if quick else DATASETS
+    rels = REL_EBS[1:5] if quick else REL_EBS
+    for name in names:
+        ds = dataset(name)
+        for rel in rels:
+            eb = eb_for(ds, rel)
+            for mname, fn in METHODS.items():
+                res = fn(ds, eb)
+                rows.append((name, mname, rel,
+                             round(res.bit_rate(), 4),
+                             round(res.compression_ratio(), 2),
+                             round(metrics.amr_psnr(ds, res), 2)))
+    path = write_csv("rate_distortion",
+                     ["dataset", "method", "rel_eb", "bit_rate", "cr",
+                      "psnr"], rows)
+    # headline: best TAC CR gain vs best 1D-family baseline per dataset
+    gains = {}
+    for name in names:
+        for rel in rels:
+            r = {m: next(x for x in rows if x[0] == name and x[1] == m
+                         and x[2] == rel) for m in METHODS}
+            best_tac = max(r["TAC+"][4], r["TAC/interp"][4])
+            base = max(r["1D"][4], r["zMesh"][4])
+            gains.setdefault(name, []).append(best_tac / base)
+    summary = {k: round(max(v), 2) for k, v in gains.items()}
+    return {"csv": path, "max_gain_vs_1d": summary}
+
+
+if __name__ == "__main__":
+    print(run())

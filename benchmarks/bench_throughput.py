@@ -1,0 +1,40 @@
+"""Compression throughput (paper Tables III–V): MB/s including pre-process,
+per method × dataset × error bound."""
+from __future__ import annotations
+
+from repro.core import baselines, hybrid
+
+from .common import dataset, eb_for, timed, write_csv
+
+DATASETS = ["run1_z10", "run1_z2", "run3_z1", "warpx_800", "iamr_90"]
+RELS = [1e-2, 1e-3]
+
+
+def run(quick: bool = False):
+    rows = []
+    names = DATASETS[:2] if quick else DATASETS
+    for name in names:
+        ds = dataset(name)
+        mb = ds.total_values() * 4 / 1e6
+        for rel in (RELS[:1] if quick else RELS):
+            eb = eb_for(ds, rel)
+            cases = {
+                "TAC+": lambda: hybrid.compress_amr(ds, eb=eb, unit=8,
+                                                    algorithm="lor_reg",
+                                                    she=True),
+                "TAC/interp": lambda: hybrid.compress_amr(
+                    ds, eb=eb, unit=8, algorithm="interp", she=False),
+                "1D": lambda: baselines.compress_1d_naive(ds, eb),
+                "3D": lambda: baselines.compress_3d_baseline(ds, eb),
+            }
+            for mname, fn in cases.items():
+                res, dt = timed(fn)
+                rows.append((name, rel, mname, round(mb / dt, 1),
+                             round(res.compression_ratio(), 1)))
+    path = write_csv("throughput",
+                     ["dataset", "rel_eb", "method", "mb_per_s", "cr"], rows)
+    return {"csv": path, "n_rows": len(rows)}
+
+
+if __name__ == "__main__":
+    print(run())

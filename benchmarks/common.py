@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: dataset cache, timing, CSV output."""
+from __future__ import annotations
+
+import os
+import time
+from functools import lru_cache
+
+import numpy as np
+
+from repro.core import amr
+
+RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
+
+
+@lru_cache(maxsize=None)
+def dataset(name: str):
+    return amr.load_preset(name)
+
+
+def eb_for(ds, rel: float) -> float:
+    rng = max(float(l.data.max()) for l in ds.levels) - \
+        min(float(l.data.min()) for l in ds.levels)
+    return rel * rng
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def write_csv(name: str, header: list[str], rows: list[tuple]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    with open(path, "w") as f:
+        f.write(",".join(header) + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

@@ -1,0 +1,51 @@
+"""Benchmark driver: one module per paper table/figure (DESIGN.md §7).
+
+``python -m benchmarks.run [--quick]`` runs everything and prints a
+``name,seconds,headline`` CSV summary; per-benchmark CSVs land in
+``results/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from . import (bench_density_sweep, bench_distributed, bench_grad_compress,
+               bench_halo, bench_kernels, bench_nast_opst,
+               bench_partition_time, bench_power_spectrum,
+               bench_rate_distortion, bench_she, bench_throughput)
+
+BENCHES = [
+    ("rate_distortion (Figs 20-27)", bench_rate_distortion),
+    ("density_sweep (Figs 12-13)", bench_density_sweep),
+    ("partition_time (Fig 14)", bench_partition_time),
+    ("she_ablation (Figs 15-16)", bench_she),
+    ("nast_vs_opst (Fig 9)", bench_nast_opst),
+    ("throughput (Tables III-V)", bench_throughput),
+    ("power_spectrum (Fig 30)", bench_power_spectrum),
+    ("halo_finder (Table II)", bench_halo),
+    ("distributed (SIII-F)", bench_distributed),
+    ("grad_compress (beyond-paper)", bench_grad_compress),
+    ("kernels (beyond-paper)", bench_kernels),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,seconds,headline")
+    for name, mod in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        out = mod.run(quick=args.quick)
+        dt = time.perf_counter() - t0
+        headline = {k: v for k, v in out.items() if k != "csv"}
+        print(f"{name},{dt:.1f},\"{json.dumps(headline)[:160]}\"", flush=True)
+
+
+if __name__ == "__main__":
+    main()

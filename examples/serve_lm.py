@@ -1,0 +1,55 @@
+"""Batched serving demo: prefill + iterative decode with the (optionally
+int8-compressed) KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --kv-quant
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import RunConfig, smoke_config
+from repro.models.layers import init_from_specs
+from repro.models.model import model_specs, param_counts
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek_7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--kv-quant", action="store_true")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    total, _ = param_counts(cfg)
+    print(f"serving {cfg.name} ({total / 1e6:.1f}M params), "
+          f"kv_quant={args.kv_quant}")
+    params = init_from_specs(model_specs(cfg), jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, RunConfig(kv_quant=args.kv_quant))
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size,
+                     size=(args.batch, args.prompt_len)), jnp.int32)
+    t0 = time.time()
+    out = eng.generate(params, prompts, new_tokens=args.new_tokens)
+    dt = time.time() - t0
+    print(f"generated {args.batch}×{args.new_tokens} tokens in {dt:.1f}s "
+          f"({args.batch * args.new_tokens / dt:.1f} tok/s)")
+    print("first sequence:", np.asarray(out[0])[:16], "...")
+    # cache footprint comparison
+    hkv, hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    cap = args.prompt_len + args.new_tokens
+    bf16 = L * args.batch * cap * hkv * hd * 2 * 2
+    int8 = L * args.batch * cap * hkv * (hd + 4) * 2
+    print(f"KV cache: bf16={bf16 / 1e6:.2f}MB  int8+scales={int8 / 1e6:.2f}MB "
+          f"({bf16 / int8:.2f}x smaller)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Atomic/async/elastic checkpointing, optional TAC-compressed (lossy)."""

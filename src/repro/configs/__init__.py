@@ -1,0 +1,4 @@
+"""Per-architecture configs (assignment pool) + registry + shapes."""
+from .base import ModelConfig, RunConfig, ShapeConfig  # noqa: F401
+from .registry import ARCH_IDS, get_config, smoke_config  # noqa: F401
+from .shapes import SHAPES, shapes_for  # noqa: F401

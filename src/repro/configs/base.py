@@ -1,0 +1,90 @@
+"""Model / run configuration schema.
+
+One :class:`ModelConfig` per assigned architecture (``repro/configs/<id>.py``)
+plus reduced smoke variants.  Input shapes are the four assigned cells
+(``shapes.py``).  Everything is a frozen dataclass so configs hash cleanly
+into jit static args.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+__all__ = ["ModelConfig", "ShapeConfig", "RunConfig"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0             # 0 → d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # --- attention details ---
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # --- SSM / RWKV ---
+    ssm_state: int = 0          # Mamba2 d_state (hybrid family)
+    ssm_expand: int = 2
+    ssm_head: int = 64
+    rwkv_head: int = 64
+    # --- hybrid (Zamba2): shared attention block every k core layers ---
+    shared_attn_every: int = 0
+    # --- modality frontend (vlm/audio): stubbed embeddings in ---
+    input_mode: str = "tokens"  # tokens | embeddings
+    act: str = "swiglu"         # swiglu | gelu
+    norm_eps: float = 1e-5
+    # numerics
+    dtype: str = "bfloat16"
+    # notes for DESIGN.md §Arch-applicability
+    notes: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if serve-time state is O(1) in context (SSM/hybrid)."""
+        return self.family in ("ssm", "hybrid")
+
+    # Parameter counts are derived from the materialized abstract param tree
+    # (see repro.models.model.param_counts) — no duplicate analytic formulas.
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str                   # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Per-(arch × shape × mesh) execution knobs — the perf surface."""
+
+    microbatches: int = 1       # gradient-accumulation steps per train step
+    remat: str = "layer"        # none | layer | zero  (activation checkpointing)
+    fsdp: bool = False          # shard params/optimizer over the data axis
+    seq_shard: bool = False     # shard sequence dim (SP) for long-context
+    grad_compress: bool = False # error-bounded int8 grads on the pod axis
+    kv_quant: bool = False      # int8 KV cache with per-token scales
+    scan_layers: bool = True    # lax.scan over stacked layer params
+    optimizer: str = "adamw"    # adamw | adafactor (factored 2nd moment)
+    optimizer_dtype: str = "float32"   # moments dtype
+    grad_accum_dtype: str = "float32"  # microbatch gradient accumulator
+    logits_fp32: bool = True

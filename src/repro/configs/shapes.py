@@ -1,0 +1,33 @@
+"""Assigned input shapes (one set, shared by all 10 LM-family archs).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a
+seq_len KV cache/state), ``prefill_32k`` lowers the prefill step,
+``train_4k`` lowers ``train_step`` — per the assignment brief.
+"""
+from __future__ import annotations
+
+from .base import ShapeConfig
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", seq_len=4_096,
+                            global_batch=256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", seq_len=32_768,
+                               global_batch=32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", seq_len=32_768,
+                              global_batch=128),
+    "long_500k": ShapeConfig("long_500k", "decode", seq_len=524_288,
+                             global_batch=1),
+}
+
+
+def shapes_for(cfg) -> dict[str, ShapeConfig]:
+    """Cells that actually run for this arch.
+
+    ``long_500k`` needs sub-quadratic attention: it runs for the ssm/hybrid
+    families (O(1) or O(shared-KV) serve state) and is recorded as
+    ``skipped/full-attention`` for the pure full-attention decoders
+    (DESIGN.md §Arch-applicability)."""
+    out = dict(SHAPES)
+    if not cfg.supports_long_context:
+        out.pop("long_500k")
+    return out

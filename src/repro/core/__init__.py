@@ -1,0 +1,23 @@
+"""TAC/TAC+ — the paper's contribution as a composable library.
+
+Layers (paper section in brackets):
+  amr         AMR data model + synthetic Nyx/WarpX/IAMR-like generator [§II-B]
+  blocks      unit-block partitioning                                  [§III]
+  gsp         ghost-shell padding                                      [§III-A]
+  nast        naive sparse tensor                                      [§III-B]
+  opst        optimized sparse tensor (maximal-cube DP)                [§III-B]
+  akdtree     adaptive k-d tree                                        [§III-C]
+  sz          SZ compression core (dual-quant Lorenzo / Lor-Reg / Interp)
+  huffman     canonical Huffman codec                                  [§II-A]
+  she         shared Huffman encoding                                  [§III-D]
+  hybrid      density-adaptive TAC/TAC+ drivers                        [§III-E]
+  baselines   naive-1D, zMesh, 3D-upsampling                           [§IV-A]
+  metrics     CR/PSNR/power-spectrum/halo-finder                       [§IV-B]
+  adaptive_eb per-level error bounds                                   [§IV-F]
+"""
+from . import (adaptive_eb, akdtree, amr, baselines, blocks, gsp, huffman,
+               hybrid, metrics, nast, opst, she, sz)  # noqa: F401
+
+from .amr import AMRDataset, AMRLevel, synthetic_amr, load_preset  # noqa: F401
+from .hybrid import compress_amr, compress_level  # noqa: F401
+from .sz import SZResult, compress_interp, compress_lor_reg, compress_lorenzo  # noqa: F401

@@ -1,0 +1,200 @@
+"""Canonical Huffman codec over integer symbol streams.
+
+This is the lossless-encoding stage of SZ (paper §II-A step 3) and the
+substrate for Shared Huffman Encoding (paper §III-D).  Tree construction and
+canonical code assignment run on the host (NumPy/heapq) — entropy coding is
+irreducibly bit-serial, so in a production TPU deployment this stage lives on
+the host while predict/quantize run on-device (see DESIGN.md §3).  Encoding
+is vectorized bit-packing; decoding walks the canonical-code table.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "Codebook",
+    "build_codebook",
+    "encode",
+    "decode",
+    "encoded_size_bits",
+    "codebook_size_bits",
+]
+
+
+@dataclass
+class Codebook:
+    """Canonical Huffman codebook.
+
+    symbols are arbitrary (possibly negative) int64 values; internally we
+    operate on the sorted unique alphabet.
+    """
+
+    symbols: np.ndarray          # unique symbols, sorted by (length, symbol)
+    lengths: np.ndarray          # code length per symbol (same order)
+    codes: np.ndarray            # canonical codeword per symbol (same order)
+    # Decode acceleration tables (canonical decode):
+    first_code: np.ndarray = field(default=None)   # per length L: first codeword
+    first_index: np.ndarray = field(default=None)  # per length L: index of first symbol
+    count: np.ndarray = field(default=None)        # per length L: #codes of that length
+    _enc_map: dict = field(default=None, repr=False)
+
+    @property
+    def max_length(self) -> int:
+        return int(self.lengths.max(initial=0))
+
+    def encoder_map(self) -> dict:
+        if self._enc_map is None:
+            self._enc_map = {
+                int(s): (int(c), int(l))
+                for s, c, l in zip(self.symbols, self.codes, self.lengths)
+            }
+        return self._enc_map
+
+
+def _code_lengths_from_hist(symbols: np.ndarray, freqs: np.ndarray) -> np.ndarray:
+    """Huffman code lengths via the standard two-queue/heap construction."""
+    n = len(symbols)
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    if n == 1:
+        return np.ones(1, dtype=np.int64)
+    # heap items: (freq, tiebreak, node). Leaves are ints, internal = list of leaf ids.
+    heap = [(int(f), i, [i]) for i, f in enumerate(freqs)]
+    heapq.heapify(heap)
+    lengths = np.zeros(n, dtype=np.int64)
+    tiebreak = n
+    while len(heap) > 1:
+        f1, _, l1 = heapq.heappop(heap)
+        f2, _, l2 = heapq.heappop(heap)
+        for leaf in l1:
+            lengths[leaf] += 1
+        for leaf in l2:
+            lengths[leaf] += 1
+        heapq.heappush(heap, (f1 + f2, tiebreak, l1 + l2))
+        tiebreak += 1
+    return lengths
+
+
+def build_codebook(data: np.ndarray | None = None, *,
+                   symbols: np.ndarray | None = None,
+                   freqs: np.ndarray | None = None) -> Codebook:
+    """Build a canonical Huffman codebook from a symbol stream or histogram."""
+    if data is not None:
+        data = np.asarray(data).ravel()
+        symbols, freqs = np.unique(data, return_counts=True)
+    symbols = np.asarray(symbols, dtype=np.int64)
+    freqs = np.asarray(freqs, dtype=np.int64)
+    keep = freqs > 0
+    symbols, freqs = symbols[keep], freqs[keep]
+    lengths = _code_lengths_from_hist(symbols, freqs)
+    # canonical order: sort by (length, symbol)
+    order = np.lexsort((symbols, lengths))
+    symbols, lengths = symbols[order], lengths[order]
+    maxlen = int(lengths.max(initial=0))
+    # canonical codes
+    codes = np.zeros(len(symbols), dtype=np.int64)
+    count = np.zeros(maxlen + 1, dtype=np.int64)
+    for l in lengths:
+        count[l] += 1
+    first_code = np.zeros(maxlen + 2, dtype=np.int64)
+    first_index = np.zeros(maxlen + 2, dtype=np.int64)
+    code = 0
+    idx = 0
+    for l in range(1, maxlen + 1):
+        first_code[l] = code
+        first_index[l] = idx
+        code = (code + count[l]) << 1
+        idx += count[l]
+    next_code = first_code.copy()
+    for i, l in enumerate(lengths):
+        codes[i] = next_code[l]
+        next_code[l] += 1
+    return Codebook(symbols=symbols, lengths=lengths, codes=codes,
+                    first_code=first_code, first_index=first_index,
+                    count=count)
+
+
+def encoded_size_bits(cb: Codebook, data: np.ndarray | None = None, *,
+                      symbols: np.ndarray | None = None,
+                      freqs: np.ndarray | None = None) -> int:
+    """Exact payload size in bits without materializing the bitstream."""
+    if data is not None:
+        data = np.asarray(data).ravel()
+        symbols, freqs = np.unique(data, return_counts=True)
+    lookup = {int(s): int(l) for s, l in zip(cb.symbols, cb.lengths)}
+    total = 0
+    for s, f in zip(np.asarray(symbols), np.asarray(freqs)):
+        total += lookup[int(s)] * int(f)
+    return int(total)
+
+
+def codebook_size_bits(cb: Codebook) -> int:
+    """Serialized codebook cost: (symbol int32 + length uint8) per entry.
+
+    This is the per-tree header cost that makes many small Huffman trees
+    expensive — the overhead SHE removes (paper §III-D).
+    """
+    return len(cb.symbols) * (32 + 8)
+
+
+def encode(cb: Codebook, data: np.ndarray) -> tuple[np.ndarray, int]:
+    """Encode a symbol stream.  Returns (packed uint8 bitstream, nbits)."""
+    data = np.asarray(data, dtype=np.int64).ravel()
+    if data.size == 0:
+        return np.zeros(0, dtype=np.uint8), 0
+    # map symbols -> (code, length) vectorized via searchsorted on a
+    # symbol-sorted view of the codebook
+    sym_order = np.argsort(cb.symbols, kind="stable")
+    sorted_syms = cb.symbols[sym_order]
+    pos = np.searchsorted(sorted_syms, data)
+    if np.any(pos >= len(sorted_syms)) or np.any(sorted_syms[np.minimum(pos, len(sorted_syms) - 1)] != data):
+        raise ValueError("symbol not in codebook")
+    idx = sym_order[pos]
+    codes = cb.codes[idx]
+    lens = cb.lengths[idx]
+    maxlen = int(lens.max())
+    # expand each codeword to a (N, maxlen) bit matrix, MSB first, then
+    # select the valid bits in order
+    shifts = np.arange(maxlen - 1, -1, -1, dtype=np.int64)
+    bits = (codes[:, None] >> np.maximum(shifts[None, :] - (maxlen - lens)[:, None], 0)) & 1
+    valid = shifts[None, :] >= (maxlen - lens)[:, None]
+    bitstream = bits[valid].astype(np.uint8)
+    nbits = int(bitstream.size)
+    packed = np.packbits(bitstream)
+    return packed, nbits
+
+
+def decode(cb: Codebook, packed: np.ndarray, nbits: int, n_symbols: int) -> np.ndarray:
+    """Decode ``n_symbols`` symbols from a packed bitstream (canonical walk)."""
+    if n_symbols == 0:
+        return np.zeros(0, dtype=np.int64)
+    bits = np.unpackbits(np.asarray(packed, dtype=np.uint8))[:nbits]
+    out = np.empty(n_symbols, dtype=np.int64)
+    maxlen = cb.max_length
+    first_code = cb.first_code
+    first_index = cb.first_index
+    count = cb.count
+    symbols = cb.symbols
+    if len(cb.symbols) == 1:
+        # degenerate: single-symbol alphabet, 1 bit per symbol
+        out[:] = symbols[0]
+        return out
+    i = 0
+    bl = bits.tolist()  # python ints — much faster to index than np scalars
+    for k in range(n_symbols):
+        code = 0
+        l = 0
+        while True:
+            code = (code << 1) | bl[i]
+            i += 1
+            l += 1
+            if l > maxlen:
+                raise ValueError("corrupt bitstream")
+            c0 = first_code[l]
+            if count[l] and code - c0 < count[l] and code >= c0:
+                out[k] = symbols[first_index[l] + (code - c0)]
+                break
+    return out

@@ -1,0 +1,229 @@
+"""Hybrid level-wise AMR compression — the TAC / TAC+ drivers (paper §III-E).
+
+Per AMR level, pick the pre-process strategy from the level's unit-block
+density:
+
+  * **Lor/Reg + SHE (= TAC+)**: OpST+ below T0 = 50 %, AKDTree+ above.
+    (GSP is dominated once SHE removes the partitioning penalty, Fig. 12.)
+  * **Interp (= TAC)**:  OpST < T1 = 50 % ≤ AKDTree < T2 = 85 % ≤ GSP.
+  * **Lor/Reg without SHE (= TAC)**: same thresholds as Interp.
+
+The strategy output feeds the matching SZ path:
+
+  * GSP        → padded full grid → one global compression.
+  * OpST/AKD   → sub-blocks; with SHE: per-block Lor/Reg prediction + one
+    shared Huffman tree; without SHE: same-size blocks merged into 4D
+    arrays, each compressed globally (prediction crosses block boundaries —
+    exactly the artifact the paper's Figs. 15/16 show SHE removing).
+
+Level reconstructions are scattered back; empty regions are exact zeros.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .akdtree import akdtree_partition
+from .amr import AMRDataset
+from .blocks import BlockGrid, SubBlock, make_block_grid, extract_subblock
+from .gsp import gsp_meta_bits, gsp_pad, gsp_unpad
+from .opst import opst_partition
+from .she import she_encode
+from .sz import SZResult, compress_interp, compress_lorenzo, compress_lor_reg
+
+__all__ = ["LevelResult", "AMRCompressionResult", "compress_level",
+           "compress_amr", "choose_strategy", "T0", "T1", "T2"]
+
+T0 = 0.50   # Lor/Reg+SHE: OpST+ vs AKDTree+ (Fig. 12 / Fig. 14)
+T1 = 0.50   # Interp: OpST vs AKDTree (Fig. 13)
+T2 = 0.85   # Interp: AKDTree vs GSP (Fig. 13)
+
+
+@dataclass
+class LevelResult:
+    strategy: str
+    algorithm: str
+    she: bool
+    payload_bits: int
+    codebook_bits: int
+    meta_bits: int
+    recon: np.ndarray            # reconstructed level grid (exact zeros outside)
+    n_values: int                # stored values at this level
+    density: float
+    eb: float
+    n_subblocks: int = 0
+
+    @property
+    def total_bits(self) -> int:
+        return int(self.payload_bits + self.codebook_bits + self.meta_bits)
+
+
+@dataclass
+class AMRCompressionResult:
+    levels: list[LevelResult]
+    method: str
+
+    @property
+    def total_bits(self) -> int:
+        return sum(l.total_bits for l in self.levels)
+
+    @property
+    def n_values(self) -> int:
+        return sum(l.n_values for l in self.levels)
+
+    def compression_ratio(self, dtype_bits: int = 32) -> float:
+        return self.n_values * dtype_bits / max(self.total_bits, 1)
+
+    def bit_rate(self, dtype_bits: int = 32) -> float:
+        return self.total_bits / max(self.n_values, 1)
+
+
+def choose_strategy(density: float, *, algorithm: str, she: bool) -> str:
+    """§III-E hybrid policy on unit-block density."""
+    if she and algorithm == "lor_reg":
+        return "opst" if density < T0 else "akdtree"
+    if density < T1:
+        return "opst"
+    if density < T2:
+        return "akdtree"
+    return "gsp"
+
+
+def _global_compress(x: np.ndarray, eb: float, algorithm: str) -> SZResult:
+    if algorithm == "interp":
+        return compress_interp(x, eb)
+    if algorithm == "lorenzo":
+        return compress_lorenzo(x, eb)
+    if algorithm == "lor_reg":
+        return compress_lor_reg(x, eb)
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def _merged_compress(groups: dict[tuple[int, ...], np.ndarray], eb: float,
+                     algorithm: str) -> tuple[list[SZResult], dict[tuple[int, ...], np.ndarray]]:
+    """TAC path: one global compression per same-size 4D group.
+
+    For Lor/Reg-without-SHE the merged 4D array is compressed with the
+    global (Lorenzo-branch) predictor — prediction runs across the block-
+    stacking axis, reproducing the paper's boundary artifact.
+    """
+    results, recon = [], {}
+    for shape, arr in groups.items():
+        alg = "lorenzo" if algorithm == "lor_reg" else algorithm
+        r = _global_compress(arr, eb, alg)
+        results.append(r)
+        recon[shape] = r.recon
+    return results, recon
+
+
+def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
+                   unit: int = 8, algorithm: str = "lor_reg",
+                   she: bool = True, strategy: str | None = None,
+                   sz_block: int = 6) -> LevelResult:
+    grid = make_block_grid(data, mask, unit=unit)
+    density = grid.block_density
+    if strategy is None:
+        strategy = choose_strategy(density, algorithm=algorithm, she=she)
+
+    orig_shape = data.shape
+
+    if strategy == "gsp":
+        padded, grid = gsp_pad(data, mask, unit=unit)
+        r = _global_compress(padded, eb, algorithm)
+        recon = gsp_unpad(r.recon, grid)[
+            tuple(slice(0, s) for s in orig_shape)]
+        return LevelResult(strategy="gsp", algorithm=algorithm, she=False,
+                           payload_bits=r.payload_bits,
+                           codebook_bits=r.codebook_bits,
+                           meta_bits=r.meta_bits + gsp_meta_bits(grid),
+                           recon=recon, n_values=int(mask.sum()),
+                           density=density, eb=eb)
+
+    if strategy == "opst":
+        subblocks = opst_partition(grid)
+    elif strategy == "akdtree":
+        subblocks = akdtree_partition(grid)
+    elif strategy == "nast":
+        subblocks = [SubBlock(origin=tuple(c), bsize=(1, 1, 1))
+                     for c in np.argwhere(grid.occ)]
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    sb_meta = sum(sb.meta_bits() for sb in subblocks)
+    u = grid.unit
+
+    if she and algorithm == "lor_reg":
+        bricks = [extract_subblock(grid, sb) for sb in subblocks]
+        enc = she_encode(bricks, eb, block=sz_block, shared=True)
+        recon = np.zeros(grid.data.shape, dtype=np.float32)
+        for sb, r in zip(subblocks, enc.results):
+            ox, oy, oz = sb.cell_origin(u)
+            sx, sy, sz = sb.cell_size(u)
+            recon[ox:ox + sx, oy:oy + sy, oz:oz + sz] = r.recon
+        recon = recon[tuple(slice(0, s) for s in orig_shape)]
+        recon = np.where(mask, recon, 0.0).astype(np.float32)
+        return LevelResult(strategy=strategy, algorithm=algorithm, she=True,
+                           payload_bits=enc.payload_bits,
+                           codebook_bits=enc.codebook_bits,
+                           meta_bits=enc.meta_bits + sb_meta,
+                           recon=recon, n_values=int(mask.sum()),
+                           density=density, eb=eb,
+                           n_subblocks=len(subblocks))
+
+    # TAC path: merge same-size blocks into 4D arrays, compress each group
+    groups: dict[tuple[int, ...], list[tuple[SubBlock, np.ndarray]]] = {}
+    for sb in subblocks:
+        brick = extract_subblock(grid, sb)
+        order = tuple(np.argsort(brick.shape)[::-1])
+        brick_t = np.transpose(brick, order)
+        groups.setdefault(brick_t.shape, []).append((sb, order, brick_t))
+    payload = cb_bits = 0
+    recon = np.zeros(grid.data.shape, dtype=np.float32)
+    n_groups = 0
+    for shape, items in groups.items():
+        arr = np.stack([b for _, _, b in items])
+        alg = "lorenzo" if algorithm == "lor_reg" else algorithm
+        r = _global_compress(arr, eb, alg)
+        payload += r.payload_bits
+        cb_bits += r.codebook_bits
+        n_groups += 1
+        for i, (sb, order, _) in enumerate(items):
+            inv_order = tuple(np.argsort(order))
+            back = np.transpose(r.recon[i], inv_order)
+            ox, oy, oz = sb.cell_origin(u)
+            sx, sy, sz = sb.cell_size(u)
+            recon[ox:ox + sx, oy:oy + sy, oz:oz + sz] = back
+    recon = recon[tuple(slice(0, s) for s in orig_shape)]
+    recon = np.where(mask, recon, 0.0).astype(np.float32)
+    return LevelResult(strategy=strategy, algorithm=algorithm, she=False,
+                       payload_bits=payload, codebook_bits=cb_bits,
+                       meta_bits=sb_meta + n_groups * 64,
+                       recon=recon, n_values=int(mask.sum()),
+                       density=density, eb=eb, n_subblocks=len(subblocks))
+
+
+def compress_amr(ds: AMRDataset, *, eb: float | list[float],
+                 unit: int = 8, algorithm: str = "lor_reg",
+                 she: bool = True, strategy: str | None = None,
+                 sz_block: int = 6) -> AMRCompressionResult:
+    """Level-wise TAC/TAC+ over a whole AMR dataset.
+
+    ``eb`` may be a scalar (uniform bound) or per-level list — the paper's
+    adaptive-error-bound mode (§IV-F).  ``unit`` is the finest level's unit
+    block edge; coarser levels use ``max(2, unit / ratio)`` so the unit
+    block tracks the refinement granularity (the paper's 16³ unit blocks
+    are likewise fixed in *domain* units, not in per-level cells).
+    """
+    ebs = eb if isinstance(eb, (list, tuple)) else [eb] * ds.n_levels
+    if len(ebs) != ds.n_levels:
+        raise ValueError("need one error bound per level")
+    levels = []
+    for lvl, e in zip(ds.levels, ebs):
+        lvl_unit = max(2, unit // lvl.ratio)
+        levels.append(compress_level(lvl.data, lvl.mask, eb=float(e),
+                                     unit=lvl_unit, algorithm=algorithm,
+                                     she=she, strategy=strategy,
+                                     sz_block=sz_block))
+    name = "tac+" if (she and algorithm == "lor_reg") else "tac"
+    return AMRCompressionResult(levels=levels, method=f"{name}/{algorithm}")

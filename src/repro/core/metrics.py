@@ -1,0 +1,147 @@
+"""Evaluation metrics (paper §IV-B).
+
+Metric 1  compression ratio / bit-rate   — from exact bit accounting.
+Metric 2  PSNR                           — over the stored AMR values.
+Metric 4  rate-distortion                — eb sweep → (bit-rate, PSNR).
+Metric 5  matter power spectrum P(k)     — radially-binned |FFT|² of the
+          uniform-resolution field; pass criterion: max relative error
+          below a tolerance for k < k_max (paper: 1 %, near-lossless 0.01 %).
+Metric 6  halo finder                    — threshold (81.66 × mean mass by
+          default, [48]) + 6-connected components + minimum cell count;
+          compares mass / cell counts of the largest halos.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+from scipy import ndimage
+
+from .amr import AMRDataset, uniform_resolution
+from .hybrid import AMRCompressionResult
+
+__all__ = ["psnr", "amr_psnr", "power_spectrum", "power_spectrum_error",
+           "Halo", "halo_finder", "halo_diff", "reconstruct_uniform"]
+
+
+def psnr(orig: np.ndarray, recon: np.ndarray) -> float:
+    orig = np.asarray(orig, dtype=np.float64).ravel()
+    recon = np.asarray(recon, dtype=np.float64).ravel()
+    rng = float(orig.max() - orig.min())
+    mse = float(np.mean((orig - recon) ** 2))
+    if mse == 0:
+        return float("inf")
+    return 20.0 * np.log10(rng) - 10.0 * np.log10(mse)
+
+
+def amr_psnr(ds: AMRDataset, result: AMRCompressionResult) -> float:
+    """PSNR over every *stored* value of the dataset (all levels)."""
+    orig = np.concatenate([l.data[l.mask] for l in ds.levels])
+    rec = np.concatenate([r.recon[l.mask]
+                          for l, r in zip(ds.levels, result.levels)])
+    return psnr(orig, rec)
+
+
+def reconstruct_uniform(ds: AMRDataset, result: AMRCompressionResult) -> np.ndarray:
+    """Uniform-resolution reconstruction for post-analysis (Fig. 2 right)."""
+    out = np.zeros(ds.finest_shape, dtype=np.float32)
+    for lvl, lres in zip(ds.levels, result.levels):
+        r = lvl.ratio
+        up = np.repeat(np.repeat(np.repeat(lres.recon, r, 0), r, 1), r, 2)
+        um = np.repeat(np.repeat(np.repeat(lvl.mask, r, 0), r, 1), r, 2)
+        out = np.where(um, up, out)
+    return out
+
+
+# ----------------------------- power spectrum ------------------------------
+
+
+def power_spectrum(field: np.ndarray, n_bins: int | None = None
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Isotropic P(k): radial average of |FFT|² (Metric 5)."""
+    field = np.asarray(field, dtype=np.float64)
+    n = field.shape[0]
+    fk = np.fft.rfftn(field) / field.size
+    p3 = np.abs(fk) ** 2
+    kx = np.fft.fftfreq(field.shape[0]) * field.shape[0]
+    ky = np.fft.fftfreq(field.shape[1]) * field.shape[1]
+    kz = np.fft.rfftfreq(field.shape[2]) * field.shape[2]
+    kmag = np.sqrt(kx[:, None, None] ** 2 + ky[None, :, None] ** 2
+                   + kz[None, None, :] ** 2)
+    n_bins = n_bins or n // 2
+    bins = np.arange(0.5, n_bins + 0.5)
+    which = np.digitize(kmag.ravel(), bins)
+    sums = np.bincount(which, weights=p3.ravel(), minlength=n_bins + 1)
+    cnts = np.bincount(which, minlength=n_bins + 1)
+    k = np.arange(1, n_bins + 1, dtype=np.float64)
+    pk = sums[1:n_bins + 1] / np.maximum(cnts[1:n_bins + 1], 1)
+    return k, pk
+
+
+def power_spectrum_error(orig_field: np.ndarray, recon_field: np.ndarray,
+                         k_max: float | None = None) -> np.ndarray:
+    """Per-bin relative P(k) error |p'/p − 1| for k < k_max (paper: k<10)."""
+    k, p = power_spectrum(orig_field)
+    _, pr = power_spectrum(recon_field)
+    sel = slice(None) if k_max is None else k < k_max
+    return np.abs(pr[sel] / np.maximum(p[sel], 1e-300) - 1.0)
+
+
+# ------------------------------- halo finder --------------------------------
+
+
+@dataclass
+class Halo:
+    mass: float
+    n_cells: int
+    position: tuple[float, float, float]
+
+
+def halo_finder(field: np.ndarray, *, threshold_factor: float = 81.66,
+                min_cells: int = 8) -> list[Halo]:
+    """FoF-like over-density finder (Metric 6, [48]).
+
+    Candidate cells have value > threshold_factor × mean; candidates are
+    grouped by 6-connectivity; groups below ``min_cells`` are dropped.
+    Returns halos sorted by decreasing mass.
+    """
+    field = np.asarray(field, dtype=np.float64)
+    thr = threshold_factor * field.mean()
+    cand = field > thr
+    structure = ndimage.generate_binary_structure(3, 1)  # 6-connectivity
+    labels, n = ndimage.label(cand, structure=structure)
+    halos: list[Halo] = []
+    if n == 0:
+        return halos
+    counts = np.bincount(labels.ravel())
+    masses = np.bincount(labels.ravel(), weights=field.ravel())
+    coms = ndimage.center_of_mass(field, labels, index=range(1, n + 1))
+    for i in range(1, n + 1):
+        if counts[i] >= min_cells:
+            halos.append(Halo(mass=float(masses[i]), n_cells=int(counts[i]),
+                              position=tuple(float(c) for c in coms[i - 1])))
+    halos.sort(key=lambda h: -h.mass)
+    return halos
+
+
+def halo_diff(orig: list[Halo], recon: list[Halo], top: int = 3
+              ) -> tuple[float, float]:
+    """(avg relative mass diff, avg relative cell-count diff) over the
+    ``top`` largest original halos matched by position (Table II)."""
+    if not orig:
+        return 0.0, 0.0
+    mass_d, cell_d, n = 0.0, 0.0, 0
+    for h in orig[:top]:
+        if not recon:
+            mass_d += 1.0
+            cell_d += 1.0
+            n += 1
+            continue
+        # match to the nearest reconstructed halo
+        d = [sum((a - b) ** 2 for a, b in zip(h.position, r.position))
+             for r in recon]
+        m = recon[int(np.argmin(d))]
+        mass_d += abs(m.mass - h.mass) / abs(h.mass)
+        cell_d += abs(m.n_cells - h.n_cells) / max(h.n_cells, 1)
+        n += 1
+    return mass_d / n, cell_d / n

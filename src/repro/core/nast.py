@@ -1,0 +1,44 @@
+"""Naive Sparse Tensor (NaST) — paper §III-B, Fig. 7.
+
+The baseline partition strategy: (1) split into unit blocks, (2) drop the
+empty ones, (3) linearize the survivors into a 4D array
+``(n_blocks, u, u, u)``, (4) compress the 4D array.  Decompression scatters
+the blocks back by their saved indices.
+
+NaST completely removes empty space but sacrifices spatial locality — the
+motivation for OpST (§III-B) and AKDTree (§III-C).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .blocks import BlockGrid, make_block_grid
+
+__all__ = ["nast_pack", "nast_unpack", "nast_meta_bits"]
+
+
+def nast_pack(data: np.ndarray, mask: np.ndarray | None = None, *,
+              unit: int = 8) -> tuple[np.ndarray, np.ndarray, BlockGrid]:
+    """Returns (packed (n,u,u,u) array, block indices (n,3), grid)."""
+    grid = make_block_grid(data, mask, unit=unit)
+    u = grid.unit
+    bx, by, bz = grid.bshape
+    blocks = (grid.data.reshape(bx, u, by, u, bz, u)
+                       .transpose(0, 2, 4, 1, 3, 5)
+                       .reshape(bx * by * bz, u, u, u))
+    idx = np.argwhere(grid.occ.reshape(-1)).ravel()
+    coords = np.stack(np.unravel_index(idx, grid.bshape), axis=1)
+    return blocks[idx], coords.astype(np.int32), grid
+
+
+def nast_unpack(packed: np.ndarray, coords: np.ndarray, grid: BlockGrid) -> np.ndarray:
+    u = grid.unit
+    out = np.zeros(grid.data.shape, dtype=np.float32)
+    for blk, (x, y, z) in zip(packed, coords):
+        out[x * u:(x + 1) * u, y * u:(y + 1) * u, z * u:(z + 1) * u] = blk
+    return out
+
+
+def nast_meta_bits(coords: np.ndarray) -> int:
+    """3×16-bit block coordinates per non-empty block + header."""
+    return coords.shape[0] * 3 * 16 + 3 * 32

@@ -1,0 +1,1 @@
+"""Deterministic host-sharded synthetic data pipelines."""

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compression hot spots (validated via
+interpret=True on CPU; TPU v5e is the target).
+
+  lorenzo3d  fused prequant + 3D Lorenzo delta and its inverse (VPU)
+  hist       quant-code histogram as one-hot MXU matmul
+  qdq        per-group int8 quant/dequant (grad compression, KV cache)
+
+ops.py — jit'd public wrappers;  ref.py — pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

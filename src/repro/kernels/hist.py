@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: quant-code histogram as a one-hot MXU matmul.
+
+The Huffman stage (paper §II-A step 3) needs the symbol frequency table.
+TPUs have no fast scatter-add; for the small quantization-code alphabets SZ
+produces (codes cluster tightly around 0), the fastest TPU formulation is
+
+    counts = ones(1, chunk) @ one_hot(codes, n_bins)
+
+— an MXU matmul per VMEM chunk, accumulated across sequential grid steps
+into one output block (DESIGN.md §3).  Codes outside [0, n_bins) fall into
+the escape bin ``n_bins − 1`` (SZ's outlier path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hist_kernel", "hist"]
+
+
+def hist_kernel(codes_ref, out_ref, *, n_bins: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    c = codes_ref[...].reshape(-1)
+    c = jnp.clip(c, 0, n_bins - 1)
+    # one_hot (chunk, n_bins) in f32; contraction over chunk on the MXU
+    oh = (c[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, n_bins), 1)
+          ).astype(jnp.float32)
+    counts = jnp.sum(oh, axis=0)  # lowered to a (1,chunk)x(chunk,bins) matmul
+    out_ref[...] += counts.astype(jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "chunk", "interpret"))
+def hist(codes: jnp.ndarray, *, n_bins: int = 1024, chunk: int = 8192,
+         interpret: bool = True) -> jnp.ndarray:
+    """Histogram of int codes clipped to [0, n_bins)."""
+    flat = codes.reshape(-1)
+    pad = (-flat.shape[0]) % chunk
+    if pad:
+        # pad with the escape bin, then subtract the padding count
+        flat = jnp.concatenate([flat, jnp.full((pad,), n_bins - 1, flat.dtype)])
+    n_chunks = flat.shape[0] // chunk
+    out = pl.pallas_call(
+        functools.partial(hist_kernel, n_bins=n_bins),
+        grid=(n_chunks,),
+        in_specs=[pl.BlockSpec((chunk,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, n_bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_bins), jnp.int32),
+        interpret=interpret,
+    )(flat)[0]
+    if pad:
+        out = out.at[n_bins - 1].add(-pad)
+    return out

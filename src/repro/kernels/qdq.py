@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: per-group symmetric int8 quantize / dequantize.
+
+This is the framework-plane reuse of the paper's quantization stage
+(DESIGN.md §2 Plane B): error-bounded gradient compression on the slow
+inter-pod links and the compressed-KV-cache option both transport int8
+codes + per-group scales.  The group structure mirrors TAC's unit blocks —
+scales are the per-block "error bound", adapted to the local value range.
+
+Layout: (rows, d) arrays, groups along the trailing dim (d % group == 0),
+group default 128 = one VPU lane row.  The quant kernel emits codes and
+scales in one pass; dequant is a fused multiply.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["group_quant", "group_dequant"]
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, group: int):
+    x = x_ref[...]
+    rows, d = x.shape
+    g = x.reshape(rows, d // group, group)
+    amax = jnp.max(jnp.abs(g), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.rint(g / scale[..., None]), -127, 127)
+    q_ref[...] = q.reshape(rows, d).astype(jnp.int8)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, group: int):
+    q = q_ref[...]
+    rows, d = q.shape
+    g = q.reshape(rows, d // group, group).astype(jnp.float32)
+    x_ref[...] = (g * s_ref[...][..., None]).reshape(rows, d)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "row_tile", "interpret"))
+def group_quant(x: jnp.ndarray, *, group: int = 128, row_tile: int = 256,
+                interpret: bool = True) -> tuple[jnp.ndarray, jnp.ndarray]:
+    n, d = x.shape
+    row_tile = min(row_tile, n)
+    if n % row_tile or d % group:
+        raise ValueError(f"shape {x.shape} needs n%{row_tile}==0, d%{group}==0")
+    grid = (n // row_tile,)
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, group=group),
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+                   pl.BlockSpec((row_tile, d // group), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.int8),
+                   jax.ShapeDtypeStruct((n, d // group), jnp.float32)],
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("group", "row_tile", "interpret"))
+def group_dequant(q: jnp.ndarray, scale: jnp.ndarray, *, group: int = 128,
+                  row_tile: int = 256, interpret: bool = True) -> jnp.ndarray:
+    n, d = q.shape
+    row_tile = min(row_tile, n)
+    if n % row_tile or d % group:
+        raise ValueError(f"shape {q.shape} needs n%{row_tile}==0, d%{group}==0")
+    grid = (n // row_tile,)
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group),
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+                  pl.BlockSpec((row_tile, d // group), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, scale.astype(jnp.float32))

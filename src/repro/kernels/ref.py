@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic definition* the kernel must match bit-for-bit
+(integer codes) or to float tolerance (dequantized values).  Tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle with the kernels in
+``interpret=True`` mode (this container is CPU-only; TPU is the target).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["lorenzo3d_codes_ref", "lorenzo3d_recon_ref", "hist_ref",
+           "group_quant_ref", "group_dequant_ref"]
+
+
+def _tile_view(a: jnp.ndarray, tile: tuple[int, int, int]):
+    gx, gy, gz = (s // t for s, t in zip(a.shape, tile))
+    tx, ty, tz = tile
+    return a.reshape(gx, tx, gy, ty, gz, tz), (gx, gy, gz)
+
+
+def lorenzo3d_codes_ref(x: jnp.ndarray, eb: float,
+                        tile: tuple[int, int, int] | None = None) -> jnp.ndarray:
+    """Fused prequant + *tile-local* 3D Lorenzo delta (zero halo per tile).
+
+    ``q = round(x · (1/2eb))`` (int32) — the same multiply-by-reciprocal
+    form the kernel uses (an f32 divide would round differently at ties) —
+    then the 3D Lorenzo delta: the alternating first difference along each
+    axis with a zero halo at every tile's low faces, exactly the per-brick
+    independence of ``repro.core.sz.compress_lor_reg``'s Lorenzo branch
+    (DESIGN.md §3).  ``tile=None`` means one tile = the whole array.
+    """
+    q = jnp.rint(x * jnp.float32(1.0 / (2.0 * eb))).astype(jnp.int32)
+    tile = tuple(min(t, s) for t, s in zip(tile or x.shape, x.shape))
+    v, _ = _tile_view(q, tile)
+    c = v
+    for ax in (1, 3, 5):
+        c = jnp.diff(c, axis=ax, prepend=jnp.zeros_like(
+            jnp.take(c, jnp.array([0]), axis=ax)))
+    return c.reshape(x.shape)
+
+
+def lorenzo3d_recon_ref(codes: jnp.ndarray, eb: float,
+                        tile: tuple[int, int, int] | None = None) -> jnp.ndarray:
+    """Inverse: per-tile 3D inclusive prefix-sum, then dequantize."""
+    tile = tuple(min(t, s) for t, s in zip(tile or codes.shape, codes.shape))
+    v, _ = _tile_view(codes.astype(jnp.int32), tile)
+    q = v
+    for ax in (1, 3, 5):
+        q = jnp.cumsum(q, axis=ax)
+    return (q.astype(jnp.float32) * (2.0 * eb)).reshape(codes.shape)
+
+
+def hist_ref(codes: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Histogram of codes clipped to [0, n_bins): the Huffman frequency
+    table the host tree-builder consumes (codes are offset to be ≥ 0 by the
+    caller; out-of-range codes count into the escape bin n_bins−1)."""
+    c = jnp.clip(codes.reshape(-1), 0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.int32).at[c].add(1)
+
+
+def group_quant_ref(x: jnp.ndarray, group: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-group symmetric int8 quantization.
+
+    ``x``: (n, d) with d % group == 0.  Returns (int8 codes (n, d),
+    float32 scales (n, d//group)).  scale = max|x| / 127 per group (zero
+    groups get scale 1 to stay exact).
+    """
+    n, d = x.shape
+    g = x.reshape(n, d // group, group)
+    amax = jnp.max(jnp.abs(g), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.rint(g / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n, d), scale.astype(jnp.float32)
+
+
+def group_dequant_ref(q: jnp.ndarray, scale: jnp.ndarray, group: int) -> jnp.ndarray:
+    n, d = q.shape
+    g = q.reshape(n, d // group, group).astype(jnp.float32)
+    return (g * scale[..., None]).reshape(n, d)

@@ -1,0 +1,1 @@
+"""Launch layer: mesh, sharding rules, train/serve steps, dry-run, roofline."""

@@ -1,0 +1,192 @@
+"""Cell builder: (arch × shape × mesh × RunConfig) → (step fn, abstract args).
+
+Shared by the dry-run (deploy variants: chunked/scanned, memory-true) and
+the roofline (flops variants: unrolled scans, reduced depth/seq — see
+``roofline.py`` for why ``cost_analysis`` needs them).
+
+Everything here is ShapeDtypeStruct-based — nothing allocates.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig, ShapeConfig
+from ..models import model as M
+from ..optim.adamw import AdamWConfig, adamw_init
+from ..serving.engine import make_prefill_step, make_serve_step
+from .sharding import abstract_params, param_shardings, rules_for
+from .train import batch_spec, make_train_step
+
+__all__ = ["build_cell", "reduced_cfg", "layer_unit"]
+
+
+def layer_unit(cfg: ModelConfig) -> int:
+    """The repeating depth unit for layer-count extrapolation."""
+    return cfg.shared_attn_every if cfg.family == "hybrid" else 1
+
+
+def reduced_cfg(cfg: ModelConfig, n_units: int) -> ModelConfig:
+    return replace(cfg, n_layers=n_units * layer_unit(cfg))
+
+
+def _with_sharding(tree_sds, tree_shard):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_sds, tree_shard)
+
+
+def _opt_shardings(run, specs, psh, mesh, rules):
+    """Optimizer-state shardings, built from the ParamSpec tree.
+
+    AdamW moments follow their parameter exactly; Adafactor's factored
+    second-moment vectors keep the parameter's surviving logical axes."""
+    from ..models.layers import ParamSpec
+    from ..optim.adafactor import _factored
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    scalar = NamedSharding(mesh, P())
+    if run.optimizer == "adafactor":
+        def v_shard(s: ParamSpec):
+            if _factored(s.shape):
+                return {"vr": NamedSharding(mesh, rules.partition_spec(
+                            s.axes[:-1], shape=s.shape[:-1], mesh=mesh)),
+                        "vc": NamedSharding(mesh, rules.partition_spec(
+                            s.axes[:-2] + s.axes[-1:],
+                            shape=s.shape[:-2] + s.shape[-1:], mesh=mesh))}
+            return {"v": NamedSharding(mesh, rules.partition_spec(
+                s.axes, shape=s.shape, mesh=mesh))}
+
+        out = {"v": jax.tree.map(v_shard, specs, is_leaf=is_spec),
+               "step": scalar}
+        # (beta1 = 0 by default → no first moment)
+        return out
+    return {"mu": psh, "nu": psh, "step": scalar}
+
+
+def _state_shardings(cfg, state_sds, mesh, rules):
+    """Shardings for a serve-time state tree, resolved per leaf shape."""
+    def leaf_axes(path, a):
+        nd = a.ndim
+        if cfg.family == "ssm":
+            # wkv (L,B,nh,hd,hd) | shift (L,B,d)
+            return {5: ("layers", "batch", "heads", None, None),
+                    3: ("layers", "batch", None)}[nd]
+        if cfg.family == "hybrid":
+            if path and path[0] == "kv":
+                return {5: ("layers", "batch", "seq", "kv_heads", None),
+                        4: ("layers", "batch", "seq", "kv_heads")}[nd]
+            # mamba ssm (G,k,B,nh,hd,ns) | conv (G,k,B,K-1,C)
+            return {6: ("layers", None, "batch", "heads", None, None),
+                    5: ("layers", None, "batch", None, "heads")}[nd]
+        # dense kv: k/v (L,B,S,Hkv,hd); scales (L,B,S,Hkv)
+        return {5: ("layers", "batch", "seq", "kv_heads", None),
+                4: ("layers", "batch", "seq", "kv_heads")}[nd]
+
+    def resolve(path, a):
+        return NamedSharding(mesh, rules.partition_spec(
+            leaf_axes(path, a), shape=a.shape, mesh=mesh))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_sds)
+    out = []
+    for kp, a in flat:
+        path = tuple(getattr(k, "key", getattr(k, "idx", None)) for k in kp)
+        out.append(resolve(path, a))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, run: RunConfig, *,
+               q_chunk=512, kv_chunk=1024, unroll_scans=False):
+    """Returns (step_fn, abstract_args: tuple, meta: dict)."""
+    rules = rules_for(mesh, run)
+    specs = M.model_specs(cfg)
+    aparams = abstract_params(specs, mesh, rules)
+    psh = param_shardings(specs, mesh, rules)
+    meta = {"rules": rules, "specs": specs}
+
+    if shape.kind == "train":
+        from .train import make_optimizer, make_train_step_compressed
+        if run.grad_compress:
+            # per-pod-replica layout: leading (n_pods,) dim sharded on pod
+            step, rules, opt_cfg = make_train_step_compressed(
+                cfg, run, mesh, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                unroll_scans=unroll_scans)
+            _, opt_init, _ = make_optimizer(run, opt_cfg)
+            n_pods = mesh.shape.get("pod", 1)
+
+            def _replicate(sds_tree, sh_tree):
+                def one(s, sh):
+                    spec = P(*(("pod",) + tuple(sh.spec)))
+                    return jax.ShapeDtypeStruct(
+                        (n_pods,) + s.shape, s.dtype,
+                        sharding=NamedSharding(mesh, spec))
+                return jax.tree.map(one, sds_tree, sh_tree)
+
+            aparams_r = _replicate(
+                jax.tree.map(lambda s: s.sds(), specs,
+                             is_leaf=lambda x: hasattr(x, "sds")), psh)
+            opt_sds = jax.eval_shape(
+                functools.partial(opt_init, cfg=opt_cfg),
+                jax.tree.map(lambda s: s.sds(), specs,
+                             is_leaf=lambda x: hasattr(x, "sds")))
+            opt_sh = _opt_shardings(run, specs, psh, mesh, rules)
+            aopt_r = _replicate(opt_sds, opt_sh)
+            ef_sds = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                jax.tree.map(lambda s: s.sds(), specs,
+                             is_leaf=lambda x: hasattr(x, "sds")))
+            aef_r = _replicate(ef_sds, psh)
+            abatch = batch_spec(cfg, shape, mesh, rules)
+            return step, (aparams_r, aopt_r, aef_r, abatch), meta
+
+        step, rules, opt_cfg = make_train_step(
+            cfg, run, mesh,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, unroll_scans=unroll_scans)
+        _, opt_init, _ = make_optimizer(run, opt_cfg)
+        opt_sds = jax.eval_shape(
+            functools.partial(opt_init, cfg=opt_cfg), aparams)
+        aopt = _with_sharding(opt_sds,
+                              _opt_shardings(run, specs, psh, mesh, rules))
+        abatch = batch_spec(cfg, shape, mesh, rules)
+        return step, (aparams, aopt, abatch), meta
+
+    B = shape.global_batch
+    bspec = NamedSharding(mesh, rules.partition_spec(
+        ("batch", None), shape=(B, 1), mesh=mesh))
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, run, mesh, rules, q_chunk=q_chunk,
+                                 kv_chunk=kv_chunk,
+                                 unroll_scans=unroll_scans)
+        if cfg.input_mode == "tokens":
+            abatch = {"tokens": jax.ShapeDtypeStruct(
+                (B, shape.seq_len), jnp.int32, sharding=bspec)}
+        else:
+            sh3 = NamedSharding(mesh, rules.partition_spec(
+                ("batch", None, None), shape=(B, 1, 1), mesh=mesh))
+            abatch = {"embeds": jax.ShapeDtypeStruct(
+                (B, shape.seq_len, cfg.d_model), jnp.bfloat16, sharding=sh3)}
+        return step, (aparams, abatch), meta
+
+    # decode: one new token against a cache of capacity seq_len
+    step = make_serve_step(cfg, run, mesh, rules, kv_chunk=kv_chunk,
+                           unroll_scans=unroll_scans)
+    state_sds = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, B, shape.seq_len,
+                                    quantized=run.kv_quant))
+    astate = _with_sharding(
+        state_sds, _state_shardings(cfg, state_sds, mesh, rules))
+    if cfg.input_mode == "tokens":
+        abatch = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                                 sharding=bspec)}
+    else:
+        sh3 = NamedSharding(mesh, rules.partition_spec(
+            ("batch", None, None), shape=(B, 1, 1), mesh=mesh))
+        abatch = {"embeds": jax.ShapeDtypeStruct(
+            (B, 1, cfg.d_model), jnp.bfloat16, sharding=sh3)}
+    aclen = jax.ShapeDtypeStruct((), jnp.int32,
+                                 sharding=NamedSharding(mesh, P()))
+    return step, (aparams, astate, abatch, aclen), meta

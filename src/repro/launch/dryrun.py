@@ -1,0 +1,147 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (assignment brief: MULTI-POD DRY-RUN).
+
+For every (architecture × input shape × mesh) cell:
+``jax.jit(step).lower(*abstract).compile()`` must succeed on the 16×16
+single-pod mesh AND the 2×16×16 multi-pod mesh;  ``memory_analysis()``
+proves the per-device footprint fits 16 GB v5e HBM, ``cost_analysis()``
+feeds §Roofline, and the optimized HLO gives the collective inventory.
+
+The two ``os.environ`` lines above MUST run before any other import — jax
+locks the device count at first init (and only this entry point gets the
+512 placeholder devices; tests and benches see 1 CPU device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek_7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun
+Results are cached per cell as JSON; existing files are skipped unless
+``--force``.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, get_config, shapes_for
+from .cells import build_cell
+from .hlo_analysis import collective_bytes
+from .mesh import HARDWARE, make_production_mesh
+from .presets import preset
+
+__all__ = ["run_cell", "main"]
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str | None = None, force: bool = False,
+             run_overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shapes = shapes_for(cfg)
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, cell_id + ".json") if out_dir else None
+    if path and os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    if shape_name not in shapes:
+        rec = {"cell": cell_id, "status": "skipped/full-attention",
+               "arch": arch, "shape": shape_name, "mesh": mesh_name}
+        if path:
+            json.dump(rec, open(path, "w"), indent=1)
+        return rec
+
+    shape = shapes[shape_name]
+    run = preset(cfg, shape)
+    if run_overrides:
+        from dataclasses import replace
+        run = replace(run, **run_overrides)
+    rec = {"cell": cell_id, "arch": arch, "shape": shape_name,
+           "mesh": mesh_name, "run": {k: getattr(run, k) for k in
+                                      ("microbatches", "remat", "fsdp",
+                                       "seq_shard", "kv_quant", "grad_compress",
+                                       "optimizer_dtype")}}
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        step, aargs, meta = build_cell(cfg, shape, mesh, run)
+        # donate the mutable state (params+opt for train, cache for decode)
+        donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+        lowered = jax.jit(step, donate_argnums=donate).lower(*aargs)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        ma = compiled.memory_analysis()
+        n_dev = 512 if multi_pod else 256
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            # arguments/outputs alias for donated state; peak ≈ args + temp
+            "per_device_peak_bytes": int(ma.argument_size_in_bytes
+                                         + ma.temp_size_in_bytes),
+            "hbm_per_chip": HARDWARE["hbm_per_chip"],
+            "fits": bool(ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                         < HARDWARE["hbm_per_chip"]),
+        }
+        ca = compiled.cost_analysis()
+        rec["cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+        pod_size = 256 if multi_pod else None
+        rec["collectives"] = collective_bytes(compiled.as_text(),
+                                              pod_size=pod_size)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    if path:
+        json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        shape_names = ([args.shape] if args.shape
+                       else ["train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"])
+        for shape_name in shape_names:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, multi_pod=mp,
+                               out_dir=args.out, force=args.force)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st.startswith("skipped")
+                n_err += st == "error"
+                mem = rec.get("memory", {})
+                print(f"{rec['cell']:55s} {st:10s} "
+                      f"compile={rec.get('compile_s', '-')}s "
+                      f"peak={mem.get('per_device_peak_bytes', 0)/1e9:.2f}GB "
+                      f"fits={mem.get('fits', '-')}", flush=True)
+                if st == "error":
+                    print("   ", rec["error"][:300], flush=True)
+    print(f"\nsummary: ok={n_ok} skipped={n_skip} errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

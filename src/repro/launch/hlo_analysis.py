@@ -1,0 +1,120 @@
+"""Compiled-HLO analysis: collective-traffic accounting.
+
+``cost_analysis`` has no collective-bytes entry, so we parse the optimized
+HLO text (assignment brief §ROOFLINE): every ``all-gather`` /
+``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` / ``collective-permute``
+op contributes its *operand* bytes.  Post-optimization HLO prints operands
+as bare names, so operand sizes are derived from the op's output shape and
+its replica-group size G:
+
+    all-gather      operand = output / G
+    all-reduce      operand = output
+    reduce-scatter  operand = output × G
+    all-to-all      operand = output
+    collective-permute operand = output
+
+``wire_bytes`` additionally estimates per-device link traffic under a ring
+schedule (all-reduce 2·(G−1)/G·full, all-gather/reduce-scatter
+(G−1)/G·full) — this is what the roofline's collective term uses.
+
+Ops are classified intra-pod (ICI) vs cross-pod (DCN) from replica groups:
+a group whose members span ≥ pod_size device ids crosses pods.
+
+Caveat (EXPERIMENTS.md §Roofline): ops inside ``while`` bodies are counted
+once; roofline totals therefore come from depth-extrapolated *unrolled*
+variants, with this parse as the per-op inventory / cross-check.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+__all__ = ["collective_bytes", "parse_shape_bytes"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|[a-z0-9]+\[[\d,]*\])[^\s]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_OPERAND_FACTOR = {  # operand bytes as a multiple of output bytes
+    "all-gather": lambda g: 1.0 / max(g, 1),
+    "all-reduce": lambda g: 1.0,
+    "reduce-scatter": lambda g: float(g),
+    "all-to-all": lambda g: 1.0,
+    "collective-permute": lambda g: 1.0,
+}
+
+_WIRE_FACTOR = {  # ring-schedule per-device traffic vs FULL tensor bytes
+    "all-gather": lambda g, out: out * (g - 1) / max(g, 1),
+    "all-reduce": lambda g, out: 2.0 * out * (g - 1) / max(g, 1),
+    "reduce-scatter": lambda g, out: out * (g - 1),  # out is the shard
+    "all-to-all": lambda g, out: out * (g - 1) / max(g, 1),
+    "collective-permute": lambda g, out: out,
+}
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_info(line: str):
+    """(group_size, spans_pods(ids, pod_size) callable input ids)."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[...]
+        return int(m.group(2)), None
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x.strip()]
+        return max(len(ids), 1), ids
+    return 1, None
+
+
+def collective_bytes(hlo_text: str, *, pod_size: int | None = None) -> dict:
+    out_b = defaultdict(int)
+    wire_b = defaultdict(float)
+    counts = defaultdict(int)
+    dcn = defaultdict(int)
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        out_shape = m.group(1)
+        nbytes = parse_shape_bytes(out_shape)
+        g, ids = _group_info(line)
+        operand = int(nbytes * _OPERAND_FACTOR[op](g))
+        out_b[op] += operand
+        wire_b[op] += _WIRE_FACTOR[op](g, float(nbytes))
+        counts[op] += 1
+        if pod_size and ids and (max(ids) - min(ids)) >= pod_size:
+            dcn[op] += operand
+        elif pod_size and ids is None and g > 256:
+            dcn[op] += operand
+    return {"bytes": dict(out_b), "counts": dict(counts),
+            "wire_bytes": {k: int(v) for k, v in wire_b.items()},
+            "dcn_bytes": dict(dcn),
+            "total_bytes": int(sum(out_b.values())),
+            "total_wire_bytes": int(sum(wire_b.values())),
+            "total_dcn_bytes": int(sum(dcn.values()))}

@@ -1,0 +1,88 @@
+"""Per-(arch × shape) RunConfig presets — the deployable execution knobs.
+
+These are the *baseline* configurations the dry-run proves out (memory fit
+on 16 GB/chip v5e); the §Perf hillclimb starts from here.  Napkin math for
+the big cells lives in EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from ..configs.base import RunConfig
+
+__all__ = ["preset"]
+
+_DEFAULT = RunConfig(microbatches=1, remat="layer", fsdp=False,
+                     seq_shard=False, kv_quant=False)
+
+# arch → shape-kind → overrides
+_TABLE: dict[str, dict[str, dict]] = {
+    "granite-moe-1b-a400m": {
+        "train": dict(microbatches=8),
+    },
+    "qwen3-moe-30b-a3b": {
+        "train": dict(microbatches=4, fsdp=True),
+        "prefill": dict(fsdp=True, seq_shard=True),
+        "decode": dict(fsdp=True, seq_shard=True),
+    },
+    "deepseek-7b": {
+        "train": dict(microbatches=4, fsdp=True),
+        # kv=32 divides the model axis: cache shards on heads (seq_shard
+        # would fight the head-parallel attention einsum)
+    },
+    "llama3-405b": {
+        # Adam moments don't fit a single pod for 405B even in bf16:
+        # Adafactor (factored 2nd moment) + bf16 grad accumulation
+        "train": dict(microbatches=32, fsdp=True, seq_shard=True,
+                      optimizer="adafactor", optimizer_dtype="bfloat16",
+                      grad_accum_dtype="bfloat16"),
+        "prefill": dict(fsdp=True, seq_shard=True),
+        # kv=8 < 16-wide model axis → cache must shard over seq; int8 halves
+        "decode": dict(fsdp=True, seq_shard=True, kv_quant=True),
+    },
+    "starcoder2-3b": {
+        "train": dict(microbatches=8),
+    },
+    "qwen1.5-32b": {
+        "train": dict(microbatches=8, fsdp=True, seq_shard=True),
+        "prefill": dict(fsdp=True),
+        # MHA kv=40 at 32k × batch 128 is 5.5 TB of cache: int8 + sequence
+        # sharding is the baseline deployment choice for this cell
+        "decode": dict(fsdp=True, seq_shard=True, kv_quant=True),
+    },
+    "rwkv6-7b": {
+        "train": dict(microbatches=4, fsdp=True),
+    },
+    "internvl2-76b": {
+        # mb4 = smallest accumulation count that fits (14.7 GB): FSDP
+        # re-gather traffic scales with mb (EXPERIMENTS §Perf Cell B)
+        "train": dict(microbatches=4, fsdp=True, seq_shard=True,
+                      optimizer_dtype="bfloat16"),
+        "prefill": dict(fsdp=True, seq_shard=True),
+        "decode": dict(fsdp=True, seq_shard=True, kv_quant=True),
+    },
+    "musicgen-medium": {
+        "train": dict(microbatches=4),
+        # kv=24 indivisible by 16 → cache seq-sharded; int8 on top
+        "decode": dict(seq_shard=True, kv_quant=True),
+    },
+    "zamba2-2.7b": {
+        "train": dict(microbatches=4),
+        "decode": dict(seq_shard=True),
+        "long": dict(seq_shard=True),
+    },
+}
+
+
+def preset(cfg, shape) -> RunConfig:
+    over = {}
+    table = _TABLE.get(cfg.name, {})
+    kind = shape.kind
+    if shape.name.startswith("long_"):
+        over = table.get("long", table.get(kind, {}))
+    else:
+        over = table.get(kind, {})
+    run = replace(_DEFAULT, **over)
+    if kind != "train":
+        run = replace(run, microbatches=1, remat="none")
+    return run

@@ -1,0 +1,250 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Roofline analysis (assignment brief §ROOFLINE ANALYSIS).
+
+Terms per (arch × shape) cell on the single-pod mesh:
+
+    compute term    = HLO_FLOPs  / (chips × 197 TF/s)
+    memory term     = HLO_bytes  / (chips × 819 GB/s)
+    collective term = coll_bytes / (chips × 50 GB/s)
+
+**Methodology note (scan trip-count correction).**  ``cost_analysis()``
+counts a ``lax.scan`` body ONCE regardless of trip count (verified in
+EXPERIMENTS.md §Roofline), and this framework scans over layers,
+microbatches, attention chunks and SSM chunks.  We therefore lower each
+cell six times at reduced size — layer-units L ∈ {1, 2} × sequence
+S ∈ {512, 1024, 2048} — with **every scan fully unrolled**
+(``unroll_scans=True``) and ``microbatches=1``, so each variant's costs
+are exact.  Costs decompose as
+
+    F(L, S) = α(S) + L·β(S),      α, β quadratic in S
+
+(α: embedding/head/optimizer-fixed, β: per-layer; S² captures attention),
+which six points determine exactly.  The cell's roofline evaluates the fit
+at the full depth & sequence.  Chunk sizes (flash q/kv, SSM, MoE groups)
+are kept at deployed values so the recompute/remat structure — and hence
+the MODEL_FLOPS/HLO_FLOPs waste ratio — is the deployed one.  The deploy
+variant's compile (dryrun.py) provides memory analysis and the collective
+*inventory*; collective totals come from the same 6-point fit.
+
+``cost_analysis`` reports the per-device partitioned program, so the terms
+divide by per-chip peaks directly; MODEL_FLOPS comparisons use
+global = per-device × chips (calibrated at import by a sharded-matmul
+probe the first time ``run_roofline`` executes).
+"""
+import argparse
+import json
+import time
+import traceback
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, shapes_for
+from ..models.model import param_counts
+from .cells import build_cell, layer_unit, reduced_cfg
+from .hlo_analysis import collective_bytes
+from .mesh import HARDWARE, make_production_mesh
+from .presets import preset
+
+__all__ = ["run_roofline", "roofline_table", "main"]
+
+_S_POINTS = (512, 1024, 2048)
+_CHIPS = 256
+
+
+def _variant_costs(cfg, shape, mesh, run, n_units, s):
+    """Lower+compile one reduced variant; exact per-device costs."""
+    vcfg = reduced_cfg(cfg, n_units)
+    vshape = replace(shape, seq_len=s)
+    vrun = replace(run, microbatches=1)
+    step, aargs, _ = build_cell(vcfg, vshape, mesh, vrun,
+                                unroll_scans=True)
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[shape.kind]
+    compiled = jax.jit(step, donate_argnums=donate).lower(*aargs).compile()
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            # ring-schedule per-device link traffic (hlo_analysis)
+            "coll": float(coll["total_wire_bytes"])}
+
+
+def _fit_quadratic(ss, ys):
+    """Exact quadratic through 3 points."""
+    A = np.stack([np.ones(3), np.asarray(ss, float),
+                  np.asarray(ss, float) ** 2], axis=1)
+    return np.linalg.solve(A, np.asarray(ys, float))
+
+
+def _extrapolate(points, L_full, S_full):
+    """points[(L, S)] = {flops, bytes, coll} → full-size estimates."""
+    out = {}
+    for key in ("flops", "bytes", "coll"):
+        betas, alphas = [], []
+        for s in _S_POINTS:
+            f1, f2 = points[(1, s)][key], points[(2, s)][key]
+            betas.append(f2 - f1)          # per-layer-unit cost at S=s
+            alphas.append(2 * f1 - f2)     # L-independent cost at S=s
+        ca = _fit_quadratic(_S_POINTS, alphas)
+        cb = _fit_quadratic(_S_POINTS, betas)
+        alpha = ca[0] + ca[1] * S_full + ca[2] * S_full ** 2
+        beta = cb[0] + cb[1] * S_full + cb[2] * S_full ** 2
+        out[key] = max(alpha + L_full * beta, 0.0)
+    return out
+
+
+def run_roofline(arch: str, shape_name: str, *, out_dir=None, force=False,
+                 run_overrides=None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shapes = shapes_for(cfg)
+    cell_id = f"{arch}__{shape_name}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, cell_id + ".json") if out_dir else None
+    if path and os.path.exists(path) and not force:
+        return json.load(open(path))
+    if shape_name not in shapes:
+        rec = {"cell": cell_id, "status": "skipped/full-attention"}
+        if path:
+            json.dump(rec, open(path, "w"), indent=1)
+        return rec
+    shape = shapes[shape_name]
+    run = preset(cfg, shape)
+    if run_overrides:
+        run = replace(run, **run_overrides)
+    rec = {"cell": cell_id, "arch": arch, "shape": shape_name}
+    try:
+        mesh = make_production_mesh(multi_pod=False)
+        t0 = time.time()
+        points = {}
+        for n_units in (1, 2):
+            for s in _S_POINTS:
+                points[(n_units, s)] = _variant_costs(
+                    cfg, shape, mesh, run, n_units, s)
+        rec["fit_points"] = {f"{l}x{s}": v for (l, s), v in points.items()}
+        L_full = cfg.n_layers // layer_unit(cfg)
+        full = _extrapolate(points, L_full, shape.seq_len)
+        rec["variant_s"] = round(time.time() - t0, 1)
+
+        hw = HARDWARE
+        terms = {
+            "compute_s": full["flops"] / hw["peak_flops_bf16"],
+            "memory_s": full["bytes"] / hw["hbm_bw"],
+            "collective_s": full["coll"] / hw["ici_bw"],
+        }
+        dominant = max(terms, key=terms.get)
+        total_p, active_p = param_counts(cfg)
+        # embeddings don't matmul in the 6ND sense — exclude the input table
+        emb = cfg.vocab_size * cfg.d_model if cfg.input_mode == "tokens" else 0
+        n_for_flops = active_p - emb
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        mult = {"train": 6, "prefill": 2, "decode": 2}[shape.kind]
+        model_flops = mult * n_for_flops * tokens
+        hlo_flops_global = full["flops"] * _CHIPS
+        rec.update({
+            "per_device": full,
+            "terms_s": terms,
+            "dominant": dominant,
+            "model_flops": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_ratio": (model_flops / hlo_flops_global
+                             if hlo_flops_global else 0.0),
+            "bound_fraction": {k: v / max(sum(terms.values()), 1e-30)
+                               for k, v in terms.items()},
+            "roofline_fraction": (terms["compute_s"]
+                                  / max(max(terms.values()), 1e-30)),
+            "status": "ok",
+        })
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-1500:]
+    if path:
+        json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def analytic_attention_flops(cfg, shape) -> float:
+    """Useful (causal) attention flops per step, global — the term 6ND
+    misses.  Counted for softmax-attention layers only (linear-attention
+    recurrences are folded into the 'other' bucket and noted in the text).
+    """
+    if cfg.family == "ssm" or not cfg.n_heads:
+        return 0.0
+    L_attn = (cfg.n_layers // cfg.shared_attn_every
+              if cfg.family == "hybrid" else cfg.n_layers)
+    B, S = shape.global_batch, shape.seq_len
+    Hhd = cfg.n_heads * cfg.head_dim
+    if shape.kind == "decode":
+        return 4 * B * S * Hhd * L_attn          # scores + pv, one token
+    fwd = 2 * B * (S ** 2) * Hhd                 # 2 matmuls × causal half
+    mult = 3 if shape.kind == "train" else 1     # bwd ≈ 2× fwd
+    return fwd * mult * L_attn
+
+
+def _model_flops_full(cfg, shape, model_flops_6nd) -> float:
+    return model_flops_6nd + analytic_attention_flops(cfg, shape)
+
+
+def roofline_table(out_dir: str) -> str:
+    """Markdown §Roofline table from cached results."""
+    import glob
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            rows.append(f"| {r['cell']} | — | — | — | — | {r['status']} "
+                        f"| — | — |")
+            continue
+        t = r["terms_s"]
+        cfg = get_config(r["arch"])
+        shape = shapes_for(cfg)[r["shape"]]
+        mf_full = _model_flops_full(cfg, shape, r["model_flops"])
+        ur_full = mf_full / max(r["hlo_flops_global"], 1e-30)
+        rows.append(
+            "| {cell} | {c:.2e} | {m:.2e} | {k:.2e} | {dom} | {ur:.2f} | "
+            "{urf:.2f} | {rf:.2f} |".format(
+                cell=r["cell"], c=t["compute_s"], m=t["memory_s"],
+                k=t["collective_s"], dom=r["dominant"].replace("_s", ""),
+                ur=r["useful_ratio"], urf=ur_full,
+                rf=r["roofline_fraction"]))
+    head = ("| cell | compute (s) | memory (s) | collective (s) | dominant "
+            "| 6ND/HLO | (6ND+attn)/HLO | roofline frac |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--table", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if args.table:
+        print(roofline_table(args.out))
+        return
+    archs = [args.arch] if args.arch else ARCH_IDS
+    for arch in archs:
+        shape_names = ([args.shape] if args.shape
+                       else ["train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"])
+        for sn in shape_names:
+            rec = run_roofline(arch, sn, out_dir=args.out)
+            if rec["status"] == "ok":
+                t = rec["terms_s"]
+                print(f"{rec['cell']:45s} comp={t['compute_s']:.2e}s "
+                      f"mem={t['memory_s']:.2e}s coll={t['collective_s']:.2e}s"
+                      f" dom={rec['dominant']:13s} 6ND/HLO="
+                      f"{rec['useful_ratio']:.2f}", flush=True)
+            else:
+                print(f"{rec['cell']:45s} {rec['status']} "
+                      f"{rec.get('error', '')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

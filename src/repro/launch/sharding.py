@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules (MaxText-style), with divisibility fallback.
+
+Params and activations carry *logical* axis names ("embed", "heads",
+"vocab", ...).  A :class:`ShardingRules` maps logical names → mesh axes;
+resolution checks divisibility and falls back to replication per axis, so
+e.g. starcoder2's kv=2 heads simply replicate on a 16-wide model axis
+instead of failing.
+
+Default rules:
+  batch   → (pod, data)     activations
+  embed   → fsdp axes       parameters (ZeRO-3) when RunConfig.fsdp
+  heads/kv_heads/mlp/experts/vocab → model   (tensor/expert parallelism)
+  seq     → model           (sequence parallelism, long-context decode)
+  layers  → replicated      (stacked-scan leading axis)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.layers import ParamSpec
+
+__all__ = ["ShardingRules", "rules_for", "param_shardings",
+           "abstract_params"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    table: dict = field(default_factory=dict)
+
+    def mesh_axes(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def partition_spec(self, axes, shape=None, mesh=None, *,
+                       unconstrained_fallback: bool = False) -> P:
+        """Resolve logical axes → PartitionSpec with divisibility fallback.
+
+        Parameters fall back to *replicated* (None); activations should
+        pass ``unconstrained_fallback=True`` so unresolved dims become
+        ``P.UNCONSTRAINED`` — a None there would force an all-gather to
+        replicated, which is exactly wrong for e.g. 24 heads on a 16-wide
+        model axis (XLA keeps the propagated sharding instead)."""
+        fb = P.UNCONSTRAINED if unconstrained_fallback else None
+        used = set()
+        out = []
+        for i, lg in enumerate(axes):
+            ma = self.mesh_axes(lg)
+            if ma is None:
+                out.append(fb)
+                continue
+            ma_t = (ma,) if isinstance(ma, str) else tuple(ma)
+            ma_t = tuple(a for a in ma_t
+                         if mesh is None or a in mesh.axis_names)
+            ma_t = tuple(a for a in ma_t if a not in used)
+            if not ma_t:
+                out.append(fb)
+                continue
+            if shape is not None and mesh is not None:
+                size = int(np.prod([mesh.shape[a] for a in ma_t]))
+                if shape[i] % size:
+                    out.append(fb)   # fallback for this dim
+                    continue
+            used.update(ma_t)
+            out.append(ma_t[0] if len(ma_t) == 1 else ma_t)
+        if not unconstrained_fallback:
+            while out and out[-1] is None:
+                out.pop()
+        return P(*out)
+
+
+def rules_for(mesh, run) -> ShardingRules:
+    """Build the rule table for a mesh + RunConfig."""
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    fsdp_axes = batch_axes if run.fsdp else None
+    table = {
+        "batch": batch_axes,
+        "embed": fsdp_axes,            # None → params replicated on data
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+        "seq": "model" if run.seq_shard else None,
+        "layers": None,
+    }
+    return ShardingRules(table={k: v for k, v in table.items()
+                                if v is not None})
+
+
+def param_shardings(specs, mesh, rules):
+    """NamedSharding tree matching a ParamSpec tree."""
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, rules.partition_spec(
+            s.axes, shape=s.shape, mesh=mesh))
+    return jax.tree.map(one, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def abstract_params(specs, mesh=None, rules=None):
+    """ShapeDtypeStruct tree, optionally with shardings (dry-run input)."""
+    if mesh is None:
+        return jax.tree.map(lambda s: s.sds(), specs,
+                            is_leaf=lambda x: isinstance(x, ParamSpec))
+    sh = param_shardings(specs, mesh, rules)
+    return jax.tree.map(
+        lambda s, ns: jax.ShapeDtypeStruct(s.shape, s.sds().dtype, sharding=ns),
+        specs, sh, is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,315 @@
+"""Train-step construction: loss, microbatching, remat, sharded optimizer,
+optional cross-pod gradient compression — plus a resilient training loop.
+
+Two step builders:
+
+  * :func:`make_train_step` — pure-pjit SPMD step (default): forward/
+    backward under the mesh with logical-axis constraints, gradient
+    all-reduce inserted by the partitioner, AdamW update on sharded state.
+  * :func:`make_train_step_compressed` — ``shard_map`` step, *manual* over
+    the (pod, data) batch axes and *auto* over ``model``: within-pod psum
+    in bf16, int8 all-gather across pods, error feedback
+    (:mod:`repro.optim.grad_compress`).
+
+The training loop (:func:`train_loop`) wires in the resilience runtime:
+atomic checkpoints, auto-resume, preemption handling, a step watchdog.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models import model as M
+from ..models.layers import mesh_context, init_from_specs
+from ..optim.adafactor import (AdafactorConfig, adafactor_init,
+                               adafactor_update)
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..optim.grad_compress import compress_pod_reduce, init_error_feedback
+
+
+def make_optimizer(run: RunConfig, opt_cfg=None):
+    """(opt_cfg, init_fn, update_fn) for RunConfig.optimizer."""
+    if run.optimizer == "adafactor":
+        cfg = opt_cfg if isinstance(opt_cfg, AdafactorConfig) \
+            else AdafactorConfig(moments_dtype=run.optimizer_dtype)
+        return cfg, adafactor_init, adafactor_update
+    cfg = opt_cfg if isinstance(opt_cfg, AdamWConfig) \
+        else AdamWConfig(moments_dtype=run.optimizer_dtype)
+    return cfg, adamw_init, adamw_update
+from .sharding import abstract_params, param_shardings, rules_for
+
+__all__ = ["loss_fn", "make_train_step", "make_train_step_compressed",
+           "init_train_state", "train_loop", "batch_spec"]
+
+_MOE_AUX_W = 0.01
+
+
+def loss_fn(params, batch, cfg: ModelConfig, run: RunConfig, *,
+            q_chunk=512, kv_chunk=1024, unroll_scans=False):
+    """Next-token cross-entropy (+ MoE aux).  batch: tokens/embeds+labels."""
+    kw = {}
+    if cfg.input_mode == "tokens":
+        kw["tokens"] = batch["tokens"]
+    else:
+        kw["embeds"] = batch["embeds"]
+    logits, aux = M.forward(params, cfg, mode="train",
+                            remat=(run.remat != "none"),
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            unroll_scans=unroll_scans, **kw)
+    if run.logits_fp32:
+        logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+    loss = ce + _MOE_AUX_W * aux["moe_aux"]
+    return loss, {"ce": ce, "moe_aux": aux["moe_aux"]}
+
+
+def _microbatched_grads(params, batch, cfg, run, **kw):
+    """Gradient accumulation over ``run.microbatches`` splits of the batch."""
+    mb = max(run.microbatches, 1)
+    if mb == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, run, **kw)
+        return loss, metrics, grads
+
+    def split(x):
+        return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+    mbatch = jax.tree.map(split, batch)
+
+    def step(carry, mb_batch):
+        loss_acc, grads_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb_batch, cfg, run, **kw)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(a.dtype), grads_acc, grads)
+        return (loss_acc + loss, grads_acc), metrics
+
+    acc_dt = jnp.dtype(run.grad_accum_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    (loss_sum, grads), metrics = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), zeros), mbatch)
+    grads = jax.tree.map(lambda g: g / mb, grads)
+    metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum / mb, metrics, grads
+
+
+def batch_spec(cfg: ModelConfig, shape, mesh, rules):
+    """ShapeDtypeStructs + shardings for one global batch."""
+    B, S = shape.global_batch, shape.seq_len
+    bspec = rules.partition_spec(("batch", None), shape=(B, S), mesh=mesh)
+    sh = NamedSharding(mesh, bspec)
+    out = {"labels": jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh)}
+    if cfg.input_mode == "tokens":
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32, sharding=sh)
+    else:
+        sh3 = NamedSharding(mesh, rules.partition_spec(
+            ("batch", None, None), mesh=mesh))
+        out["embeds"] = jax.ShapeDtypeStruct(
+            (B, S, cfg.d_model), jnp.bfloat16, sharding=sh3)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, mesh,
+                    opt_cfg=None, *,
+                    q_chunk=512, kv_chunk=1024, unroll_scans=False):
+    """Pure-pjit train step: (params, opt_state, batch) → updated state."""
+    opt_cfg, _, opt_update = make_optimizer(run, opt_cfg)
+    rules = rules_for(mesh, run)
+
+    def step(params, opt_state, batch):
+        with mesh_context(mesh, rules):
+            loss, metrics, grads = _microbatched_grads(
+                params, batch, cfg, run, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                unroll_scans=unroll_scans)
+            params, opt_state, stats = opt_update(
+                params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **stats}
+
+    return step, rules, opt_cfg
+
+
+def make_train_step_compressed(cfg: ModelConfig, run: RunConfig, mesh,
+                               opt_cfg: AdamWConfig | None = None, *,
+                               q_chunk=512, kv_chunk=1024,
+                               unroll_scans=False):
+    """Per-pod-replica train step with int8 cross-pod gradient transport.
+
+    Design (how real multi-pod DP works): every pod holds a full state
+    replica — params/opt/error-feedback carry a leading ``(n_pods, …)``
+    replica dim sharded over ``pod``.  The step is:
+
+      1. ``vmap`` over the replica dim: each pod computes grads on its own
+         batch shard with *no cross-pod collective in the backward* (the
+         automatic psum only spans the within-pod ``data`` axis).
+      2. A small ``shard_map`` over ``pod`` alone exchanges the gradients:
+         error-feedback add, int8 quantize, **int8 all-gather across the
+         DCN**, dequant + mean (:mod:`repro.optim.grad_compress`).
+      3. Each pod applies the identical averaged update — replicas stay
+         bit-identical, so the leading dim costs no extra memory per chip.
+
+    Keeping the model code in plain pjit/vmap (no Manual axes around the
+    scanned/rematted stack) sidesteps an XLA-CPU partial-manual
+    partitioner bug, and is the cleaner factoring anyway.
+    """
+    opt_cfg, _, opt_update = make_optimizer(run, opt_cfg)
+    rules = rules_for(mesh, run)
+    n_pods = mesh.shape.get("pod", 1)
+    if run.fsdp:
+        raise ValueError("grad_compress path requires fsdp=False")
+
+    def exchange(grads, ef):
+        """int8+EF cross-pod reduction, pure-pjit formulation.
+
+        Per-pod quantization is element-local (stays pod-sharded); the only
+        cross-pod movement is a sharding constraint that replicates the
+        **int8 codes** over the pod axis — XLA lowers it to an all-gather
+        whose wire payload is int8+scales (4–16× less DCN traffic than an
+        f32/bf16 gradient all-reduce).  Dequant + mean then run locally on
+        every pod, and the error-feedback residual stays pod-local.
+        """
+        from ..optim.grad_compress import _dequant_leaf, _quant_leaf
+
+        if n_pods <= 1:
+            return compress_pod_reduce(grads, ef, pod_axis=None, n_pods=1)
+        U = P.UNCONSTRAINED
+
+        def one(g, e):
+            gc = g.astype(jnp.float32) + e            # (n_pods, …), EF add
+            q, scale = jax.vmap(_quant_leaf)(
+                gc.reshape(n_pods, -1))               # int8 codes + scales
+            local_deq = jax.vmap(
+                lambda qq, ss: _dequant_leaf(qq, ss, gc.shape[1:]))(q, scale)
+            new_e = gc - local_deq
+            # pod-replicate the CODES: int8 crosses the DCN, not f32
+            rep = lambda a: jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, P(*([None] + [U] * (a.ndim - 1)))))
+            q_all, s_all = rep(q), rep(scale)
+            deq = jax.vmap(
+                lambda qq, ss: _dequant_leaf(qq, ss, gc.shape[1:]))(
+                q_all, s_all)
+            mean = deq.mean(axis=0, keepdims=True)
+            mean = jnp.broadcast_to(mean, gc.shape).astype(g.dtype)
+            return mean, new_e
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(ef)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    def step(params_r, opt_r, ef_r, batch):
+        with mesh_context(mesh, rules):
+            def split(x):
+                return x.reshape((n_pods, x.shape[0] // n_pods)
+                                 + x.shape[1:])
+
+            pod_batch = jax.tree.map(split, batch)
+
+            def local(p, b):
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(p, b, cfg, run, q_chunk=q_chunk,
+                                           kv_chunk=kv_chunk,
+                                           unroll_scans=unroll_scans)
+                return loss, metrics, g
+
+            losses, metrics, grads = jax.vmap(local)(params_r, pod_batch)
+            grads, ef_r = exchange(grads, ef_r)
+            new_p, new_o, stats = jax.vmap(
+                lambda p, g, o: opt_update(p, g, o, opt_cfg))(
+                params_r, grads, opt_r)
+            out_metrics = {"loss": losses.mean(),
+                           **{k: v.mean() for k, v in metrics.items()},
+                           **{k: v[0] for k, v in stats.items()}}
+        return new_p, new_o, ef_r, out_metrics
+
+    return step, rules, opt_cfg
+
+
+def init_replica_state(cfg: ModelConfig, run: RunConfig, mesh, key,
+                       opt_cfg=None):
+    """(n_pods, …) pod-replicated params/opt/ef for the compressed step."""
+    from ..optim.grad_compress import init_error_feedback
+
+    n_pods = mesh.shape.get("pod", 1)
+    params, opt_state = init_train_state(cfg, run, mesh, key, opt_cfg)
+    ef = init_error_feedback(params)
+
+    def rep(x):
+        return jnp.broadcast_to(x[None], (n_pods,) + x.shape)
+
+    params_r = jax.jit(lambda t: jax.tree.map(rep, t))(params)
+    opt_r = jax.jit(lambda t: jax.tree.map(rep, t))(opt_state)
+    ef_r = jax.jit(lambda t: jax.tree.map(rep, t))(ef)
+    return params_r, opt_r, ef_r
+
+
+def init_train_state(cfg: ModelConfig, run: RunConfig, mesh, key,
+                     opt_cfg=None):
+    """Materialize sharded params + optimizer state on the mesh."""
+    specs = M.model_specs(cfg)
+    rules = rules_for(mesh, run)
+    shardings = param_shardings(specs, mesh, rules)
+    opt_cfg, opt_init, _ = make_optimizer(run, opt_cfg)
+
+    def init():
+        return init_from_specs(specs, key)
+
+    params = jax.jit(init, out_shardings=shardings)()
+    opt_state = jax.jit(functools.partial(opt_init, cfg=opt_cfg))(params)
+    return params, opt_state
+
+
+def train_loop(cfg: ModelConfig, run: RunConfig, mesh, data_iter, *,
+               steps: int, opt_cfg: AdamWConfig | None = None,
+               checkpoint_dir: str | None = None, checkpoint_every: int = 50,
+               resume: bool = True, key=None, watchdog_timeout: float = 0.0,
+               log_every: int = 10):
+    """Resilient training driver (used by examples + integration tests)."""
+    from ..checkpoint.manager import CheckpointManager
+    from ..runtime.resilience import PreemptionGuard, StepWatchdog
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    opt_cfg = opt_cfg or AdamWConfig(moments_dtype=run.optimizer_dtype)
+    step_fn, rules, opt_cfg = make_train_step(cfg, run, mesh, opt_cfg)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    params, opt_state = init_train_state(cfg, run, mesh, key, opt_cfg)
+
+    start = 0
+    mgr = None
+    if checkpoint_dir:
+        mgr = CheckpointManager(checkpoint_dir)
+        if resume:
+            restored = mgr.restore_latest(mesh=mesh,
+                                          shardings=param_shardings(
+                                              M.model_specs(cfg), mesh, rules))
+            if restored is not None:
+                params, opt_state, start = restored
+
+    guard = PreemptionGuard()
+    watchdog = StepWatchdog(timeout=watchdog_timeout)
+    history = []
+    for step in range(start, steps):
+        batch = next(data_iter)
+        with watchdog.step(step):
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+        if mgr and (step + 1) % checkpoint_every == 0:
+            mgr.save(step + 1, params, opt_state)
+        if guard.should_stop:
+            if mgr:
+                mgr.save(step + 1, params, opt_state)
+            break
+    if mgr:
+        mgr.wait()
+    return params, opt_state, history

@@ -1,0 +1,1 @@
+"""Model zoo: layers, attention, MoE, SSM (Mamba2), RWKV6, decoder stacks."""

@@ -1,0 +1,285 @@
+"""GQA attention with RoPE, KV caches, and a flash-style blocked softmax.
+
+The blocked attention (``flash_attention``) is the TPU adaptation layer:
+an online-softmax scan over (q-chunk × kv-chunk) tiles in pure
+``jax.lax`` — the exact semantics of a fused flash kernel, with
+O(q_chunk · kv_chunk) live scores instead of O(S²).  On a real TPU
+deployment the inner block would be a Pallas kernel; the scan structure,
+numerics (f32 accumulators, bf16 matmuls) and memory behaviour are what
+the dry-run must prove out, and XLA fuses the inner block well.
+
+Modes:
+  * train/prefill — full causal self-attention, optionally returning the
+    KV cache (prefill).
+  * decode        — one new token against a length-``cache_len`` cache
+    (the assigned ``decode_32k`` / ``long_500k`` cells).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, apply_rope, linear, rope_freqs, shard
+
+__all__ = ["attn_specs", "flash_attention", "attention", "init_kv_cache"]
+
+# §Perf hillclimb switch: triangular (causal-skip) flash schedule vs the
+# full (qi × ki) grid.  True = deployed default.
+TRIANGULAR = True
+
+
+def attn_specs(cfg) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, h * hd), ("embed", "heads"), cfg.dtype),
+        "wk": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), cfg.dtype),
+        "wv": ParamSpec((d, hkv * hd), ("embed", "kv_heads"), cfg.dtype),
+        "wo": ParamSpec((h * hd, d), ("heads", "embed"), cfg.dtype),
+        "ln": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h * hd,), ("heads",), cfg.dtype, init="zeros")
+        specs["bk"] = ParamSpec((hkv * hd,), ("kv_heads",), cfg.dtype, init="zeros")
+        specs["bv"] = ParamSpec((hkv * hd,), ("kv_heads",), cfg.dtype, init="zeros")
+    return specs
+
+
+def init_kv_cache(cfg, batch: int, capacity: int, dtype=jnp.bfloat16,
+                  quantized: bool = False):
+    """KV cache; ``quantized=True`` stores int8 codes + per-(token, head)
+    fp32 scales — the compressed-KV option (DESIGN.md Plane B: the paper's
+    quantization stage with unit-block = one head-token vector)."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    if quantized:
+        return {
+            "k": jnp.zeros((batch, capacity, hkv, hd), jnp.int8),
+            "v": jnp.zeros((batch, capacity, hkv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
+            "v_scale": jnp.zeros((batch, capacity, hkv), jnp.float32),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, hkv, hd), dtype),
+        "v": jnp.zeros((batch, capacity, hkv, hd), dtype),
+    }
+
+
+def _quantize_heads(x):
+    """Per-(token, head) symmetric int8: returns (codes, scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_heads(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0, kv_valid_len=None,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    k_scale=None, v_scale=None, unroll: bool = False):
+    """Blocked online-softmax attention (GQA-aware).
+
+    q: (B, Sq, H, D);  k/v: (B, Sk, Hkv, D);  H % Hkv == 0.
+    ``q_offset``: absolute position of q[0] (decode: cache_len).
+    ``kv_valid_len``: number of valid cache entries (None = all).
+    ``k_scale``/``v_scale``: per-(token, head) fp32 scales for an int8
+    cache — dequantization happens *per kv-chunk inside the loop*, so the
+    bf16 cache is never materialized in full (decode-32k memory term).
+
+    K/V chunks are taken with ``dynamic_slice`` per step rather than a
+    pre-reshaped scan input: pre-blocking a 32k-token cache would copy
+    (and transpose) the entire cache on every decode step.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad to multiples (masked out below)
+    pq = (-Sq) % q_chunk
+    pk = (-Sk) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pk), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pk), (0, 0)))
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    qb = q.reshape(B, nq, q_chunk, Hkv, G, D).transpose(1, 0, 2, 3, 4, 5)
+    valid = Sk if kv_valid_len is None else kv_valid_len
+    compute_dt = q.dtype
+
+    def _kv_chunk_at(ki):
+        kc = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, axis=1)
+        if k_scale is not None:
+            ks = jax.lax.dynamic_slice_in_dim(k_scale, ki * kv_chunk,
+                                              kv_chunk, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v_scale, ki * kv_chunk,
+                                              kv_chunk, axis=1)
+            kc = _dequantize_heads(kc, ks, compute_dt)
+            vc = _dequantize_heads(vc, vs, compute_dt)
+        return kc, vc
+
+    def q_step(_, qi_qc):
+        qi, qc, nk_i = qi_qc                # qc: (B, q_chunk, Hkv, G, D)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc = _kv_chunk_at(ki)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhgd,bchd->bhgqc", qc, kc.astype(qc.dtype),
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] < valid
+            if causal:
+                mask = mask & (kpos[None, :] <= qpos[:, None])
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (exp(-inf - -inf))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqc,bchd->bhgqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        # remat: backward recomputes the score block instead of saving it —
+        # the memory behaviour of a fused flash kernel
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            jnp.arange(nk_i), unroll=unroll)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B, Hkv, G, q_chunk, D) -> (B, q_chunk, Hkv, G, D)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    if causal and q_offset == 0 and nq > 1 and TRIANGULAR:
+        # triangular schedule: q-chunk qi only attends kv chunks
+        # [0, ceil((qi+1)·q_chunk / kv_chunk)) — fully-masked blocks are
+        # statically skipped, halving attention FLOPs vs the full grid
+        # (§Perf hillclimb #1).  Per-qi trip counts are static, so both
+        # the deployed scan and the unrolled flops variants benefit.
+        outs = []
+        for qi in range(nq):
+            hi = min(nk, -(-((qi + 1) * q_chunk) // kv_chunk))
+            f = jax.checkpoint(
+                lambda qc, _qi=qi, _hi=hi: q_step(
+                    None, (jnp.int32(_qi), qc, _hi)))
+            outs.append(f(qb[qi]))
+        out = jnp.stack(outs)
+    else:
+        def q_body(_, qi_qc):
+            qi, qc = qi_qc
+            return None, q_step(None, (qi, qc, nk))
+
+        _, out = jax.lax.scan(jax.checkpoint(q_body), None,
+                              (jnp.arange(nq), qb), unroll=unroll)
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q, k, v, *, valid_len, k_scale=None, v_scale=None):
+    """Single-einsum attention for tiny Sq (decode): one masked softmax
+    over the full cache.
+
+    Scores are only (B, H, Sq, Sk) for Sq=1, so no chunking is needed —
+    and *must not* be used: dynamic-slicing a sequence-sharded cache makes
+    the SPMD partitioner reshard the entire cache per loop step.  A plain
+    einsum over the sharded seq dim partitions cleanly (partial softmax +
+    all-reduce).  Int8 caches are dequantized at the einsum operand, which
+    XLA fuses into the dot.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k.astype(qg.dtype),
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    if k_scale is not None:
+        # per-(token, head) int8 scales are constant over the contracted
+        # head_dim, so they factor out of the dot exactly: scale the scores
+        # (B·H·Sk floats) instead of dequantizing the B·Sk·H·D cache
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    kpos = jnp.arange(Sk)
+    s = jnp.where((kpos < valid_len)[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(jnp.float32),
+                     v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention(params, x, cfg, *, mode: str, positions, cache=None,
+              cache_len=None, q_chunk: int = 512, kv_chunk: int = 1024,
+              unroll: bool = False):
+    """Pre-norm attention block body (residual added by the caller).
+
+    Returns (out, new_cache).  ``positions``: (Sq,) absolute positions of
+    the query tokens.  decode mode writes this step's K/V at ``positions``
+    and attends over ``cache_len + Sq`` entries.
+    """
+    from .layers import rmsnorm
+
+    B, Sq, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    q = linear(xn, params["wq"], params.get("bq")).reshape(B, Sq, h, hd)
+    k = linear(xn, params["wk"], params.get("bk")).reshape(B, Sq, hkv, hd)
+    v = linear(xn, params["wv"], params.get("bv")).reshape(B, Sq, hkv, hd)
+    cos, sin = rope_freqs(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and cache_len is not None
+        quantized = "k_scale" in cache
+        if quantized:
+            kq, ks = _quantize_heads(k)
+            vq, vs = _quantize_heads(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], kq, cache_len, axis=1),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], vq, cache_len, axis=1),
+                "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ks.astype(jnp.float32), cache_len,
+                    axis=1),
+                "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vs.astype(jnp.float32), cache_len,
+                    axis=1),
+            }
+            out = decode_attention(
+                q, new_cache["k"], new_cache["v"],
+                valid_len=cache_len + Sq,
+                k_scale=new_cache["k_scale"], v_scale=new_cache["v_scale"])
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            out = decode_attention(q, ck, cv, valid_len=cache_len + Sq)
+    else:
+        out = flash_attention(q, k, v, causal=True,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              unroll=unroll)
+        if mode == "prefill":
+            new_cache = {"k": k, "v": v}
+    out = out.reshape(B, Sq, h * hd)
+    return linear(out, params["wo"]), new_cache

@@ -1,0 +1,152 @@
+"""Parameter plumbing + basic layers (pure JAX, no framework deps).
+
+Parameters are plain pytrees (nested dicts of arrays).  Alongside every
+param tree we build a *spec tree* of :class:`ParamSpec` with logical
+sharding axes — the dry-run lowers from specs (ShapeDtypeStruct, zero
+allocation) and the launcher resolves logical axes → mesh axes through
+:mod:`repro.launch.sharding` rules.
+
+Activation sharding constraints go through :func:`shard` which consults a
+context-local (mesh, rules) pair set by the launcher; without a mesh it is
+the identity, so smoke tests run untouched on one CPU device.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_from_specs", "abstract_from_specs", "shard",
+           "activation_shardings", "rmsnorm", "linear", "rope_freqs",
+           "apply_rope", "param_count", "mesh_context", "current_mesh_rules"]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    dtype: str = "bfloat16"
+    init: str = "normal"                  # normal | zeros | ones
+    scale: float = 1.0
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+def _init_leaf(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+    std = spec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+
+
+def init_from_specs(specs, key):
+    """Materialize a param tree from a spec tree (one PRNG split per leaf)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_from_specs(specs):
+    """ShapeDtypeStruct tree — the dry-run's zero-allocation params."""
+    return jax.tree.map(lambda s: s.sds(), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# mesh/rules context for activation sharding constraints
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, rules):
+    """Launcher-installed context: activation ``shard()`` constraints apply."""
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def current_mesh_rules():
+    return getattr(_CTX, "value", None)
+
+
+def shard(x, *axes):
+    """Constrain activation sharding by logical axis names.
+
+    Unresolved dims (no rule, or indivisible) are left UNCONSTRAINED so XLA
+    keeps its propagated sharding.  No-op outside a mesh context
+    (single-device smoke tests)."""
+    ctx = current_mesh_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.partition_spec(axes, shape=x.shape, mesh=mesh,
+                                unconstrained_fallback=True)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def activation_shardings(axes_tree, shapes_tree=None):
+    """Resolve a tree of logical-axis tuples to NamedShardings (launcher)."""
+    ctx = current_mesh_rules()
+    if ctx is None:
+        raise RuntimeError("activation_shardings needs a mesh_context")
+    mesh, rules = ctx
+    def _one(axes):
+        return jax.sharding.NamedSharding(
+            mesh, rules.partition_spec(axes, shape=None, mesh=mesh))
+    return jax.tree.map(_one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# basic layers
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def rope_freqs(positions, head_dim: int, theta: float = 10_000.0):
+    """(…, head_dim/2) cos/sin tables for the given absolute positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., hd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)

@@ -1,0 +1,311 @@
+"""Decoder-stack assembly for all assigned architecture families.
+
+One code path per family, all under ``lax.scan`` over stacked layer params
+(compile-time O(1) in depth — a 126-layer 405B model lowers as one layer
+body):
+
+  * dense / moe / vlm / audio — pre-norm attention + (MLP | MoE) blocks.
+  * ssm (rwkv6)               — RWKV6 time-mix + channel-mix blocks.
+  * hybrid (zamba2)           — groups of ``shared_attn_every`` Mamba2
+    layers followed by one application of a *shared* attention block
+    (one param set, per-application KV caches), scanned over groups.
+
+``mode``: train | prefill | decode.  vlm/audio archs take pre-computed
+frontend embeddings (``input_mode='embeddings'``) per the assignment brief;
+everything else takes token ids.
+
+The returned ``aux`` carries new caches/states (prefill/decode) and the
+MoE load-balance loss (train).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, attn_specs, init_kv_cache
+from .layers import ParamSpec, shard, rmsnorm
+from .moe import mlp_apply, mlp_specs, moe_apply, moe_specs
+from .rwkv import init_rwkv_state, rwkv6_apply, rwkv6_specs
+from .ssm import init_mamba_state, mamba2_apply, mamba2_specs
+
+__all__ = ["model_specs", "forward", "init_decode_state", "param_counts"]
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    """Add a leading stacked-layers axis to every ParamSpec in a tree."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _layer_specs(cfg) -> dict:
+    if cfg.family == "ssm":
+        return rwkv6_specs(cfg)
+    if cfg.family == "hybrid":
+        return mamba2_specs(cfg)
+    specs = {"attn": attn_specs(cfg)}
+    specs["mlp"] = moe_specs(cfg) if cfg.n_experts else mlp_specs(cfg)
+    return specs
+
+
+def model_specs(cfg) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    specs: dict = {
+        "final_ln": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+        "lm_head": ParamSpec((d, v), ("embed", "vocab"), cfg.dtype),
+    }
+    if cfg.input_mode == "tokens":
+        specs["embed"] = ParamSpec((v, d), ("vocab", "embed"), cfg.dtype)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        groups = cfg.n_layers // cfg.shared_attn_every
+        per_group = _stack_specs(_layer_specs(cfg), cfg.shared_attn_every)
+        specs["layers"] = _stack_specs(per_group, groups)
+        specs["shared_attn"] = attn_specs(cfg)
+        specs["shared_mlp"] = mlp_specs(cfg)
+    else:
+        specs["layers"] = _stack_specs(_layer_specs(cfg), cfg.n_layers)
+    return specs
+
+
+def param_counts(cfg) -> tuple[int, int]:
+    """(total params, active-per-token params) from the spec tree."""
+    import numpy as np
+
+    specs = model_specs(cfg)
+    leaves = {k: v for k, v in _flatten("", specs).items()}
+    total = sum(int(np.prod(s.shape)) for s in leaves.values())
+    active = 0
+    for k, s in leaves.items():
+        n = int(np.prod(s.shape))
+        if cfg.n_experts and ("/w_up" in k or "/w_gate" in k or "/w_down" in k) \
+                and "shared" not in k:
+            n = n * cfg.experts_per_token // cfg.n_experts
+        active += n
+    return total, active
+
+
+def _flatten(prefix, tree):
+    out = {}
+    if isinstance(tree, ParamSpec):
+        out[prefix] = tree
+        return out
+    for k, v in tree.items():
+        out.update(_flatten(f"{prefix}/{k}", v))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode-state construction
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg, batch: int, capacity: int, quantized: bool = False):
+    """Per-layer stacked serve-time state for the given cache capacity."""
+    if cfg.family == "ssm":
+        one = init_rwkv_state(cfg, batch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one)
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        m = init_mamba_state(cfg, batch)
+        mam = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (groups, cfg.shared_attn_every) + a.shape), m)
+        kv = init_kv_cache(cfg, batch, capacity, quantized=quantized)
+        kv = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (groups,) + a.shape), kv)
+        return {"mamba": mam, "kv": kv}
+    kv = init_kv_cache(cfg, batch, capacity, quantized=quantized)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), kv)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg, *, tokens=None, embeds=None, mode: str = "train",
+            state=None, cache_len=None, q_chunk: int = 512,
+            kv_chunk: int = 1024, ssm_chunk: int = 256,
+            unroll_scans: bool = False, remat: bool = False):
+    """Returns (logits, aux).  aux = {"state": ..., "moe_aux": scalar}.
+
+    ``remat=True`` checkpoints each scanned layer body (activation
+    rematerialization): backward recomputes the layer instead of saving
+    its internals — the standard memory/compute trade for deep stacks.
+    """
+    maybe_remat = (jax.checkpoint if remat else (lambda f: f))
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], tokens, axis=0)
+    else:
+        x = embeds.astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "batch", "seq", None)
+    B, S = x.shape[:2]
+    if mode == "decode":
+        if state is None:
+            raise ValueError("decode needs a serve-time state")
+        positions = cache_len + jnp.arange(S, dtype=jnp.int32)
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+    moe_aux = jnp.zeros((), jnp.float32)
+    needs_state = mode in ("prefill", "decode")
+
+    if cfg.family == "ssm":
+        # rwkv states are O(d·head) — cheap enough to thread in every mode
+        layer_state = state if state is not None else init_decode_state(
+            cfg, B, 0)
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, lstate = xs
+            h, new_st = rwkv6_apply(lp, h, cfg, mode=mode, state=lstate,
+                                    chunk=32, unroll=unroll_scans)
+            h = shard(h, "batch", "seq", None)
+            return (h, aux), new_st
+
+        (x, moe_aux), new_state = jax.lax.scan(
+            maybe_remat(body), (x, moe_aux), (params["layers"], layer_state),
+            unroll=unroll_scans)
+
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+
+        def one_mamba(lp, h, lst):
+            delta, ns = mamba2_apply(lp, h, cfg, mode=mode, state=lst,
+                                     chunk=ssm_chunk, unroll=unroll_scans)
+            return h + delta, ns
+
+        # nested remat: without it the group body's backward holds all k
+        # mamba layers' internals at once
+        one_mamba_r = maybe_remat(one_mamba)
+
+        def group(h, aux, gp, g_mamba, g_kv):
+            new_mamba = []
+            for i in range(k):
+                lp = jax.tree.map(lambda a: a[i], gp)
+                lst = (None if g_mamba is None
+                       else jax.tree.map(lambda a: a[i], g_mamba))
+                h, ns = one_mamba_r(lp, h, lst)
+                h = shard(h, "batch", "seq", None)
+                new_mamba.append(ns)
+            new_mamba = jax.tree.map(lambda *a: jnp.stack(a), *new_mamba)
+            a_out, new_kv = attention(
+                params["shared_attn"], h, cfg, mode=mode, positions=positions,
+                cache=g_kv if mode == "decode" else None, cache_len=cache_len,
+                q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll_scans)
+            h = h + a_out
+            h = h + mlp_apply(params["shared_mlp"], h, cfg)
+            h = shard(h, "batch", "seq", None)
+            return h, aux, new_mamba, new_kv
+
+        if mode == "train":
+            def body(carry, gp):
+                h, aux = carry
+                h, aux, _, _ = group(h, aux, gp, None, None)
+                return (h, aux), None
+
+            (x, moe_aux), _ = jax.lax.scan(
+                maybe_remat(body), (x, moe_aux), params["layers"], unroll=unroll_scans)
+            new_state = None
+        else:
+            if state is None:
+                state = init_decode_state(cfg, B, S)  # prefill target
+
+            # the cache stack is loop-CARRIED and updated in place at the
+            # group index: threading it as scan xs/ys makes XLA double-
+            # buffer the whole multi-GB cache (input stack + ys stack)
+            def body(carry, gp_i):
+                h, aux, st = carry
+                gp, i = gp_i
+                g_mamba = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 0, keepdims=False), st["mamba"])
+                g_kv = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 0, keepdims=False), st["kv"])
+                h, aux, new_mamba, new_kv = group(h, aux, gp, g_mamba, g_kv)
+                if new_kv is None:
+                    new_kv = g_kv
+                st = {
+                    "mamba": jax.tree.map(
+                        lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                            a, n.astype(a.dtype), i, 0), st["mamba"],
+                        new_mamba),
+                    "kv": jax.tree.map(
+                        lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                            a, n.astype(a.dtype), i, 0), st["kv"], new_kv),
+                }
+                return (h, aux, st), None
+
+            groups = cfg.n_layers // k
+            (x, moe_aux, new_state), _ = jax.lax.scan(
+                maybe_remat(body), (x, moe_aux, state),
+                (params["layers"], jnp.arange(groups)),
+                unroll=unroll_scans)
+
+    else:
+        # dense/moe/vlm/audio transformer: no state threaded in train mode
+        def block(h, aux, lp, l_kv):
+            a_out, new_kv = attention(
+                lp["attn"], h, cfg, mode=mode, positions=positions,
+                cache=l_kv if mode == "decode" else None, cache_len=cache_len,
+                q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll_scans)
+            h = h + a_out
+            h = shard(h, "batch", "seq", None)
+            if cfg.n_experts:
+                m_out, m_aux = moe_apply(lp["mlp"], h, cfg,
+                                         unroll=unroll_scans)
+                aux = aux + m_aux
+            else:
+                m_out = mlp_apply(lp["mlp"], h, cfg)
+            h = h + m_out
+            h = shard(h, "batch", "seq", None)
+            return h, aux, new_kv
+
+        if mode == "train":
+            def body(carry, lp):
+                h, aux = carry
+                h, aux, _ = block(h, aux, lp, None)
+                return (h, aux), None
+
+            (x, moe_aux), _ = jax.lax.scan(
+                maybe_remat(body), (x, moe_aux), params["layers"], unroll=unroll_scans)
+            new_state = None
+        else:
+            if state is None:
+                state = init_decode_state(cfg, B, S)  # prefill target
+
+            # loop-carried cache stack, in-place update at the layer index
+            # (scan xs/ys would double-buffer the entire cache)
+            def body(carry, lp_i):
+                h, aux, st = carry
+                lp, i = lp_i
+                l_kv = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, i, 0, keepdims=False), st)
+                h, aux, new_kv = block(h, aux, lp, l_kv)
+                if new_kv is not None:
+                    st = jax.tree.map(
+                        lambda a, n: jax.lax.dynamic_update_index_in_dim(
+                            a, n.astype(a.dtype), i, 0), st, new_kv)
+                return (h, aux, st), None
+
+            (x, moe_aux, new_state), _ = jax.lax.scan(
+                maybe_remat(body), (x, moe_aux, state),
+                (params["layers"], jnp.arange(cfg.n_layers)),
+                unroll=unroll_scans)
+
+    if mode == "prefill":
+        # serving only needs the last position's logits; the full (B, 32k,
+        # vocab) tensor would dominate prefill memory for 100k+ vocabs
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(x.dtype))
+    logits = shard(logits, "batch", None, "vocab")
+    aux = {"moe_aux": moe_aux / max(cfg.n_layers, 1),
+           "state": new_state if needs_state else None}
+    return logits, aux

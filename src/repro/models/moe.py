@@ -1,0 +1,152 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+GShard-style dense dispatch/combine einsums: TPU-friendly (all-to-all falls
+out of the sharding of the ``experts`` axis under SPMD), deterministic
+shapes, capacity factor bounds the per-expert buffer.  Router in fp32 with
+an auxiliary load-balancing loss (Switch §2.2).
+
+Sharding: experts → the ``model`` mesh axis (expert parallelism).  Tokens
+are dispatched with one-hot einsums; under EP the dispatch einsum lowers to
+an all-to-all on the expert axis — exactly the collective the roofline
+'s collective term tracks for the MoE cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, linear, rmsnorm, shard
+
+__all__ = ["moe_specs", "moe_apply", "mlp_specs", "mlp_apply"]
+
+
+def mlp_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    specs = {
+        "ln": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+        "w_up": ParamSpec((d, f), ("embed", "mlp"), cfg.dtype),
+        "w_down": ParamSpec((f, d), ("mlp", "embed"), cfg.dtype),
+    }
+    if cfg.act == "swiglu":
+        specs["w_gate"] = ParamSpec((d, f), ("embed", "mlp"), cfg.dtype)
+    return specs
+
+
+def mlp_apply(params, x, cfg):
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    up = linear(xn, params["w_up"])
+    if cfg.act == "swiglu":
+        up = jax.nn.silu(linear(xn, params["w_gate"])) * up
+    else:
+        up = jax.nn.gelu(up)
+    up = shard(up, "batch", None, "mlp")
+    return linear(up, params["w_down"])
+
+
+def moe_specs(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "ln": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+        "router": ParamSpec((d, e), ("embed", None), "float32"),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp"), cfg.dtype),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "mlp"), cfg.dtype),
+        "w_down": ParamSpec((e, f, d), ("experts", "mlp", "embed"), cfg.dtype),
+    }
+
+
+def _moe_group(params, tokens, cfg):
+    """Route + dispatch + expert-compute + combine for one token group.
+
+    Scatter-based dispatch (O(g·k) index work, no O(g·e·c) one-hot einsum)
+    into a per-group capacity buffer — GShard's group semantics: capacity
+    is provisioned per group, so routing hot spots drop locally.
+    """
+    g_tokens, d = tokens.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+
+    logits = jnp.einsum("td,de->te", tokens.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (g, e)
+    gate_vals, sel = jax.lax.top_k(probs, k)                      # (g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): e · Σ_e fraction_tokens · router_prob
+    onehot = jax.nn.one_hot(sel, e, dtype=jnp.float32)            # (g, k, e)
+    frac = onehot.sum(axis=(0, 1)) / (g_tokens * k)
+    aux = e * jnp.sum(frac * probs.mean(0))
+
+    capacity = max(int(cfg.capacity_factor * g_tokens * k / e), 4)
+    flat_sel = sel.reshape(-1)                                    # (g·k,)
+    # slot ranking via stable sort (O(n log n)) — the (n·k, e) one-hot
+    # cumsum variant is counted quadratically by HloCostAnalysis and is
+    # the expensive path on real hardware too (production MoEs sort)
+    nk = flat_sel.shape[0]
+    order = jnp.argsort(flat_sel, stable=True)
+    expert_sorted = flat_sel[order]
+    starts = jnp.searchsorted(expert_sorted, jnp.arange(e), side="left")
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) \
+        - starts[expert_sorted].astype(jnp.int32)
+    pos_in_expert = jnp.zeros((nk,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos_in_expert < capacity
+    gate_keep = (gate_vals.reshape(-1) * keep).astype(tokens.dtype)
+    dest = jnp.where(keep, flat_sel * capacity + pos_in_expert, e * capacity)
+
+    tok_rep = jnp.repeat(tokens, k, axis=0)                       # (g·k, d)
+    buf = jnp.zeros((e * capacity + 1, d), tokens.dtype)
+    buf = buf.at[dest].add(tok_rep * keep[:, None].astype(tokens.dtype))
+    expert_in = buf[:-1].reshape(e, capacity, d)
+    expert_in = shard(expert_in, "experts", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in,
+                   params["w_up"].astype(expert_in.dtype))
+    gt = jnp.einsum("ecd,edf->ecf", expert_in,
+                    params["w_gate"].astype(expert_in.dtype))
+    h = jax.nn.silu(gt) * h
+    expert_out = jnp.einsum("ecf,efd->ecd", h,
+                            params["w_down"].astype(h.dtype))
+    expert_out = shard(expert_out, "experts", None, None)
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(e * capacity, d),
+         jnp.zeros((1, d), expert_out.dtype)])[dest]
+    out = (out_flat * gate_keep[:, None]).reshape(g_tokens, k, d).sum(axis=1)
+    return out, aux
+
+
+def moe_apply(params, x, cfg, *, group_size: int = 4096,
+              unroll: bool = False):
+    """Returns (out, aux_loss).  x: (B, S, d).
+
+    Tokens are processed in groups of ≤``group_size`` under a ``lax.scan``:
+    the dispatch scatter's working set (capacity buffer + index tensors) is
+    bounded per group instead of scaling with the full 0.5M-token batch —
+    without this, SPMD replicates a multi-GB scatter across the mesh.
+    """
+    B, S, d = x.shape
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    tokens = xn.reshape(B * S, d)
+    n = tokens.shape[0]
+    # flops-variant lowering (unroll=True) uses a single group: FLOPs are
+    # group-size invariant (total capacity slots are fixed at n·k·cf), and
+    # unrolling hundreds of group bodies would explode compile time
+    gs = n if unroll else min(group_size, n)
+    while n % gs:
+        gs //= 2
+    n_groups = n // gs
+    if n_groups == 1:
+        out, aux = _moe_group(params, tokens, cfg)
+        return out.reshape(B, S, d), aux
+
+    groups = tokens.reshape(n_groups, gs, d)
+
+    def body(aux_acc, grp):
+        out, aux = _moe_group(params, grp, cfg)
+        return aux_acc + aux, out
+
+    # remat: the backward otherwise saves every group's dispatch buffers
+    # and expert activations (n_groups × (e, c, d_ff) tensors)
+    aux_sum, outs = jax.lax.scan(jax.checkpoint(body),
+                                 jnp.zeros((), jnp.float32), groups,
+                                 unroll=unroll)
+    return outs.reshape(B, S, d), aux_sum / n_groups

@@ -1,0 +1,169 @@
+"""RWKV6 "Finch" block: data-dependent per-channel decay (arXiv:2404.05892).
+
+Time-mix with LoRA-produced dynamic decay ``w_t`` and token-shift mixing,
+WKV6 linear recurrence over (head, d_head × d_head) matrix states, and the
+squared-ReLU channel-mix.  Training uses a chunked form (chunk 64, fp32
+decay algebra as in flash-linear-attention); decode is the exact O(1)
+recurrence — the ``long_500k`` cell for this arch runs entirely on the
+matrix state, no KV cache.
+
+Applicability note (DESIGN.md §Arch-applicability): the paper's *spatial*
+partitioning (OpST/AKDTree) has no analogue on these dense 2D states; the
+framework-plane TAC+ integration for this arch is checkpoint/gradient
+compression only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, linear, rmsnorm, shard
+
+__all__ = ["rwkv6_specs", "rwkv6_apply", "init_rwkv_state"]
+
+_LORA_R = 64
+
+
+def rwkv6_specs(cfg) -> dict:
+    d = cfg.d_model
+    nh = d // cfg.rwkv_head
+    f = cfg.d_ff
+    return {
+        "ln_t": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+        "mu_r": ParamSpec((d,), (None,), cfg.dtype, init="zeros"),
+        "mu_k": ParamSpec((d,), (None,), cfg.dtype, init="zeros"),
+        "mu_v": ParamSpec((d,), (None,), cfg.dtype, init="zeros"),
+        "mu_w": ParamSpec((d,), (None,), cfg.dtype, init="zeros"),
+        "mu_g": ParamSpec((d,), (None,), cfg.dtype, init="zeros"),
+        "wr": ParamSpec((d, d), ("embed", "heads"), cfg.dtype),
+        "wk": ParamSpec((d, d), ("embed", "heads"), cfg.dtype),
+        "wv": ParamSpec((d, d), ("embed", "heads"), cfg.dtype),
+        "wg": ParamSpec((d, d), ("embed", "heads"), cfg.dtype),
+        "wo": ParamSpec((d, d), ("heads", "embed"), cfg.dtype),
+        # dynamic decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": ParamSpec((d,), ("heads",), "float32", init="zeros"),
+        "wA": ParamSpec((d, _LORA_R), ("embed", None), cfg.dtype),
+        "wB": ParamSpec((_LORA_R, d), (None, "heads"), cfg.dtype),
+        "u_bonus": ParamSpec((d,), ("heads",), "float32", init="zeros"),
+        "gn": ParamSpec((d,), ("heads",), cfg.dtype, init="ones"),
+        # channel mix
+        "ln_c": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+        "mu_c": ParamSpec((d,), (None,), cfg.dtype, init="zeros"),
+        "ck": ParamSpec((d, f), ("embed", "mlp"), cfg.dtype),
+        "cv": ParamSpec((f, d), ("mlp", "embed"), cfg.dtype),
+        "cr": ParamSpec((d, d), ("embed", None), cfg.dtype),
+    }
+
+
+def init_rwkv_state(cfg, batch: int):
+    d = cfg.d_model
+    nh, hd = d // cfg.rwkv_head, cfg.rwkv_head
+    return {
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "shift_t": jnp.zeros((batch, d), jnp.bfloat16),
+        "shift_c": jnp.zeros((batch, d), jnp.bfloat16),
+    }
+
+
+def _token_shift(x, prev):
+    """x_{t-1} stream: shift right by one, carry ``prev`` in at t=0."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def rwkv6_apply(params, x, cfg, *, mode: str, state=None,
+                chunk: int = 32, unroll: bool = False):
+    """Full RWKV6 block (time-mix + channel-mix).  Returns (out, state)."""
+    B, S, d = x.shape
+    nh, hd = d // cfg.rwkv_head, cfg.rwkv_head
+    st = state or init_rwkv_state(cfg, B)
+
+    # ---------------- time mix ----------------
+    xn = rmsnorm(x, params["ln_t"], cfg.norm_eps)
+    xprev = _token_shift(xn, st["shift_t"].astype(xn.dtype))
+    r = linear(_mix(xn, xprev, params["mu_r"]), params["wr"])
+    k = linear(_mix(xn, xprev, params["mu_k"]), params["wk"])
+    v = linear(_mix(xn, xprev, params["mu_v"]), params["wv"])
+    g = linear(_mix(xn, xprev, params["mu_g"]), params["wg"])
+    xw = _mix(xn, xprev, params["mu_w"])
+    logw = params["w0"] + linear(
+        jnp.tanh(linear(xw, params["wA"])), params["wB"]).astype(jnp.float32)
+    # -log w_t, clipped to [1e-4, 2.5] so the fp32 chunked form (chunk=32,
+    # exp(±Σ) factors as in flash-linear-attention) cannot overflow
+    neg_decay = jnp.clip(jnp.exp(logw), 1e-4, 2.5)
+    # per-head views, fp32 recurrence
+    rh = r.reshape(B, S, nh, hd).astype(jnp.float32)
+    kh = k.reshape(B, S, nh, hd).astype(jnp.float32)
+    vh = v.reshape(B, S, nh, hd).astype(jnp.float32)
+    lw = -neg_decay.reshape(B, S, nh, hd)                 # log w_t ≤ 0
+    u = params["u_bonus"].reshape(nh, hd)
+
+    if mode == "decode":
+        Swkv = st["wkv"]
+        # decode step: y = r·(S + u ⊙ k ⊗ v); S' = diag(w) S + k ⊗ v
+        kv = jnp.einsum("bhi,bhj->bhij", kh[:, 0], vh[:, 0])
+        y = jnp.einsum("bhi,bhij->bhj", rh[:, 0],
+                       Swkv + u[None, :, :, None] * kv)
+        Snew = jnp.exp(lw[:, 0])[..., None] * Swkv + kv
+        y = y[:, None]                                    # (B,1,nh,hd)
+        new_wkv = Snew
+    else:
+        pad = (-S) % chunk
+        def padt(a):
+            return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        rp, kp, vp, lwp = map(padt, (rh, kh, vh, lw))
+        nck = (S + pad) // chunk
+        def tochunks(a):
+            return a.reshape(B, nck, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+        rc, kc, vc, lc = map(tochunks, (rp, kp, vp, lwp))
+
+        def chunk_step(Sc, inp):
+            rk, kk, vk, lk = inp                          # (B,c,nh,hd)
+            cum = jnp.cumsum(lk, axis=1)                  # ≤ 0, decreasing
+            total = cum[:, -1]                            # (B,nh,hd)
+            # inter-chunk: r_i decayed to chunk start
+            rdec = rk * jnp.exp(cum - lk)                 # decay *before* t
+            y_inter = jnp.einsum("bihk,bhkv->bihv", rdec, Sc)
+            # intra-chunk: scores_ij = Σ_k r_i w^(i-1..j) k_j  (j < i)
+            a_i = rk * jnp.exp(cum - lk)
+            b_j = kk * jnp.exp(-cum)
+            scores = jnp.einsum("bihk,bjhk->bhij", a_i, b_j)
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+            scores = scores * mask[None, None]
+            y_intra = jnp.einsum("bhij,bjhv->bihv", scores, vk)
+            # same-step bonus term: (Σ_k r·u·k) v
+            y_diag = (rk * u[None, None] * kk).sum(-1, keepdims=True) * vk
+            # state to chunk end
+            kdec = kk * jnp.exp(total[:, None] - cum)
+            S_new = (jnp.exp(total)[..., None] * Sc
+                     + jnp.einsum("bjhk,bjhv->bhkv", kdec, vk))
+            return S_new, y_inter + y_intra + y_diag
+
+        S0 = st["wkv"]
+        S_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0,
+                                   (rc, kc, vc, lc), unroll=unroll)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nck * chunk, nh, hd)[:, :S]
+        new_wkv = S_final
+
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(y, params["gn"], cfg.norm_eps)            # group-norm stand-in
+    y = y * jax.nn.silu(g)
+    y = shard(y, "batch", None, "heads")
+    tm_out = linear(y, params["wo"])
+    x = x + tm_out
+    new_shift_t = xn[:, -1]
+
+    # ---------------- channel mix ----------------
+    xc = rmsnorm(x, params["ln_c"], cfg.norm_eps)
+    xcprev = _token_shift(xc, st["shift_c"].astype(xc.dtype))
+    xm = _mix(xc, xcprev, params["mu_c"])
+    kk = jnp.square(jax.nn.relu(linear(xm, params["ck"])))
+    kk = shard(kk, "batch", None, "mlp")
+    cm = linear(kk, params["cv"]) * jax.nn.sigmoid(linear(xm, params["cr"]))
+    out = x + cm
+    new_state = {"wkv": new_wkv, "shift_t": new_shift_t.astype(jnp.bfloat16),
+                 "shift_c": xc[:, -1].astype(jnp.bfloat16)}
+    return out, new_state

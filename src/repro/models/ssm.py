@@ -1,0 +1,158 @@
+"""Mamba2 (SSD) block — the state-space half of the Zamba2 hybrid.
+
+Training uses the chunked SSD form (Mamba2 paper §6): within a chunk the
+scalar-decay linear recurrence is evaluated as a masked quadratic
+("attention-like") term; across chunks a short ``lax.scan`` carries the
+(heads, d_head, d_state) state.  All decay algebra runs in fp32 log-space.
+
+Decode is the exact O(1) recurrence — this is what makes the ``long_500k``
+cell runnable for the hybrid/ssm archs (state size is independent of
+context length).
+
+Sharding: heads → ``model`` axis; state tensors follow their head axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ParamSpec, linear, rmsnorm, shard
+
+__all__ = ["mamba2_specs", "mamba2_apply", "init_mamba_state"]
+
+_CONV_K = 4
+
+
+def mamba2_specs(cfg) -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head
+    ns = cfg.ssm_state
+    return {
+        "ln": ParamSpec((d,), (None,), cfg.dtype, init="ones"),
+        # fused input projection: [x_in, z(gate), B, C, dt]
+        "w_in": ParamSpec((d, 2 * din + 2 * ns + nh), ("embed", "heads"), cfg.dtype),
+        "conv_w": ParamSpec((_CONV_K, din + 2 * ns), (None, "heads"), cfg.dtype,
+                            scale=0.5),
+        "a_log": ParamSpec((nh,), ("heads",), "float32", init="zeros"),
+        "dt_bias": ParamSpec((nh,), ("heads",), "float32", init="zeros"),
+        "d_skip": ParamSpec((nh,), ("heads",), "float32", init="ones"),
+        "w_out": ParamSpec((din, d), ("heads", "embed"), cfg.dtype),
+        "out_ln": ParamSpec((din,), ("heads",), cfg.dtype, init="ones"),
+    }
+
+
+def init_mamba_state(cfg, batch: int):
+    din = cfg.ssm_expand * cfg.d_model
+    nh = din // cfg.ssm_head
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_head, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, _CONV_K - 1, din + 2 * cfg.ssm_state),
+                          jnp.bfloat16),
+    }
+
+
+def _split_proj(proj, din, ns, nh):
+    xin = proj[..., :din]
+    z = proj[..., din:2 * din]
+    B = proj[..., 2 * din:2 * din + ns]
+    C = proj[..., 2 * din + ns:2 * din + 2 * ns]
+    dt = proj[..., 2 * din + 2 * ns:]
+    return xin, z, B, C, dt
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv, kernel _CONV_K.  u: (B,S,C); w: (K,C)."""
+    if state is None:
+        pad = jnp.zeros((u.shape[0], _CONV_K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+              for i in range(_CONV_K))
+    new_state = ext[:, -(_CONV_K - 1):] if _CONV_K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_apply(params, x, cfg, *, mode: str, state=None,
+                 chunk: int = 256, unroll: bool = False):
+    """Returns (out, new_state).  x: (B,S,d)."""
+    B_, S, d = x.shape
+    din = cfg.ssm_expand * d
+    nh = din // cfg.ssm_head
+    hd = cfg.ssm_head
+    ns = cfg.ssm_state
+
+    xn = rmsnorm(x, params["ln"], cfg.norm_eps)
+    proj = linear(xn, params["w_in"])
+    xin, z, Bm, Cm, dt = _split_proj(proj, din, ns, nh)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, params["conv_w"],
+        None if state is None else state["conv"])
+    xin, Bm, Cm = (conv_out[..., :din], conv_out[..., din:din + ns],
+                   conv_out[..., din + ns:])
+    xh = xin.reshape(B_, S, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])            # (B,S,nh) > 0
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))    # (nh,) < 0
+    la = dt * a[None, None, :]                           # log-decay ≤ 0
+    xdt = xh.astype(jnp.float32) * dt[..., None]         # dt-weighted input
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    if mode == "decode":
+        assert state is not None
+        h = state["ssm"]
+        dec = jnp.exp(la)                                # (B,S=1,nh)
+        h = (h * dec[:, 0, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xdt[:, 0], Bf[:, 0]))
+        y = jnp.einsum("bhpn,bn->bhp", h, Cf[:, 0])[:, None]
+        new_state = {"ssm": h, "conv": conv_state}
+    else:
+        pad = (-S) % chunk
+        if pad:
+            xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            la = jnp.pad(la, ((0, 0), (0, pad), (0, 0)))
+            Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+            Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        nck = (S + pad) // chunk
+        xc = xdt.reshape(B_, nck, chunk, nh, hd).transpose(1, 0, 2, 3, 4)
+        lac = la.reshape(B_, nck, chunk, nh).transpose(1, 0, 2, 3)
+        Bc = Bf.reshape(B_, nck, chunk, ns).transpose(1, 0, 2, 3)
+        Cc = Cf.reshape(B_, nck, chunk, ns).transpose(1, 0, 2, 3)
+
+        def chunk_step(h, inp):
+            xk, lak, Bk, Ck = inp
+            cum = jnp.cumsum(lak, axis=1)                 # (B,c,nh)
+            total = cum[:, -1]                            # (B,nh)
+            # intra-chunk quadratic term (masked decay kernel)
+            decay_ij = jnp.exp(jnp.clip(
+                cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0))
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+            scores = (jnp.einsum("bin,bjn->bij", Ck, Bk)[:, :, :, None]
+                      * decay_ij * mask[None, :, :, None])
+            y_intra = jnp.einsum("bijh,bjhp->bihp", scores, xk)
+            # inter-chunk: contribution of the carried state
+            y_inter = jnp.einsum("bhpn,bin,bih->bihp",
+                                 h, Ck, jnp.exp(cum))
+            # state update to chunk end
+            wj = jnp.exp(jnp.clip(total[:, None] - cum, -60.0, 0.0))
+            h_new = (h * jnp.exp(total)[..., None, None]
+                     + jnp.einsum("bjhp,bjn,bjh->bhpn", xk, Bk, wj))
+            return h_new, y_intra + y_inter
+
+        h0 = (jnp.zeros((B_, nh, hd, ns), jnp.float32)
+              if state is None else state["ssm"])
+        h_final, ys = jax.lax.scan(jax.checkpoint(chunk_step), h0,
+                                   (xc, lac, Bc, Cc), unroll=unroll)
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B_, nck * chunk, nh, hd)
+        y = y[:, :S]
+        new_state = {"ssm": h_final, "conv": conv_state}
+
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, S, din)
+    y = rmsnorm(y.astype(x.dtype), params["out_ln"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    y = shard(y, "batch", None, "heads")
+    return linear(y, params["w_out"]), new_state

@@ -1,0 +1,1 @@
+"""Optimizers + distributed-optimization tricks (gradient compression)."""

@@ -1,0 +1,113 @@
+"""Adafactor (Shazeer & Stern, arXiv:1804.04235) — factored second moments.
+
+The memory-bound cells (llama3-405b, internvl2-76b train) cannot afford
+full Adam moments even in bf16 on a 256-chip v5e pod: params + m + v + grad
+accumulator ≥ 12.7 GB/chip before a single activation.  Adafactor stores
+the second moment of an (n, m) matrix as a row vector + column vector
+(rank-1 reconstruction), reducing optimizer state from 2×params to
+~params·(1/n + 1/m) (+ optional bf16 first moment).
+
+Used by ``RunConfig.optimizer = "adafactor"``; same (init/update) interface
+as :mod:`repro.optim.adamw`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import global_norm, lr_schedule, AdamWConfig
+
+__all__ = ["AdafactorConfig", "adafactor_init", "adafactor_update"]
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 3e-4
+    decay: float = 0.8            # v decay exponent: 1 - step^-decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0   # update RMS clip (Adafactor §6)
+    weight_decay: float = 0.0
+    beta1: float = 0.0            # 0 → no first moment stored
+    moments_dtype: str = "bfloat16"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+    # mirror AdamWConfig's schedule interface
+    @property
+    def b1(self):
+        return self.beta1
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params, cfg: AdafactorConfig):
+    dt = jnp.dtype(cfg.moments_dtype)
+
+    def v_state(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    state = {"v": jax.tree.map(v_state, params,
+                               is_leaf=lambda x: hasattr(x, "shape")),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.beta1 > 0:
+        state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return state
+
+
+def adafactor_update(params, grads, opt_state, cfg: AdafactorConfig):
+    step = opt_state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay)
+    sched = AdamWConfig(lr=cfg.lr, warmup_steps=cfg.warmup_steps,
+                        total_steps=cfg.total_steps)
+    lr = lr_schedule(sched, step)
+    gnorm = global_norm(grads)
+
+    def upd(p, g, v, m):
+        g = g.astype(jnp.float32)
+        g2 = g * g + cfg.eps
+        if _factored(p.shape):
+            vr = v["vr"] * beta2 + g2.mean(axis=-1) * (1 - beta2)
+            vc = v["vc"] * beta2 + g2.mean(axis=-2) * (1 - beta2)
+            new_v = {"vr": vr, "vc": vc}
+            denom = (vr / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True), cfg.eps))[..., None] \
+                * vc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, cfg.eps))
+        else:
+            nv = v["v"] * beta2 + g2 * (1 - beta2)
+            new_v = {"v": nv}
+            u = g * jax.lax.rsqrt(jnp.maximum(nv, cfg.eps))
+        # RMS clip
+        rms = jnp.sqrt(jnp.mean(u * u) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if m is not None:
+            m32 = m.astype(jnp.float32) * cfg.beta1 + u * (1 - cfg.beta1)
+            u = m32
+            new_m = m32.astype(m.dtype)
+        else:
+            new_m = None
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        return newp, new_v, new_m
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    flat_m = (tdef.flatten_up_to(opt_state["mu"])
+              if "mu" in opt_state else [None] * len(flat_p))
+    out = [upd(p, g, v, m)
+           for p, g, v, m in zip(flat_p, flat_g, flat_v, flat_m)]
+    new_state = {"v": tdef.unflatten([o[1] for o in out]), "step": step}
+    if "mu" in opt_state:
+        new_state["mu"] = tdef.unflatten([o[2] for o in out])
+    return (tdef.unflatten([o[0] for o in out]), new_state,
+            {"grad_norm": gnorm, "lr": lr})

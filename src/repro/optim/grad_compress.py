@@ -1,0 +1,96 @@
+"""Error-bounded gradient compression for the slow inter-pod links.
+
+The framework-plane reuse of the paper's quantization stage (DESIGN.md §4):
+on a multi-pod mesh the ``pod`` axis crosses DCN, ~10–30× slower than ICI.
+We reduce gradients hierarchically:
+
+  1. full-precision ``psum`` *within* a pod (fast ICI, unchanged), then
+  2. per-group int8 quantization (``repro.kernels.qdq`` semantics — groups
+     are the unit blocks of TAC, scales its per-level error bounds), an
+     **int8 all-gather across pods** (4× less DCN traffic than f32), local
+     dequant + mean, and
+  3. **error feedback**: the quantization residual is carried into the
+     next step's gradient, so compression error does not bias convergence
+     (EF-SGD/EF21 family).
+
+The public entry is :func:`compress_pod_reduce`, used inside the
+``shard_map``-based train step (manual over ``pod``/``data``, auto over
+``model``).  On a single-pod mesh it degrades to the plain psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_tree", "dequantize_tree", "compress_pod_reduce",
+           "init_error_feedback"]
+
+_GROUP = 256
+
+
+def _quant_leaf(g):
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % _GROUP
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    grp = flat.reshape(-1, _GROUP)
+    amax = jnp.max(jnp.abs(grp), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.rint(grp / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_leaf(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def quantize_tree(grads):
+    qs = jax.tree.map(lambda g: _quant_leaf(g), grads)
+    return qs
+
+
+def dequantize_tree(qs, shapes):
+    return jax.tree.map(lambda qv, sh: _dequant_leaf(qv[0], qv[1], sh),
+                        qs, shapes, is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and hasattr(x[0], "dtype"))
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_pod_reduce(grads, ef, *, pod_axis: str | None, n_pods: int):
+    """Hierarchically reduce ``grads`` across pods with int8 transport.
+
+    Called inside ``shard_map`` where ``pod_axis`` is a manual axis.  The
+    within-pod (data-axis) reduction must already have happened.  Returns
+    (reduced grads, new error-feedback state).
+    """
+    if pod_axis is None or n_pods <= 1:
+        return grads, ef
+
+    def one(g, e):
+        gc = g.astype(jnp.float32) + e          # apply error feedback
+        q, scale = _quant_leaf(gc)
+        local_deq = _dequant_leaf(q, scale, g.shape)
+        new_e = gc - local_deq                  # residual carried forward
+        # int8 codes + f32 scales cross the DCN (4×/16× smaller than f32)
+        q_all = jax.lax.all_gather(q, pod_axis)          # (pods, …)
+        s_all = jax.lax.all_gather(scale, pod_axis)
+        deq = jnp.mean(
+            q_all.astype(jnp.float32) * s_all[..., None], axis=0)
+        flat = deq.reshape(-1)
+        n = 1
+        for s in g.shape:
+            n *= s
+        return flat[:n].reshape(g.shape).astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

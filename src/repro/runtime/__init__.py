@@ -1,0 +1,1 @@
+"""Resilience runtime: preemption, watchdog/straggler detection, injection."""

@@ -1,0 +1,1 @@
+"""Serving: prefill/decode steps, batched engine, compressed KV cache."""

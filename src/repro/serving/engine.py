@@ -1,0 +1,119 @@
+"""Batched serving engine: prefill + iterative decode with a (optionally
+int8-quantized) KV cache / recurrent state.
+
+``make_prefill_step`` / ``make_serve_step`` are the jit'd units the
+dry-run lowers for the ``prefill_32k`` / ``decode_32k`` / ``long_500k``
+cells.  :class:`ServingEngine` wires them into a minimal batched loop
+(greedy or temperature sampling) for the examples and integration tests.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models import model as M
+from ..models.layers import mesh_context
+from .kv_cache import quantize_prefill_cache
+
+__all__ = ["make_prefill_step", "make_serve_step", "ServingEngine"]
+
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,
+                      *, q_chunk=512, kv_chunk=1024, unroll_scans=False):
+    def prefill(params, batch):
+        ctx = mesh_context(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            kw = ({"tokens": batch["tokens"]} if cfg.input_mode == "tokens"
+                  else {"embeds": batch["embeds"]})
+            logits, aux = M.forward(params, cfg, mode="prefill",
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                    unroll_scans=unroll_scans, **kw)
+            state = aux["state"]
+            if run.kv_quant:
+                state = quantize_prefill_cache(cfg, state)
+        return logits[:, -1], state
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,
+                    *, kv_chunk=1024, unroll_scans=False):
+    """One decode step: (params, state, token, cache_len) → (logits, state)."""
+    def serve(params, state, batch, cache_len):
+        ctx = mesh_context(mesh, rules) if mesh is not None else _null()
+        with ctx:
+            kw = ({"tokens": batch["tokens"]} if cfg.input_mode == "tokens"
+                  else {"embeds": batch["embeds"]})
+            logits, aux = M.forward(params, cfg, mode="decode", state=state,
+                                    cache_len=cache_len, q_chunk=1,
+                                    kv_chunk=kv_chunk,
+                                    unroll_scans=unroll_scans, **kw)
+        return logits[:, -1], aux["state"]
+
+    return serve
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+@dataclass
+class ServingEngine:
+    """Minimal batched generation loop over the jit'd steps."""
+
+    cfg: ModelConfig
+    run: RunConfig
+    max_len: int = 256
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_step(self.cfg, self.run))
+        self._decode = jax.jit(make_serve_step(self.cfg, self.run))
+
+    def generate(self, params, prompts: jnp.ndarray, *, new_tokens: int,
+                 greedy: bool = True, key=None):
+        """prompts: (B, P) token ids.  Returns (B, new_tokens) ids."""
+        B, P = prompts.shape
+        capacity = P + new_tokens
+        logits, state = self._prefill(params, {"tokens": prompts})
+        # grow the prefill cache (capacity P) to full capacity
+        state = self._grow_cache(state, capacity - P)
+        outs = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for i in range(new_tokens):
+            outs.append(tok)
+            logits, state = self._decode(
+                params, state, {"tokens": tok[:, None]}, jnp.int32(P + i))
+            if greedy or key is None:
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits).astype(jnp.int32)
+        return jnp.stack(outs, axis=1)
+
+    def _grow_cache(self, state, extra: int):
+        """Pad the cache seq axis from prefill capacity to full capacity.
+
+        Every cache leaf is stacked (layers/groups, B, S, ...) — the seq
+        axis is always index 2 (k/v: (L,B,S,H,hd); scales: (L,B,S,H))."""
+        if extra <= 0:
+            return state
+
+        def grow(a):
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, extra)
+            return jnp.pad(a, pad)
+
+        if self.cfg.family == "ssm":
+            return state
+        if self.cfg.family == "hybrid":
+            return {"mamba": state["mamba"],
+                    "kv": jax.tree.map(grow, state["kv"])}
+        return jax.tree.map(grow, state)

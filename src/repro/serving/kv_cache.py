@@ -1,0 +1,41 @@
+"""KV-cache compression utilities (int8 + per-(token, head) scales).
+
+The serve-time analogue of the paper's quantization stage: each (token,
+head) vector is a "unit block" with its own scale (= local error bound),
+mirroring TAC's per-block adaptivity.  Decode-time append/dequant lives in
+``repro.models.attention``; this module converts a bf16 prefill cache into
+the quantized layout and provides standalone (de)quantizers for tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_kv", "dequantize_kv", "quantize_prefill_cache"]
+
+
+def quantize_kv(x):
+    """x: (..., S, H, hd) → (int8 codes, fp32 scales (..., S, H))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def quantize_prefill_cache(cfg, state):
+    """Convert a prefill-produced bf16 cache tree to the int8 layout."""
+    def conv(kv):
+        kq, ks = quantize_kv(kv["k"])
+        vq, vs = quantize_kv(kv["v"])
+        return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+
+    if cfg.family == "hybrid":
+        return {"mamba": state["mamba"], "kv": conv(state["kv"])}
+    if cfg.family == "ssm":
+        return state
+    return conv(state)

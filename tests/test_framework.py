@@ -1,0 +1,269 @@
+"""Framework integration: training loop, checkpoint/restore (lossless +
+lossy + elastic), resilience (preemption, failure injection, watchdog),
+gradient compression, serving engine, sharding rules."""
+import os
+import tempfile
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import RunConfig, smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import amr_token_batches, lm_batches
+from repro.launch.mesh import make_smoke_mesh
+from repro.launch.sharding import rules_for
+from repro.launch.train import init_train_state, make_train_step, train_loop
+from repro.optim.adamw import AdamWConfig
+from repro.optim.grad_compress import (compress_pod_reduce,
+                                       init_error_feedback)
+
+CFG = smoke_config("deepseek_7b")
+SHAPE = ShapeConfig("t", "train", seq_len=32, global_batch=4)
+KEY = jax.random.PRNGKey(0)
+
+
+def _loop(steps, ckpt_dir=None, **kw):
+    run = RunConfig(microbatches=1)
+    mesh = make_smoke_mesh()
+    return train_loop(CFG, run, mesh, lm_batches(CFG, SHAPE, seed=0),
+                      steps=steps, opt_cfg=AdamWConfig(lr=1e-3),
+                      checkpoint_dir=ckpt_dir, checkpoint_every=5,
+                      log_every=2, **kw)
+
+
+def test_loss_decreases():
+    _, _, hist = _loop(20)
+    assert hist[-1][1] < hist[0][1]
+
+
+def test_microbatch_equivalence():
+    """mb=1 and mb=2 produce (nearly) the same update for the same batch."""
+    mesh = make_smoke_mesh()
+    opt_cfg = AdamWConfig(lr=1e-3)
+    batch = next(lm_batches(CFG, SHAPE, seed=0))
+    outs = []
+    for mb in (1, 2):
+        run = RunConfig(microbatches=mb)
+        step, _, _ = make_train_step(CFG, run, mesh, opt_cfg)
+        params, opt_state = init_train_state(CFG, run, mesh, KEY, opt_cfg)
+        p2, _, m = jax.jit(step)(params, opt_state, batch)
+        outs.append((np.asarray(jax.tree.leaves(p2)[0], np.float32),
+                     float(m["loss"])))
+    np.testing.assert_allclose(outs[0][1], outs[1][1], rtol=1e-3)
+    np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=2e-2, atol=2e-4)
+
+
+def test_checkpoint_roundtrip_and_resume():
+    with tempfile.TemporaryDirectory() as d:
+        p1, o1, h1 = _loop(6, ckpt_dir=d)
+        # fresh loop resumes from step 5 checkpoint
+        p2, o2, h2 = _loop(8, ckpt_dir=d)
+        assert h2[0][0] >= 5
+
+
+def test_checkpoint_lossy_mode_bounds_error():
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.models.model import model_specs
+    from repro.models.layers import init_from_specs
+
+    params = init_from_specs(model_specs(CFG), KEY)
+    # trained weights have structure; random init doesn't compress.  Give
+    # every big tensor a smooth low-rank component so the size comparison
+    # reflects the real use case.
+    def smooth(p):
+        if p.ndim >= 2 and p.size > 4096:
+            r = jnp.arange(p.shape[-2], dtype=jnp.float32)
+            c = jnp.arange(p.shape[-1], dtype=jnp.float32)
+            field = jnp.sin(r[:, None] / 9.0) * jnp.cos(c[None, :] / 7.0)
+            return (field * 0.02 + 0.001 * p.astype(jnp.float32)
+                    ).astype(p.dtype)
+        return p
+
+    params = jax.tree.map(smooth, params)
+    opt = {"step": jnp.zeros((), jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, lossy_eb_rel=1e-3)
+        mgr.save(1, params, opt, blocking=True)
+        size = os.path.getsize(os.path.join(d, "step_00000001.npz"))
+        rp, ro, step = mgr.restore(1)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rp)):
+            dt = a.dtype
+            a = np.asarray(a, np.float32)
+            b = np.asarray(b, np.float32)
+            rng = np.abs(a).max()
+            if a.size > 4096 and a.ndim >= 2 and rng > 0:
+                # bound + half-ulp of the output dtype (bf16: 2^-9 rel)
+                ulp = 2.0 ** -9 if str(dt) == "bfloat16" else 2.0 ** -24
+                assert np.abs(a - b).max() <= (1e-3 + ulp) * rng * (1 + 1e-3)
+            else:
+                np.testing.assert_array_equal(a, b)
+        # lossless copy for size comparison
+        mgr2 = CheckpointManager(d + "_ll", lossy_eb_rel=0.0)
+        os.makedirs(d + "_ll", exist_ok=True)
+        mgr2.save(1, params, opt, blocking=True)
+        size_ll = os.path.getsize(os.path.join(d + "_ll",
+                                               "step_00000001.npz"))
+        assert size < size_ll  # lossy is actually smaller
+
+
+def test_checkpoint_corruption_detected():
+    from repro.checkpoint.manager import CheckpointManager
+
+    params = {"w": jnp.ones((8, 8), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d)
+        mgr.save(1, params, {"step": jnp.zeros((), jnp.int32)},
+                 blocking=True)
+        # flip bytes in the npz payload
+        f = os.path.join(d, "step_00000001.npz")
+        data = bytearray(open(f, "rb").read())
+        data[len(data) // 2] ^= 0xFF
+        open(f, "wb").write(bytes(data))
+        with pytest.raises(Exception):
+            mgr.restore(1)
+
+
+def test_preemption_checkpoint_and_stop():
+    from repro.runtime.resilience import PreemptionGuard
+
+    g = PreemptionGuard(signals=())
+    assert not g.should_stop
+    g.trigger()
+    assert g.should_stop
+
+
+def test_failure_injection_and_restart_recovery():
+    from repro.runtime.resilience import FailureInjector, SimulatedFailure
+
+    inj = FailureInjector(fail_at_step=3)
+    with tempfile.TemporaryDirectory() as d:
+        mesh = make_smoke_mesh()
+        run = RunConfig()
+        opt_cfg = AdamWConfig(lr=1e-3)
+        step_fn, _, _ = make_train_step(CFG, run, mesh, opt_cfg)
+        jit_step = jax.jit(step_fn)
+        params, opt_state = init_train_state(CFG, run, mesh, KEY, opt_cfg)
+        from repro.checkpoint.manager import CheckpointManager
+        mgr = CheckpointManager(d)
+        data = lm_batches(CFG, SHAPE, seed=0)
+        try:
+            for s in range(6):
+                inj.check(s)
+                params, opt_state, m = jit_step(params, opt_state,
+                                                next(data))
+                mgr.save(s + 1, params, opt_state, blocking=True)
+        except SimulatedFailure:
+            pass
+        # recovery: restart from latest checkpoint (step 3)
+        restored = mgr.restore_latest()
+        assert restored is not None and restored[2] == 3
+
+
+def test_watchdog_flags_stragglers():
+    import time
+    from repro.runtime.resilience import StepWatchdog
+
+    wd = StepWatchdog(straggler_factor=5.0)
+    for s in range(8):
+        with wd.step(s):
+            time.sleep(0.06 if s == 7 else 0.002)
+    assert any(i == 7 for i, _, _ in wd.stragglers)
+
+
+def test_grad_compress_error_bound_and_feedback():
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .standard_normal((64, 64)).astype(np.float32))}
+    ef = init_error_feedback(g)
+    out, ef2 = compress_pod_reduce(g, ef, pod_axis=None, n_pods=1)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
+    # quantization with error feedback: residual is exactly what was lost
+    from repro.optim.grad_compress import _dequant_leaf, _quant_leaf
+    q, s = _quant_leaf(g["w"])
+    deq = _dequant_leaf(q, s, g["w"].shape)
+    resid = np.asarray(g["w"]) - np.asarray(deq)
+    scale_per_el = np.repeat(np.asarray(s), 256)[:64 * 64].reshape(64, 64)
+    assert (np.abs(resid) <= scale_per_el * 0.5 + 1e-7).all()
+
+
+def test_serving_engine_generates():
+    from repro.serving.engine import ServingEngine
+
+    from repro.models.layers import init_from_specs
+    from repro.models.model import model_specs
+
+    cfg = smoke_config("deepseek_7b")
+    params = init_from_specs(model_specs(cfg), KEY)
+    eng = ServingEngine(cfg, RunConfig())
+    prompts = jnp.asarray(np.arange(12).reshape(2, 6) % cfg.vocab_size,
+                          jnp.int32)
+    out = eng.generate(params, prompts, new_tokens=4)
+    assert out.shape == (2, 4)
+    # greedy generation is deterministic
+    out2 = eng.generate(params, prompts, new_tokens=4)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_kv_quant_decode_close_to_exact():
+    from repro.serving.engine import ServingEngine
+    from repro.models.layers import init_from_specs
+    from repro.models.model import model_specs
+
+    cfg = smoke_config("deepseek_7b")
+    params = init_from_specs(model_specs(cfg), KEY)
+    prompts = jnp.asarray(np.arange(16).reshape(2, 8) % cfg.vocab_size,
+                          jnp.int32)
+    exact = ServingEngine(cfg, RunConfig()).generate(
+        params, prompts, new_tokens=6)
+    quant = ServingEngine(cfg, RunConfig(kv_quant=True)).generate(
+        params, prompts, new_tokens=6)
+    # int8 KV with random-init weights: most greedy tokens agree
+    agree = (np.asarray(exact) == np.asarray(quant)).mean()
+    assert agree >= 0.5, agree
+
+
+class _StubMesh:
+    """Duck-typed 16×16 production mesh for divisibility-rule tests."""
+
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_sharding_rules_fallbacks():
+    from jax.sharding import PartitionSpec as P
+
+    run = RunConfig(fsdp=True)
+    rules = rules_for(_StubMesh(), run)
+    mesh = _StubMesh()
+    # divisible → sharded
+    spec = rules.partition_spec(("embed", "heads"), shape=(32, 32), mesh=mesh)
+    assert spec == P("data", "model")
+    # indivisible (e.g. 24 heads on a 16-wide axis) → replicated for params
+    spec = rules.partition_spec(("embed", "heads"), shape=(32, 24), mesh=mesh)
+    assert spec == P("data")
+    # activations fall back to UNCONSTRAINED instead
+    spec = rules.partition_spec(("batch", "heads"), shape=(7, 24), mesh=mesh,
+                                unconstrained_fallback=True)
+    assert spec[0] is P.UNCONSTRAINED and spec[1] is P.UNCONSTRAINED
+    # batch divisible → (pod,)data
+    spec = rules.partition_spec(("batch", None), shape=(32, 4), mesh=mesh,
+                                unconstrained_fallback=True)
+    assert spec[0] == "data"
+
+
+def test_amr_token_pipeline_bridges_planes():
+    cfg = smoke_config("deepseek_7b")
+    b = next(amr_token_batches(cfg, SHAPE))
+    assert b["tokens"].shape == (4, 32)
+    assert (b["tokens"] >= 0).all() and (b["tokens"] < cfg.vocab_size).all()
+
+
+def test_data_pipeline_deterministic_and_elastic():
+    b1 = next(lm_batches(CFG, SHAPE, seed=3))
+    b2 = next(lm_batches(CFG, SHAPE, seed=3))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # host sharding partitions the batch
+    half = next(lm_batches(CFG, SHAPE, seed=3, host_id=0, n_hosts=2))
+    assert half["tokens"].shape[0] == SHAPE.global_batch // 2

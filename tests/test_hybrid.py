@@ -1,0 +1,109 @@
+"""End-to-end TAC/TAC+ system behaviour: error bounds through every
+strategy, hybrid policy thresholds, SHE accounting, baselines, adaptive eb."""
+import numpy as np
+import pytest
+
+from repro.core import amr, baselines, hybrid, metrics, she
+from repro.core.adaptive_eb import PAPER_RATIOS, level_error_bounds
+from repro.core.blocks import make_block_grid, extract_subblock
+from repro.core.opst import opst_partition
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return amr.synthetic_amr((32, 32, 32), densities=[0.23, 0.77],
+                             refine_block=4, seed=10)
+
+
+@pytest.mark.parametrize("algorithm,she_flag", [
+    ("lor_reg", True), ("lor_reg", False), ("interp", False),
+    ("lorenzo", False)])
+def test_amr_error_bound(ds, algorithm, she_flag):
+    eb = 0.05
+    res = hybrid.compress_amr(ds, eb=eb, unit=4, algorithm=algorithm,
+                              she=she_flag)
+    for lvl, lres in zip(ds.levels, res.levels):
+        err = np.abs(lres.recon[lvl.mask] - lvl.data[lvl.mask])
+        assert err.max() <= eb * (1 + 1e-5), (algorithm, she_flag)
+        # empty regions restored as exact zeros
+        assert (lres.recon[~lvl.mask] == 0).all()
+
+
+@pytest.mark.parametrize("strategy", ["gsp", "opst", "akdtree", "nast"])
+def test_every_strategy_bounds_error(ds, strategy):
+    lvl = ds.levels[0]
+    res = hybrid.compress_level(lvl.data, lvl.mask, eb=0.05, unit=4,
+                                algorithm="lor_reg", she=True,
+                                strategy=strategy)
+    err = np.abs(res.recon[lvl.mask] - lvl.data[lvl.mask])
+    assert err.max() <= 0.05 * (1 + 1e-5)
+
+
+def test_hybrid_policy_thresholds():
+    assert hybrid.choose_strategy(0.3, algorithm="lor_reg", she=True) == "opst"
+    assert hybrid.choose_strategy(0.7, algorithm="lor_reg", she=True) == "akdtree"
+    assert hybrid.choose_strategy(0.3, algorithm="interp", she=False) == "opst"
+    assert hybrid.choose_strategy(0.7, algorithm="interp", she=False) == "akdtree"
+    assert hybrid.choose_strategy(0.9, algorithm="interp", she=False) == "gsp"
+
+
+def test_per_level_adaptive_eb(ds):
+    ebs = level_error_bounds(0.1, ds.n_levels, metric="power_spectrum")
+    assert len(ebs) == 2 and ebs[0] == 0.1
+    assert abs(ebs[0] / ebs[1] - PAPER_RATIOS["power_spectrum"]) < 1e-6
+    res = hybrid.compress_amr(ds, eb=ebs, unit=4)
+    for lvl, lres, eb in zip(ds.levels, res.levels, ebs):
+        assert np.abs(lres.recon[lvl.mask] - lvl.data[lvl.mask]).max() \
+            <= eb * (1 + 1e-5)
+    assert abs(level_error_bounds(1.0, 2, metric="halo_finder")[0]
+               / level_error_bounds(1.0, 2, metric="halo_finder")[1]
+               - PAPER_RATIOS["halo_finder"]) < 1e-6
+
+
+def test_she_beats_per_block_codebooks(ds):
+    """Alg. 4's point: one shared tree vs a tree per block."""
+    lvl = ds.levels[0]
+    grid = make_block_grid(lvl.data, lvl.mask, unit=4)
+    bricks = [extract_subblock(grid, sb) for sb in opst_partition(grid)]
+    assert len(bricks) > 10
+    shared = she.she_encode(bricks, 0.05, shared=True)
+    separate = she.she_encode(bricks, 0.05, shared=False)
+    assert shared.codebook_bits < separate.codebook_bits
+    assert (shared.payload_bits + shared.codebook_bits
+            <= separate.payload_bits + separate.codebook_bits)
+
+
+def test_baselines_error_bound(ds):
+    eb = 0.05
+    for res in (baselines.compress_1d_naive(ds, eb),
+                baselines.compress_zmesh(ds, eb),
+                baselines.compress_3d_baseline(ds, eb)):
+        for lvl, lres in zip(ds.levels, res.levels):
+            err = np.abs(lres.recon[lvl.mask] - lvl.data[lvl.mask])
+            assert err.max() <= eb * (1 + 1e-5), res.method
+
+
+def test_zmesh_order_is_complete_permutation(ds):
+    stream, idx, tags = baselines.zmesh_order(ds)
+    assert stream.size == ds.total_values()
+    for lvl, ix in zip(ds.levels, idx):
+        assert ix.size == lvl.n_valid
+        assert np.unique(ix).size == ix.size
+
+
+def test_compression_accounting_consistency(ds):
+    res = hybrid.compress_amr(ds, eb=0.05, unit=4)
+    assert res.total_bits == sum(l.total_bits for l in res.levels)
+    assert res.compression_ratio() == pytest.approx(
+        res.n_values * 32 / res.total_bits)
+    assert res.bit_rate() == pytest.approx(res.total_bits / res.n_values)
+
+
+def test_tiling_and_densities():
+    for name in ("run1_z10", "run3_z1", "warpx_800"):
+        ds = amr.load_preset(name)
+        assert ds.check_tiling()
+        target = amr.NYX_LIKE_PRESETS[name]["densities"]
+        got = ds.densities()
+        for t, g in zip(target, got):
+            assert abs(t - g) < 0.05, (name, target, got)

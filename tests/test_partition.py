@@ -1,0 +1,117 @@
+"""Partition strategies: tiling invariants (DESIGN.md §8.2), DP
+correctness, GSP pad/unpad roundtrip — property-based on random occupancy."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.akdtree import akdtree_partition
+from repro.core.blocks import make_block_grid, subblocks_tile_exactly
+from repro.core.gsp import gsp_pad, gsp_unpad
+from repro.core.nast import nast_meta_bits, nast_pack, nast_unpack
+from repro.core.opst import compute_bs, opst_partition
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _random_grid(seed, bshape=(6, 6, 6), unit=4, density=0.4):
+    rng = np.random.default_rng(seed)
+    occ = rng.random(bshape) < density
+    data = np.zeros(tuple(b * unit for b in bshape), np.float32)
+    mask = np.repeat(np.repeat(np.repeat(occ, unit, 0), unit, 1), unit, 2)
+    data[mask] = rng.standard_normal(int(mask.sum())).astype(np.float32) + 5.0
+    return make_block_grid(data, mask, unit=unit)
+
+
+@given(seed=st.integers(0, 5000), density=st.floats(0.05, 0.95))
+def test_opst_tiles_exactly(seed, density):
+    grid = _random_grid(seed, density=density)
+    sbs = opst_partition(grid)
+    assert subblocks_tile_exactly(grid, sbs)
+
+
+@given(seed=st.integers(0, 5000), density=st.floats(0.05, 0.95))
+def test_akdtree_tiles_exactly(seed, density):
+    grid = _random_grid(seed, density=density)
+    sbs = akdtree_partition(grid)
+    assert subblocks_tile_exactly(grid, sbs)
+
+
+@given(seed=st.integers(0, 5000))
+def test_akdtree_elongated_grids(seed):
+    grid = _random_grid(seed, bshape=(3, 12, 5), density=0.5)
+    sbs = akdtree_partition(grid)
+    assert subblocks_tile_exactly(grid, sbs)
+
+
+@given(seed=st.integers(0, 5000))
+def test_bs_dp_is_maximal_cube(seed):
+    """BS(x,y,z) must equal the true max cube edge ending at (x,y,z)."""
+    rng = np.random.default_rng(seed)
+    occ = rng.random((5, 5, 5)) < 0.6
+    bs = compute_bs(occ)
+    for x in range(5):
+        for y in range(5):
+            for z in range(5):
+                best = 0
+                for s in range(1, min(x, y, z) + 2):
+                    if occ[x - s + 1:x + 1, y - s + 1:y + 1,
+                           z - s + 1:z + 1].all():
+                        best = s
+                assert bs[x, y, z] == best, (x, y, z)
+
+
+def test_opst_extracts_large_cubes_first():
+    occ = np.zeros((6, 6, 6), bool)
+    occ[:4, :4, :4] = True       # one 4³ cube
+    occ[5, 5, 5] = True          # plus an isolated block
+    data = np.zeros((24, 24, 24), np.float32)
+    mask = np.repeat(np.repeat(np.repeat(occ, 4, 0), 4, 1), 4, 2)
+    data[mask] = 1.0
+    grid = make_block_grid(data, mask, unit=4)
+    sbs = opst_partition(grid)
+    sizes = sorted((sb.bsize for sb in sbs), reverse=True)
+    assert sizes[0] == (4, 4, 4)
+    assert subblocks_tile_exactly(grid, sbs)
+
+
+def test_akdtree_leaves_are_full():
+    grid = _random_grid(3, density=0.5)
+    for sb in akdtree_partition(grid):
+        x, y, z = sb.origin
+        dx, dy, dz = sb.bsize
+        assert grid.occ[x:x + dx, y:y + dy, z:z + dz].all()
+
+
+@given(seed=st.integers(0, 5000), density=st.floats(0.3, 0.98))
+def test_gsp_roundtrip_restores_zeros(seed, density):
+    grid = _random_grid(seed, density=density)
+    padded, g = gsp_pad(grid.data, grid.mask, unit=grid.unit)
+    # padding only touches empty blocks
+    occ_cells = np.repeat(np.repeat(np.repeat(
+        g.occ, g.unit, 0), g.unit, 1), g.unit, 2)
+    assert (padded[occ_cells] == g.data[occ_cells]).all()
+    # unpad restores exact zeros outside
+    rec = gsp_unpad(padded, g)
+    assert (rec[~occ_cells] == 0).all()
+    assert (rec[occ_cells] == g.data[occ_cells]).all()
+
+
+def test_gsp_pads_with_neighbor_average():
+    # one non-empty block with constant value 2.0; its empty face neighbor
+    # must be padded with 2.0 in the adjacent m layers
+    occ_data = np.zeros((8, 8, 8), np.float32)
+    occ_data[0:4] = 2.0
+    mask = np.zeros_like(occ_data, bool)
+    mask[0:4] = True
+    padded, g = gsp_pad(occ_data, mask, unit=4)
+    m = min(4 // 2, 4)
+    assert np.allclose(padded[4:4 + m, :4, :4], 2.0)
+
+
+@given(seed=st.integers(0, 5000))
+def test_nast_roundtrip(seed):
+    grid = _random_grid(seed)
+    packed, coords, g = nast_pack(grid.data, grid.mask, unit=grid.unit)
+    rec = nast_unpack(packed, coords, g)
+    assert (rec == g.data).all()
+    assert nast_meta_bits(coords) == coords.shape[0] * 48 + 96

@@ -1,0 +1,132 @@
+"""SZ core: error-bound property (the paper's contract), exact replay,
+Huffman roundtrip.  Property-based via hypothesis."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import huffman, sz
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand_field(shape, seed, scale=10.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def _bound(eb, x):
+    """eb plus the float32-output machine-precision slack (sz.prequant)."""
+    return eb + np.abs(x).max() * 2.0 ** -22
+
+
+# ----------------------------- error bound --------------------------------
+
+@given(seed=st.integers(0, 10_000),
+       eb=st.floats(1e-4, 1.0),
+       shape=st.sampled_from([(8, 8, 8), (13, 7, 9), (16, 16, 16), (5, 5, 5)]))
+def test_error_bound_lorenzo(seed, eb, shape):
+    x = _rand_field(shape, seed)
+    r = sz.compress_lorenzo(x, eb)
+    assert np.abs(r.recon - x).max() <= _bound(eb, x)
+
+
+@given(seed=st.integers(0, 10_000),
+       eb=st.floats(1e-4, 1.0),
+       shape=st.sampled_from([(8, 8, 8), (13, 7, 9), (16, 16, 16)]))
+def test_error_bound_interp(seed, eb, shape):
+    x = _rand_field(shape, seed)
+    r = sz.compress_interp(x, eb)
+    assert np.abs(r.recon - x).max() <= _bound(eb, x)
+
+
+@given(seed=st.integers(0, 10_000),
+       eb=st.floats(1e-4, 1.0),
+       shape=st.sampled_from([(8, 8, 8), (13, 7, 9), (12, 12, 12)]))
+def test_error_bound_lor_reg(seed, eb, shape):
+    x = _rand_field(shape, seed)
+    r = sz.compress_lor_reg(x, eb, block=4)
+    assert np.abs(r.recon - x).max() <= _bound(eb, x)
+
+
+def test_error_bound_4d_bricks():
+    x = _rand_field((3, 8, 8, 8), 0)
+    for fn in (sz.compress_lorenzo, sz.compress_interp, sz.compress_lor_reg):
+        r = fn(x, 0.01)
+        assert np.abs(r.recon - x).max() <= _bound(0.01, x), fn.__name__
+
+
+# ------------------------------ exact replay --------------------------------
+
+@given(seed=st.integers(0, 10_000),
+       shape=st.sampled_from([(7,), (9, 5), (8, 8, 8), (6, 9, 17),
+                              (3, 4, 4, 4)]))
+def test_lorenzo_replay_exact(seed, shape):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-10_000, 10_000, size=shape)
+    assert (sz.lorenzo_nd_recon(sz.lorenzo_nd_codes(q)) == q).all()
+
+
+@given(seed=st.integers(0, 10_000),
+       shape=st.sampled_from([(7,), (9, 5), (8, 8, 8), (6, 9, 17),
+                              (3, 4, 4, 4), (64, 64, 64)]))
+def test_interp_replay_exact(seed, shape):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-10_000, 10_000, size=shape)
+    assert (sz.interp_nd_recon(sz.interp_nd_codes(q)) == q).all()
+
+
+# ------------------------------ entropy stage --------------------------------
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 2000))
+def test_huffman_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    data = rng.zipf(1.6, size=n).astype(np.int64) - 500
+    cb = huffman.build_codebook(data)
+    packed, nbits = huffman.encode(cb, data)
+    out = huffman.decode(cb, packed, nbits, n)
+    assert (out == data).all()
+
+
+def test_huffman_single_symbol():
+    data = np.full(100, 7, np.int64)
+    cb = huffman.build_codebook(data)
+    packed, nbits = huffman.encode(cb, data)
+    assert (huffman.decode(cb, packed, nbits, 100) == data).all()
+    assert nbits == 100  # 1 bit per symbol floor
+
+
+def test_payload_bits_smaller_for_smooth_data():
+    """Smooth data compresses better than noise at the same bound."""
+    t = np.linspace(0, 4 * np.pi, 32 ** 3)
+    smooth = np.sin(t).reshape(32, 32, 32).astype(np.float32)
+    noise = _rand_field((32, 32, 32), 0, scale=1.0)
+    eb = 1e-3
+    assert (sz.compress_lorenzo(smooth, eb).total_bits
+            < sz.compress_lorenzo(noise, eb).total_bits)
+
+
+def test_zstd_helps_constant_field():
+    x = np.ones((32, 32, 32), np.float32)
+    r = sz.compress_lorenzo(x, 1e-3, use_zstd=True)
+    assert r.compression_ratio() > 100  # zstd crushes the all-zero codes
+
+
+def test_lor_reg_picks_regression_on_noisy_planes():
+    """Regression wins on noisy linear ramps: the 3D Lorenzo delta
+    amplifies iid noise ~√8× while the plane fit absorbs the ramp."""
+    rng = np.random.default_rng(0)
+    i, j, k = np.mgrid[0:12, 0:12, 0:12].astype(np.float32)
+    eb = 1e-2
+    x = 3.0 * i + 2.0 * j - k + rng.normal(
+        scale=3 * eb, size=i.shape).astype(np.float32)
+    r = sz.compress_lor_reg(x, eb, block=6)
+    assert r.extras["branch"] == "reg"
+    assert np.abs(r.recon - x).max() <= _bound(eb, x)
+
+    # and Lorenzo wins on a smooth non-linear field
+    t = np.linspace(0, np.pi, 12, dtype=np.float32)
+    smooth = np.sin(t)[:, None, None] * np.cos(t)[None, :, None] \
+        * np.sin(t)[None, None, :]
+    r2 = sz.compress_lor_reg(smooth * 100, 1e-2, block=6)
+    assert r2.extras["branch"] == "lorenzo"
