@@ -26,9 +26,27 @@ from dataclasses import dataclass
 import jax
 import ml_dtypes
 import numpy as np
-import zstandard as zstd
+
+from repro.core import compat
 
 __all__ = ["CheckpointManager"]
+
+# Lossless codec for the lossy-mode code stream: zstd when available,
+# stdlib zlib otherwise (the manifest records which one wrote each blob so
+# checkpoints stay portable across environments).
+_DEFAULT_CODEC = "zstd" if compat.HAVE_ZSTD else "zlib"
+
+
+def _codec_compress(buf: bytes, codec: str = _DEFAULT_CODEC) -> bytes:
+    if codec == "zstd":
+        return compat.zstd_compress(buf)
+    return zlib.compress(buf, 6)
+
+
+def _codec_decompress(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return compat.zstd_decompress(blob)
+    return zlib.decompress(blob)
 
 # numpy's savez cannot round-trip ml_dtypes (bfloat16 etc.) — store them as
 # same-width unsigned views and restore through the recorded dtype string.
@@ -81,16 +99,16 @@ def _lossy_encode(a: np.ndarray, eb_rel: float):
         codes = np.diff(codes, axis=ax, prepend=0)
     if np.abs(codes).max() < 2 ** 15:
         codes16 = codes.astype(np.int16)
-        blob = zstd.ZstdCompressor(level=3).compress(codes16.tobytes())
+        blob = _codec_compress(codes16.tobytes())
         return {"blob": blob, "eb": eb, "dtype": "int16",
-                "shape": a.shape}
-    blob = zstd.ZstdCompressor(level=3).compress(
-        codes.astype(np.int32).tobytes())
-    return {"blob": blob, "eb": eb, "dtype": "int32", "shape": a.shape}
+                "shape": a.shape, "codec": _DEFAULT_CODEC}
+    blob = _codec_compress(codes.astype(np.int32).tobytes())
+    return {"blob": blob, "eb": eb, "dtype": "int32", "shape": a.shape,
+            "codec": _DEFAULT_CODEC}
 
 
 def _lossy_decode(entry, out_dtype) -> np.ndarray:
-    raw = zstd.ZstdDecompressor().decompress(entry["blob"])
+    raw = _codec_decompress(entry["blob"], entry.get("codec", "zstd"))
     codes = np.frombuffer(raw, dtype=entry["dtype"]).astype(np.int64)
     codes = codes.reshape(entry["shape"])
     for ax in range(codes.ndim):
@@ -142,7 +160,8 @@ class CheckpointManager:
                 arrays[key] = np.frombuffer(lossy["blob"], dtype=np.uint8)
                 manifest["lossy"][key] = {
                     "eb": lossy["eb"], "codes_dtype": lossy["dtype"],
-                    "shape": list(lossy["shape"]), "out_dtype": str(a.dtype)}
+                    "shape": list(lossy["shape"]), "out_dtype": str(a.dtype),
+                    "codec": lossy["codec"]}
             else:
                 arrays[key] = _to_storable(a)
             manifest["entries"][key] = {
@@ -201,7 +220,8 @@ class CheckpointManager:
                     a = _lossy_decode(
                         {"blob": a.tobytes(), "eb": li["eb"],
                          "dtype": li["codes_dtype"],
-                         "shape": tuple(li["shape"])},
+                         "shape": tuple(li["shape"]),
+                         "codec": li.get("codec", "zstd")},
                         np.float32)
                     a = a.astype(getattr(ml_dtypes, li["out_dtype"])
                                  if li["out_dtype"] in _VIEW_AS

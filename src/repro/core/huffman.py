@@ -20,6 +20,8 @@ __all__ = [
     "encode",
     "decode",
     "encoded_size_bits",
+    "symbol_indices",
+    "code_lengths_for",
     "codebook_size_bits",
 ]
 
@@ -131,6 +133,31 @@ def encoded_size_bits(cb: Codebook, data: np.ndarray | None = None, *,
     return int(total)
 
 
+def symbol_indices(cb: Codebook, data: np.ndarray) -> np.ndarray:
+    """Vectorized symbol → codebook-row lookup (searchsorted on a
+    symbol-sorted view); raises on symbols outside the codebook."""
+    sym_order = np.argsort(cb.symbols, kind="stable")
+    sorted_syms = cb.symbols[sym_order]
+    pos = np.searchsorted(sorted_syms, data)
+    if (np.any(pos >= len(sorted_syms))
+            or np.any(sorted_syms[np.minimum(pos, len(sorted_syms) - 1)] != data)):
+        raise ValueError("symbol not in codebook")
+    return sym_order[pos]
+
+
+def code_lengths_for(cb: Codebook, data: np.ndarray) -> np.ndarray:
+    """Vectorized per-occurrence code lengths for a symbol stream.
+
+    ``code_lengths_for(cb, data).sum() == encode(cb, data)[1]`` exactly —
+    this is how the batched SHE path prices per-block payloads under the
+    shared codebook without materializing one bitstream per block.
+    """
+    data = np.asarray(data, dtype=np.int64).ravel()
+    if data.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    return cb.lengths[symbol_indices(cb, data)]
+
+
 def codebook_size_bits(cb: Codebook) -> int:
     """Serialized codebook cost: (symbol int32 + length uint8) per entry.
 
@@ -140,29 +167,36 @@ def codebook_size_bits(cb: Codebook) -> int:
     return len(cb.symbols) * (32 + 8)
 
 
-def encode(cb: Codebook, data: np.ndarray) -> tuple[np.ndarray, int]:
-    """Encode a symbol stream.  Returns (packed uint8 bitstream, nbits)."""
+def encode(cb: Codebook, data: np.ndarray, *,
+           indices: np.ndarray | None = None) -> tuple[np.ndarray, int]:
+    """Encode a symbol stream.  Returns (packed uint8 bitstream, nbits).
+
+    ``indices`` may carry a precomputed ``symbol_indices(cb, data)`` so
+    callers that already priced the stream skip the second lookup pass.
+    """
     data = np.asarray(data, dtype=np.int64).ravel()
     if data.size == 0:
         return np.zeros(0, dtype=np.uint8), 0
-    # map symbols -> (code, length) vectorized via searchsorted on a
-    # symbol-sorted view of the codebook
-    sym_order = np.argsort(cb.symbols, kind="stable")
-    sorted_syms = cb.symbols[sym_order]
-    pos = np.searchsorted(sorted_syms, data)
-    if np.any(pos >= len(sorted_syms)) or np.any(sorted_syms[np.minimum(pos, len(sorted_syms) - 1)] != data):
-        raise ValueError("symbol not in codebook")
-    idx = sym_order[pos]
+    idx = symbol_indices(cb, data) if indices is None else indices
     codes = cb.codes[idx]
     lens = cb.lengths[idx]
     maxlen = int(lens.max())
-    # expand each codeword to a (N, maxlen) bit matrix, MSB first, then
-    # select the valid bits in order
-    shifts = np.arange(maxlen - 1, -1, -1, dtype=np.int64)
-    bits = (codes[:, None] >> np.maximum(shifts[None, :] - (maxlen - lens)[:, None], 0)) & 1
-    valid = shifts[None, :] >= (maxlen - lens)[:, None]
-    bitstream = bits[valid].astype(np.uint8)
-    nbits = int(bitstream.size)
+    # bit-offset scatter: codeword i occupies [start_i, start_i + len_i);
+    # one vectorized pass per bit position beats materializing the dense
+    # (N, maxlen) bit matrix + boolean extract it replaces (SHE encodes the
+    # whole pooled stream in one launch, so this is a hot loop)
+    ends = np.cumsum(lens)
+    starts = ends - lens
+    nbits = int(ends[-1])
+    bitstream = np.zeros(nbits, dtype=np.uint8)
+    sel = np.ones(data.size, dtype=bool)
+    for j in range(maxlen):
+        if j > 0:
+            sel = lens > j
+            if not sel.any():
+                break
+        c, l, s = codes[sel], lens[sel], starts[sel]
+        bitstream[s + j] = (c >> (l - 1 - j)) & 1
     packed = np.packbits(bitstream)
     return packed, nbits
 

@@ -120,7 +120,7 @@ def _merged_compress(groups: dict[tuple[int, ...], np.ndarray], eb: float,
 def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
                    unit: int = 8, algorithm: str = "lor_reg",
                    she: bool = True, strategy: str | None = None,
-                   sz_block: int = 6) -> LevelResult:
+                   sz_block: int = 6, batched: bool = True) -> LevelResult:
     grid = make_block_grid(data, mask, unit=unit)
     density = grid.block_density
     if strategy is None:
@@ -155,7 +155,8 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
 
     if she and algorithm == "lor_reg":
         bricks = [extract_subblock(grid, sb) for sb in subblocks]
-        enc = she_encode(bricks, eb, block=sz_block, shared=True)
+        enc = she_encode(bricks, eb, block=sz_block, shared=True,
+                         batched=batched)
         recon = np.zeros(grid.data.shape, dtype=np.float32)
         for sb, r in zip(subblocks, enc.results):
             ox, oy, oz = sb.cell_origin(u)
@@ -206,7 +207,7 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
 def compress_amr(ds: AMRDataset, *, eb: float | list[float],
                  unit: int = 8, algorithm: str = "lor_reg",
                  she: bool = True, strategy: str | None = None,
-                 sz_block: int = 6) -> AMRCompressionResult:
+                 sz_block: int = 6, batched: bool = True) -> AMRCompressionResult:
     """Level-wise TAC/TAC+ over a whole AMR dataset.
 
     ``eb`` may be a scalar (uniform bound) or per-level list — the paper's
@@ -224,6 +225,6 @@ def compress_amr(ds: AMRDataset, *, eb: float | list[float],
         levels.append(compress_level(lvl.data, lvl.mask, eb=float(e),
                                      unit=lvl_unit, algorithm=algorithm,
                                      she=she, strategy=strategy,
-                                     sz_block=sz_block))
+                                     sz_block=sz_block, batched=batched))
     name = "tac+" if (she and algorithm == "lor_reg") else "tac"
     return AMRCompressionResult(levels=levels, method=f"{name}/{algorithm}")

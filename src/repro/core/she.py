@@ -11,6 +11,16 @@ independently** (restoring Lorenzo/regression locality), then aggregate all
 blocks' quantization codes and regression coefficients and encode them with
 **one shared Huffman tree**.
 
+Batched pipeline (the default, ``batched=True``): sub-blocks are grouped by
+shape, each group stacked into a 4D batch and run through the vectorized
+Lor/Reg compressor (:func:`repro.core.sz.compress_lor_reg_batched` — one
+fused prequant+Lorenzo + one batched plane-fit per group instead of one
+Python-level compressor call per brick), then a **single aggregated
+histogram** over all bricks' codes feeds one shared codebook build.  The
+sequential per-brick loop is kept as the reference oracle (``batched=False``)
+and the two paths are bit-identical — same codes, same reconstructions,
+same size accounting (property-tested in ``tests/test_she_batched.py``).
+
 ``she_encode`` returns exact bit accounting for all three variants so the
 benchmarks can reproduce Figs. 15/16:
 
@@ -26,9 +36,17 @@ from dataclasses import dataclass
 import numpy as np
 
 from . import huffman
-from .sz import SZResult, compress_lor_reg
+from .compat import HAVE_ZSTD, zstd_size_bits
+from .sz import SZResult, compress_lor_reg, compress_lor_reg_batched
 
-__all__ = ["SHEResult", "she_encode"]
+__all__ = ["SHEResult", "she_encode", "aggregate_histogram"]
+
+# Above this code span the dense histogram would be larger than the unique
+# pass it replaces; fall back to np.unique (outlier-heavy streams only).
+_MAX_HIST_SPAN = 1 << 22
+# The one-hot-matmul kernel materializes (chunk, span) tiles, so its span
+# budget is far smaller than the dense bincount's; wider streams fall back.
+_MAX_PALLAS_SPAN = 1 << 14
 
 
 @dataclass
@@ -44,8 +62,72 @@ class SHEResult:
         return int(self.payload_bits + self.codebook_bits + self.meta_bits)
 
 
+def aggregate_histogram(codes: np.ndarray, *, engine: str = "numpy",
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """(symbols, freqs) of the pooled code stream — Alg. 4's one histogram.
+
+    ``engine="numpy"`` uses a dense ``bincount`` over the shifted code range
+    (host path).  ``engine="pallas"`` routes the counting through the
+    one-hot-matmul histogram kernel (``repro.kernels.hist``) — the on-device
+    formulation used when the prediction stage already ran on the TPU.
+    Both return exactly what ``np.unique(codes, return_counts=True)`` would,
+    so the downstream codebook is independent of the engine.
+    """
+    if engine not in ("numpy", "pallas"):
+        raise ValueError(f"unknown histogram engine {engine!r}")
+    codes = np.asarray(codes).ravel()
+    if codes.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    lo = int(codes.min())
+    span = int(codes.max()) - lo + 1
+    if span > _MAX_HIST_SPAN:
+        return np.unique(codes, return_counts=True)
+    if engine == "pallas" and span <= _MAX_PALLAS_SPAN:
+        from repro.kernels import ops
+
+        n_bins = -(-span // 128) * 128  # pad: hist tiles are 128-lane wide
+        counts = np.asarray(ops.hist((codes - lo).astype(np.int32),
+                                     n_bins=n_bins)).astype(np.int64)
+    else:
+        counts = np.bincount(codes - lo, minlength=span)
+    nz = np.flatnonzero(counts)
+    return nz + lo, counts[nz]
+
+
+def _shared_entropy_stage(results: list[SZResult], *, use_zstd: bool,
+                          engine: str) -> tuple[int, int, huffman.Codebook]:
+    """One histogram → one codebook → one encoder launch → one zstd pass.
+
+    The Huffman payload is priced exactly from the per-occurrence code
+    lengths (``sum == encode(...)[1]``); the packed bitstream is only
+    materialized when a zstd pass will actually consume it.
+    """
+    all_codes = (np.concatenate([r.codes for r in results])
+                 if results else np.zeros(0, dtype=np.int64))
+    symbols, freqs = aggregate_histogram(all_codes, engine=engine)
+    cb = huffman.build_codebook(symbols=symbols, freqs=freqs)
+    # one symbol-index pass prices the stream AND feeds the encoder
+    idx = (huffman.symbol_indices(cb, all_codes.astype(np.int64))
+           if all_codes.size else np.zeros(0, np.int64))
+    lengths = cb.lengths[idx]
+    payload = int(lengths.sum())
+    if use_zstd and HAVE_ZSTD and payload:
+        packed, _ = huffman.encode(cb, all_codes, indices=idx)
+        zbits = zstd_size_bits(packed.tobytes())
+        if zbits is not None:
+            payload = min(payload, zbits)
+    # per-brick payloads (diagnostics only; totals use the shared stream) —
+    # priced via the same vectorized lookup, split at brick boundaries
+    splits = np.cumsum([r.codes.size for r in results])[:-1]
+    for r, chunk in zip(results, np.split(lengths, splits)):
+        r.payload_bits = int(chunk.sum())
+    return int(payload), huffman.codebook_size_bits(cb), cb
+
+
 def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
-               shared: bool = True, use_zstd: bool = True) -> SHEResult:
+               shared: bool = True, use_zstd: bool = True,
+               batched: bool = True,
+               hist_engine: str = "numpy") -> SHEResult:
     """Compress a list of 3D/4D bricks with per-brick Lor/Reg prediction.
 
     ``shared=True``  → Algorithm 4: one Huffman tree over all bricks, one
@@ -53,28 +135,36 @@ def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
     ``shared=False`` → the per-block baseline SHE replaces: one tree, one
     bitstream, one lossless pass *per brick* (the per-launch overhead the
     paper measures against).
+
+    ``batched=True`` (default) vectorizes the prediction stage over
+    same-shape groups of bricks and builds the shared codebook from one
+    aggregated histogram; ``batched=False`` is the sequential per-brick
+    reference path.  Outputs are bit-identical either way.
     """
-    results = [compress_lor_reg(b, eb, block=block, count_entropy=False)
-               for b in bricks]
+    if batched:
+        results: list[SZResult | None] = [None] * len(bricks)
+        groups: dict[tuple[int, ...], list[int]] = {}
+        for i, brk in enumerate(bricks):
+            brk = np.asarray(brk)
+            if brk.ndim == 3:
+                groups.setdefault(brk.shape, []).append(i)
+            else:  # rare 4D bricks keep the reference per-brick path
+                results[i] = compress_lor_reg(brk, eb, block=block,
+                                              count_entropy=False)
+        for shape, idxs in groups.items():
+            stack = np.stack([np.asarray(bricks[i]) for i in idxs])
+            for i, r in zip(idxs, compress_lor_reg_batched(stack, eb,
+                                                           block=block)):
+                results[i] = r
+    else:
+        results = [compress_lor_reg(b, eb, block=block, count_entropy=False)
+                   for b in bricks]
     meta = sum(r.meta_bits for r in results)
     # stream-splitting info: #codes per brick (32 bit each)
     meta += 32 * len(results)
     if shared:
-        all_codes = (np.concatenate([r.codes for r in results])
-                     if results else np.zeros(0, dtype=np.int64))
-        cb = huffman.build_codebook(all_codes)
-        packed, nbits = huffman.encode(cb, all_codes)
-        payload = nbits
-        if use_zstd and nbits:
-            import zstandard as zstd
-
-            payload = min(payload,
-                          len(zstd.ZstdCompressor(level=3)
-                              .compress(packed.tobytes())) * 8)
-        # per-brick payloads (diagnostics only; totals use the shared stream)
-        for r in results:
-            _, r.payload_bits = huffman.encode(cb, r.codes)
-        cb_bits = huffman.codebook_size_bits(cb)
+        payload, cb_bits, cb = _shared_entropy_stage(
+            results, use_zstd=use_zstd, engine=hist_engine)
     else:
         payload = 0
         cb_bits = 0
@@ -84,11 +174,9 @@ def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
             packed, nbits = huffman.encode(rcb, r.codes)
             bits = nbits
             if use_zstd and nbits:
-                import zstandard as zstd
-
-                bits = min(bits,
-                           len(zstd.ZstdCompressor(level=3)
-                               .compress(packed.tobytes())) * 8)
+                zbits = zstd_size_bits(packed.tobytes())
+                if zbits is not None:
+                    bits = min(bits, zbits)
             payload += bits
             cb_bits += huffman.codebook_size_bits(rcb)
             r.payload_bits = bits

@@ -43,6 +43,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from . import huffman
+from .compat import zstd_size_bits
 
 __all__ = [
     "SZResult",
@@ -53,6 +54,7 @@ __all__ = [
     "interp_nd_recon",
     "compress_lorenzo",
     "compress_lor_reg",
+    "compress_lor_reg_batched",
     "compress_interp",
     "entropy_bits",
 ]
@@ -253,10 +255,9 @@ def entropy_bits(codes: np.ndarray, *, use_zstd: bool = True,
     packed, nbits = huffman.encode(cb, codes)
     payload = nbits
     if use_zstd:
-        import zstandard as zstd
-
-        z = zstd.ZstdCompressor(level=3).compress(packed.tobytes())
-        payload = min(payload, len(z) * 8)
+        zbits = zstd_size_bits(packed.tobytes())
+        if zbits is not None:
+            payload = min(payload, zbits)
     cb_bits = 0 if codebook is not None else huffman.codebook_size_bits(cb)
     return int(payload), int(cb_bits)
 
@@ -390,13 +391,19 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
     cost_lor = float(_code_cost_bits(codes_lor, axis=None))
 
     # --- Regression branch: per-block plane fits ----------------------------
-    xb, bgrid = _block_view(x, b)
-    betas, fit = _regression_fit(xb, b)
-    codes_reg = np.rint((xb - fit) / (2.0 * eb)).astype(np.int64)
-    n_blocks = int(np.prod(bgrid))
-    cost_reg = float(_code_cost_bits(codes_reg, axis=None)) + n_blocks * 4 * 32
+    # A 1³ "plane fit" is degenerate (zero coordinate variance → NaN betas),
+    # so Lorenzo wins by construction; skip the wasted fit entirely.
+    use_reg = False
+    if b >= 2:
+        xb, bgrid = _block_view(x, b)
+        betas, fit = _regression_fit(xb, b)
+        codes_reg = np.rint((xb - fit) / (2.0 * eb)).astype(np.int64)
+        n_blocks = int(np.prod(bgrid))
+        cost_reg = (float(_code_cost_bits(codes_reg, axis=None))
+                    + n_blocks * 4 * 32)
+        use_reg = cost_reg < cost_lor
 
-    if cost_reg < cost_lor:
+    if use_reg:
         bx, by, bz = bgrid
         recon_b = (fit + 2.0 * eb * codes_reg).astype(np.float32)
         recon = (recon_b.reshape(bx, by, bz, b, b, b)
@@ -421,3 +428,110 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=meta, eb=eb,
                     method=method, extras=extras)
+
+
+# ----------------------- batched Lor/Reg (SHE hot path) ---------------------
+
+
+def _block_view_batched(a: np.ndarray, b: int) -> tuple[np.ndarray, tuple[int, int, int]]:
+    """(N,X,Y,Z) → (N, bx,by,bz, b,b,b) view after per-brick edge padding.
+
+    Per-brick this is exactly :func:`_block_view`; the padding and the
+    transpose never mix values across the leading batch axis.
+    """
+    pads = [(0, 0)] + [(0, (-s) % b) for s in a.shape[1:]]
+    if any(p[1] for p in pads):
+        a = np.pad(a, pads, mode="edge")
+    n = a.shape[0]
+    bx, by, bz = (s // b for s in a.shape[1:])
+    return (a.reshape(n, bx, b, by, b, bz, b)
+             .transpose(0, 1, 3, 5, 2, 4, 6)), (bx, by, bz)
+
+
+def _code_cost_bits_rows(codes: np.ndarray) -> np.ndarray:
+    """Per-brick :func:`_code_cost_bits`: sum over everything but axis 0.
+
+    ``codes`` must be C-contiguous so each brick's row reduction adds the
+    same values in the same (pairwise) order as the sequential per-brick
+    ``sum(axis=None)`` — keeping the batched branch scores bit-identical.
+    """
+    mag = np.log2(1.0 + 2.0 * np.abs(np.ascontiguousarray(codes)
+                                     .astype(np.float64)))
+    return mag.reshape(mag.shape[0], -1).sum(axis=1) + 1.0
+
+
+def compress_lor_reg_batched(x: np.ndarray, eb: float, *,
+                             block: int = 6) -> list[SZResult]:
+    """Batched :func:`compress_lor_reg` over a stack of same-shape bricks.
+
+    ``x``: (N, X, Y, Z) — N independent 3D bricks (e.g. one padded-shape
+    group of SHE sub-blocks).  Every stage of the per-brick compressor is
+    vectorized across the leading axis with identical arithmetic, so each
+    returned :class:`SZResult` is bit-identical (codes, recon, meta, branch
+    choice) to ``compress_lor_reg(x[i], eb, block=block,
+    count_entropy=False)`` — the sequential path stays the oracle.
+
+    The entropy stage is intentionally left to the caller (payloads are 0):
+    SHE pools all bricks' codes under one shared codebook (paper Alg. 4),
+    so pricing them here would be wasted work.
+    """
+    x = np.asarray(x)
+    if x.ndim != 4:
+        raise ValueError("expected a (N, X, Y, Z) stack of 3D bricks")
+    n = x.shape[0]
+    if n == 0:
+        return []
+    bshape = x.shape[1:]
+    b = min(block, min(bshape)) if min(bshape) >= 2 else 1
+
+    # --- Lorenzo branch: zero-halo dual-quant Lorenzo per brick ------------
+    q = prequant(x, eb)
+    codes_lor = lorenzo_nd_codes(q, axes=(1, 2, 3))
+    cost_lor = _code_cost_bits_rows(codes_lor)
+
+    # --- Regression branch: per-block plane fits ---------------------------
+    # Degenerate b == 1 (zero coordinate variance → NaN betas) can never
+    # beat Lorenzo; skip the fit, matching the sequential path.
+    n_blocks = 0
+    if b >= 2:
+        xb, bgrid = _block_view_batched(x, b)
+        betas, fit = _regression_fit(xb, b)
+        codes_reg = np.rint((xb - fit) / (2.0 * eb)).astype(np.int64)
+        n_blocks = int(np.prod(bgrid))
+        cost_reg = _code_cost_bits_rows(codes_reg) + n_blocks * 4 * 32
+        use_reg = cost_reg < cost_lor
+    else:
+        use_reg = np.zeros(n, dtype=bool)
+
+    # --- per-brick branch choice: reconstruct only the winning branch ------
+    recon = np.empty(x.shape, dtype=np.float32)
+    lor_idx = np.flatnonzero(~use_reg)
+    reg_idx = np.flatnonzero(use_reg)
+    if lor_idx.size:
+        recon[lor_idx] = dequant(
+            lorenzo_nd_recon(codes_lor[lor_idx], axes=(1, 2, 3)), eb)
+    if reg_idx.size:
+        bx, by, bz = bgrid
+        rr = (fit[reg_idx] + 2.0 * eb * codes_reg[reg_idx]).astype(np.float32)
+        rr = (rr.reshape(len(reg_idx), bx, by, bz, b, b, b)
+                .transpose(0, 1, 4, 2, 5, 3, 6)
+                .reshape(len(reg_idx), bx * b, by * b, bz * b))
+        recon[reg_idx] = rr[(slice(None),)
+                            + tuple(slice(0, s) for s in bshape)]
+
+    out: list[SZResult] = []
+    for i in range(n):
+        if use_reg[i]:
+            out.append(SZResult(
+                recon=recon[i], codes=codes_reg[i].ravel().copy(),
+                payload_bits=0, codebook_bits=0,
+                meta_bits=_DIM_META_BITS + 1 + n_blocks * 4 * 32, eb=eb,
+                method="lor_reg/reg",
+                extras={"betas": betas[i], "branch": "reg"}))
+        else:
+            out.append(SZResult(
+                recon=recon[i], codes=codes_lor[i].ravel().copy(),
+                payload_bits=0, codebook_bits=0,
+                meta_bits=_DIM_META_BITS + 1, eb=eb,
+                method="lor_reg/lorenzo", extras={"branch": "lorenzo"}))
+    return out

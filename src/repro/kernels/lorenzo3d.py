@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 __all__ = ["lorenzo3d_codes_kernel", "lorenzo3d_recon_kernel",
-           "lorenzo3d_codes", "lorenzo3d_recon"]
+           "lorenzo3d_codes", "lorenzo3d_recon",
+           "lorenzo3d_codes_batched", "lorenzo3d_recon_batched"]
 
 
 def lorenzo3d_codes_kernel(x_ref, codes_ref, *, inv_2eb: float):
@@ -83,6 +84,81 @@ def lorenzo3d_recon(codes: jnp.ndarray, *, eb: float,
                     interpret: bool = True) -> jnp.ndarray:
     grid, spec, tile = _grid_and_specs(codes.shape, tile)
     kernel = functools.partial(lorenzo3d_recon_kernel,
+                               two_eb=float(2.0 * eb))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(codes.shape, jnp.float32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32))
+
+
+# ------------------------- batched (SHE) variants ---------------------------
+#
+# SHE stacks same-shape sub-blocks into a (N, X, Y, Z) batch and compresses
+# the whole batch in one launch.  The grid grows a leading batch axis with
+# block size 1 and each spatial tile keeps its own zero halo, so every
+# (brick, tile) cell is predicted fully independently — the per-sub-block
+# independence of Alg. 4 line 4 is preserved *by the tiling contract*, not
+# by the kernel body (which is the 3D body on a leading-singleton block).
+
+
+def lorenzo3d_codes_batched_kernel(x_ref, codes_ref, *, inv_2eb: float):
+    """One (1, tx, ty, tz) VMEM tile: prequant + zero-halo Lorenzo delta."""
+    x = x_ref[...]
+    c = jnp.rint(x * inv_2eb).astype(jnp.int32)
+    for ax in (1, 2, 3):
+        shifted = jnp.pad(c, [(1, 0) if a == ax else (0, 0)
+                              for a in range(4)])[
+            tuple(slice(0, -1) if a == ax else slice(None) for a in range(4))]
+        c = c - shifted
+    codes_ref[...] = c
+
+
+def lorenzo3d_recon_batched_kernel(codes_ref, x_ref, *, two_eb: float):
+    q = codes_ref[...].astype(jnp.int32)
+    for ax in (1, 2, 3):
+        q = jnp.cumsum(q, axis=ax)
+    x_ref[...] = q.astype(jnp.float32) * two_eb
+
+
+def _batched_grid_and_specs(shape, tile):
+    if len(shape) != 4:
+        raise ValueError(f"expected (N, X, Y, Z) batch, got shape {shape}")
+    tile = (1,) + tuple(min(t, s) for t, s in zip(tile, shape[1:]))
+    if any(s % t for s, t in zip(shape, tile)):
+        raise ValueError(f"shape {shape} not divisible by tile {tile}")
+    grid = tuple(s // t for s, t in zip(shape, tile))
+    spec = pl.BlockSpec(tile, lambda n, i, j, k: (n, i, j, k))
+    return grid, spec, tile
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "tile", "interpret"))
+def lorenzo3d_codes_batched(x: jnp.ndarray, *, eb: float,
+                            tile: tuple[int, int, int] = (8, 128, 128),
+                            interpret: bool = True) -> jnp.ndarray:
+    """Fused prequant + Lorenzo codes for a (N, X, Y, Z) batch of bricks."""
+    grid, spec, tile = _batched_grid_and_specs(x.shape, tile)
+    kernel = functools.partial(lorenzo3d_codes_batched_kernel,
+                               inv_2eb=float(1.0 / (2.0 * eb)))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.int32),
+        interpret=interpret,
+    )(x.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "tile", "interpret"))
+def lorenzo3d_recon_batched(codes: jnp.ndarray, *, eb: float,
+                            tile: tuple[int, int, int] = (8, 128, 128),
+                            interpret: bool = True) -> jnp.ndarray:
+    grid, spec, tile = _batched_grid_and_specs(codes.shape, tile)
+    kernel = functools.partial(lorenzo3d_recon_batched_kernel,
                                two_eb=float(2.0 * eb))
     return pl.pallas_call(
         kernel,

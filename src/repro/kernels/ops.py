@@ -12,7 +12,8 @@ from . import hist as _hist
 from . import lorenzo3d as _lorenzo3d
 from . import qdq as _qdq
 
-__all__ = ["lorenzo3d_codes", "lorenzo3d_recon", "hist",
+__all__ = ["lorenzo3d_codes", "lorenzo3d_recon",
+           "lorenzo3d_codes_batched", "lorenzo3d_recon_batched", "hist",
            "group_quant", "group_dequant", "default_interpret"]
 
 
@@ -30,6 +31,21 @@ def lorenzo3d_codes(x, *, eb: float, tile=(8, 128, 128),
 def lorenzo3d_recon(codes, *, eb: float, tile=(8, 128, 128),
                     interpret: bool | None = None):
     return _lorenzo3d.lorenzo3d_recon(
+        codes, eb=eb, tile=tile,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+def lorenzo3d_codes_batched(x, *, eb: float, tile=(8, 128, 128),
+                            interpret: bool | None = None):
+    """Batched (N, X, Y, Z) fused prequant+Lorenzo — the SHE hot path."""
+    return _lorenzo3d.lorenzo3d_codes_batched(
+        x, eb=eb, tile=tile,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+def lorenzo3d_recon_batched(codes, *, eb: float, tile=(8, 128, 128),
+                            interpret: bool | None = None):
+    return _lorenzo3d.lorenzo3d_recon_batched(
         codes, eb=eb, tile=tile,
         interpret=default_interpret() if interpret is None else interpret)
 

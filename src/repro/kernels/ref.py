@@ -9,8 +9,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-__all__ = ["lorenzo3d_codes_ref", "lorenzo3d_recon_ref", "hist_ref",
-           "group_quant_ref", "group_dequant_ref"]
+__all__ = ["lorenzo3d_codes_ref", "lorenzo3d_recon_ref",
+           "lorenzo3d_codes_batched_ref", "lorenzo3d_recon_batched_ref",
+           "hist_ref", "group_quant_ref", "group_dequant_ref"]
 
 
 def _tile_view(a: jnp.ndarray, tile: tuple[int, int, int]):
@@ -47,6 +48,39 @@ def lorenzo3d_recon_ref(codes: jnp.ndarray, eb: float,
     v, _ = _tile_view(codes.astype(jnp.int32), tile)
     q = v
     for ax in (1, 3, 5):
+        q = jnp.cumsum(q, axis=ax)
+    return (q.astype(jnp.float32) * (2.0 * eb)).reshape(codes.shape)
+
+
+def _batched_tile_view(a: jnp.ndarray, tile: tuple[int, int, int]):
+    n = a.shape[0]
+    gx, gy, gz = (s // t for s, t in zip(a.shape[1:], tile))
+    tx, ty, tz = tile
+    return a.reshape(n, gx, tx, gy, ty, gz, tz)
+
+
+def lorenzo3d_codes_batched_ref(x: jnp.ndarray, eb: float,
+                                tile: tuple[int, int, int] | None = None
+                                ) -> jnp.ndarray:
+    """Batched oracle: the 3D tile-local semantics applied per brick of a
+    (N, X, Y, Z) stack — no value may cross the batch axis."""
+    q = jnp.rint(x * jnp.float32(1.0 / (2.0 * eb))).astype(jnp.int32)
+    tile = tuple(min(t, s) for t, s in zip(tile or x.shape[1:], x.shape[1:]))
+    c = _batched_tile_view(q, tile)
+    for ax in (2, 4, 6):
+        c = jnp.diff(c, axis=ax, prepend=jnp.zeros_like(
+            jnp.take(c, jnp.array([0]), axis=ax)))
+    return c.reshape(x.shape)
+
+
+def lorenzo3d_recon_batched_ref(codes: jnp.ndarray, eb: float,
+                                tile: tuple[int, int, int] | None = None
+                                ) -> jnp.ndarray:
+    """Inverse batched oracle: per-(brick, tile) 3D inclusive prefix-sum."""
+    tile = tuple(min(t, s)
+                 for t, s in zip(tile or codes.shape[1:], codes.shape[1:]))
+    q = _batched_tile_view(codes.astype(jnp.int32), tile)
+    for ax in (2, 4, 6):
         q = jnp.cumsum(q, axis=ax)
     return (q.astype(jnp.float32) * (2.0 * eb)).reshape(codes.shape)
 

@@ -34,11 +34,13 @@ def _loop(steps, ckpt_dir=None, **kw):
                       log_every=2, **kw)
 
 
+@pytest.mark.slow
 def test_loss_decreases():
     _, _, hist = _loop(20)
     assert hist[-1][1] < hist[0][1]
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence():
     """mb=1 and mb=2 produce (nearly) the same update for the same batch."""
     mesh = make_smoke_mesh()
@@ -56,6 +58,7 @@ def test_microbatch_equivalence():
     np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=2e-2, atol=2e-4)
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip_and_resume():
     with tempfile.TemporaryDirectory() as d:
         p1, o1, h1 = _loop(6, ckpt_dir=d)
@@ -135,6 +138,7 @@ def test_preemption_checkpoint_and_stop():
     assert g.should_stop
 
 
+@pytest.mark.slow
 def test_failure_injection_and_restart_recovery():
     from repro.runtime.resilience import FailureInjector, SimulatedFailure
 

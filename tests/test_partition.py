@@ -1,7 +1,11 @@
 """Partition strategies: tiling invariants (DESIGN.md §8.2), DP
 correctness, GSP pad/unpad roundtrip — property-based on random occupancy."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.akdtree import akdtree_partition
 from repro.core.blocks import make_block_grid, subblocks_tile_exactly

@@ -2,9 +2,12 @@
 Huffman roundtrip.  Property-based via hypothesis."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import huffman, sz
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import compat, huffman, sz  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -106,6 +109,7 @@ def test_payload_bits_smaller_for_smooth_data():
             < sz.compress_lorenzo(noise, eb).total_bits)
 
 
+@pytest.mark.skipif(not compat.HAVE_ZSTD, reason="needs zstandard")
 def test_zstd_helps_constant_field():
     x = np.ones((32, 32, 32), np.float32)
     r = sz.compress_lorenzo(x, 1e-3, use_zstd=True)
