@@ -28,7 +28,8 @@ def run(quick: bool = False):
             for strategy in ("gsp", "opst", "akdtree"):
                 res = hybrid.compress_level(lvl.data, lvl.mask, eb=eb,
                                             unit=4, algorithm=algorithm,
-                                            she=she, strategy=strategy)
+                                            she=she, strategy=strategy,
+                                            keep_artifacts=False)
                 n_values = int(lvl.mask.sum())
                 br = res.total_bits / n_values
                 err = lvl.data[lvl.mask] - res.recon[lvl.mask]

@@ -22,10 +22,11 @@ def run(quick: bool = False):
     eb = eb_for(ds, rel)
     cases = {
         "3D-baseline": baselines.compress_3d_baseline(ds, eb),
-        "TAC+(uniform)": hybrid.compress_amr(ds, eb=eb, unit=8),
+        "TAC+(uniform)": hybrid.compress_amr(ds, eb=eb, unit=8, keep_artifacts=False),
         "TAC+(adaptive)": hybrid.compress_amr(
             ds, eb=level_error_bounds(eb * 1.4, ds.n_levels,
-                                      metric="halo_finder"), unit=8),
+                                      metric="halo_finder"), unit=8,
+            keep_artifacts=False),
     }
     rows = []
     for name, res in cases.items():

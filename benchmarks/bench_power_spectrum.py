@@ -21,10 +21,11 @@ def run(quick: bool = False):
 
     cases = {
         "3D-baseline": baselines.compress_3d_baseline(ds, eb),
-        "TAC+(uniform)": hybrid.compress_amr(ds, eb=eb, unit=8),
+        "TAC+(uniform)": hybrid.compress_amr(ds, eb=eb, unit=8, keep_artifacts=False),
         "TAC+(adaptive)": hybrid.compress_amr(
             ds, eb=level_error_bounds(eb * 1.5, ds.n_levels,
-                                      metric="power_spectrum"), unit=8),
+                                      metric="power_spectrum"), unit=8,
+            keep_artifacts=False),
     }
     for name, res in cases.items():
         rec = metrics.reconstruct_uniform(ds, res)

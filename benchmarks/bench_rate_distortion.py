@@ -13,13 +13,16 @@ REL_EBS = [3e-2, 1e-2, 6.7e-3, 3e-3, 1e-3, 3e-4]
 METHODS = {
     "TAC+":       lambda ds, eb: hybrid.compress_amr(ds, eb=eb, unit=8,
                                                      algorithm="lor_reg",
-                                                     she=True),
+                                                     she=True,
+                                                     keep_artifacts=False),
     "TAC/lorreg": lambda ds, eb: hybrid.compress_amr(ds, eb=eb, unit=8,
                                                      algorithm="lor_reg",
-                                                     she=False),
+                                                     she=False,
+                                                     keep_artifacts=False),
     "TAC/interp": lambda ds, eb: hybrid.compress_amr(ds, eb=eb, unit=8,
                                                      algorithm="interp",
-                                                     she=False),
+                                                     she=False,
+                                                     keep_artifacts=False),
     "1D":         lambda ds, eb: baselines.compress_1d_naive(ds, eb),
     "zMesh":      lambda ds, eb: baselines.compress_zmesh(ds, eb),
     "3D":         lambda ds, eb: baselines.compress_3d_baseline(ds, eb),

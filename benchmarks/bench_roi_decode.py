@@ -1,0 +1,87 @@
+"""TACZ region-of-interest decode latency vs full-file decode (ISSUE 2).
+
+Writes a TAC+ snapshot to a TACZ container, then times ``read_roi`` for
+boxes of varying volume fraction — at several placements per fraction,
+since ROI cost depends on how the box lands on the partition (a box dead
+on the refined halo touches more fine sub-blocks than one off to the
+side) — against a full ``read``.  The acceptance bar: a ≤5 % box decodes
+≥5× faster than the full file, mean over placements (the per-sub-block
+index plus the prefix-stop entropy decode make ROI cost scale with the
+codes the box needs, not with the file).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro import io as tacz
+from repro.core import hybrid
+
+from .common import dataset, eb_for, timed, write_csv
+
+# target box volume fractions (1 = full domain, for reference)
+_FRACS = [0.01, 0.05, 0.125, 1.0]
+
+
+def _boxes(shape, frac):
+    """Same-size boxes at different placements: corner, center, off-center."""
+    sides = [max(1, min(s, int(round(s * frac ** (1.0 / 3.0)))))
+             for s in shape]
+    placements = []
+    for name, pos in [("corner", lambda s, side: 0),
+                      ("center", lambda s, side: (s - side) // 2),
+                      ("offcenter", lambda s, side: min(s - side, s // 8))]:
+        placements.append((name, tuple(
+            (pos(s, side), pos(s, side) + side)
+            for s, side in zip(shape, sides))))
+    return placements
+
+
+def run(quick: bool = False):
+    names = ["run1_z10"] if quick else ["run1_z10", "run2_t4"]
+    rows = []
+    speedup_5pct = None
+    for name in names:
+        ds = dataset(name)
+        eb = eb_for(ds, 1e-3)
+        res = hybrid.compress_amr(ds, eb=eb)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, name + ".tacz")
+            _, t_write = timed(tacz.write, path, res)
+            size = os.path.getsize(path)
+            with tacz.TACZReader(path) as rd:
+                n_sb = sum(len(e.subblocks) for e in rd.levels)
+                _, t_full = timed(rd.read, repeat=2)
+                for frac in _FRACS:
+                    speedups = []
+                    for place, box in _boxes(ds.finest_shape, frac):
+                        _, t_roi = timed(rd.read_roi, box, repeat=3)
+                        vol = np.prod([hi - lo for lo, hi in box])
+                        act = float(vol / np.prod(ds.finest_shape))
+                        speedup = t_full / max(t_roi, 1e-12)
+                        speedups.append(speedup)
+                        rows.append((name, frac, round(act, 4), place, n_sb,
+                                     round(size / 1e3, 1),
+                                     round(t_write * 1e3, 2),
+                                     round(t_full * 1e3, 2),
+                                     round(t_roi * 1e3, 3),
+                                     round(speedup, 2)))
+                    if name == names[0] and frac == 0.05:
+                        speedup_5pct = float(np.mean(speedups))
+    path = write_csv("roi_decode",
+                     ["dataset", "box_frac", "box_frac_actual", "placement",
+                      "n_subblocks", "file_kb", "write_ms", "full_decode_ms",
+                      "roi_decode_ms", "speedup"],
+                     rows)
+    if speedup_5pct is not None and speedup_5pct < 5.0:
+        raise AssertionError(
+            f"ROI acceptance regressed: 5% box decode only "
+            f"{speedup_5pct:.1f}x (mean over placements) faster than full "
+            f"decode (need ≥5x)")
+    return {"csv": path, "speedup_5pct_box": round(speedup_5pct or 0.0, 1)}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -21,9 +21,11 @@ def run(quick: bool = False):
             cases = {
                 "TAC+": lambda: hybrid.compress_amr(ds, eb=eb, unit=8,
                                                     algorithm="lor_reg",
-                                                    she=True),
+                                                    she=True,
+                                                    keep_artifacts=False),
                 "TAC/interp": lambda: hybrid.compress_amr(
-                    ds, eb=eb, unit=8, algorithm="interp", she=False),
+                    ds, eb=eb, unit=8, algorithm="interp", she=False,
+                    keep_artifacts=False),
                 "1D": lambda: baselines.compress_1d_naive(ds, eb),
                 "3D": lambda: baselines.compress_3d_baseline(ds, eb),
             }

@@ -3,8 +3,13 @@ checkpoint losslessly and with the error-bounded lossy pipeline, compare
 sizes and verify the per-tensor bound — the direct analogue of the paper's
 per-AMR-level adaptive error bounds, applied per layer.
 
+Lossy tensors land as TACZ container blobs (`repro.io.tensor`): framed,
+versioned, CRC-indexed — the same on-disk format the AMR pipeline writes,
+so this example also sanity-checks each stored blob's TACZ magic.
+
     PYTHONPATH=src python examples/compress_checkpoint.py
 """
+import json
 import os
 import tempfile
 
@@ -13,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.io import TACZ_MAGIC
 from repro.configs import smoke_config
 from repro.models.layers import init_from_specs
 from repro.models.model import model_specs
@@ -43,6 +49,15 @@ def main():
             mgr.save(1, params, opt, blocking=True)
             f = os.path.join(d, name, "step_00000001.npz")
             sizes[name] = os.path.getsize(f)
+            if eb > 0:
+                # every lossy entry is a self-describing TACZ container
+                with open(os.path.join(d, name, "step_00000001.json")) as mf:
+                    manifest = json.load(mf)
+                with np.load(f) as z:
+                    n_tacz = sum(
+                        bytes(z[k][:4]) == TACZ_MAGIC
+                        for k in manifest["lossy"])
+                print(f"  {n_tacz} lossy tensors stored as TACZ blobs")
             rp, _, _ = mgr.restore(1)
             worst = 0.0
             for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(rp)):

@@ -14,6 +14,10 @@ Design (DESIGN.md §6):
     stage ("sz-light": the Huffman stage is skipped for decode speed; zstd
     on Lorenzo codes keeps ~the same ratio on weight tensors).  Optimizer
     moments stay lossless by default; ``eb_rel=0`` disables lossy entirely.
+    Lossy tensors are stored as self-describing TACZ container blobs
+    (``repro.io.tensor``) — the same framed/indexed/CRC'd format the AMR
+    pipeline writes — instead of ad-hoc ``(blob, eb, dtype, shape)`` dicts;
+    pre-TACZ manifests (no ``"format"`` field) still restore.
 """
 from __future__ import annotations
 
@@ -31,19 +35,8 @@ from repro.core import compat
 
 __all__ = ["CheckpointManager"]
 
-# Lossless codec for the lossy-mode code stream: zstd when available,
-# stdlib zlib otherwise (the manifest records which one wrote each blob so
-# checkpoints stay portable across environments).
-_DEFAULT_CODEC = "zstd" if compat.HAVE_ZSTD else "zlib"
-
-
-def _codec_compress(buf: bytes, codec: str = _DEFAULT_CODEC) -> bytes:
-    if codec == "zstd":
-        return compat.zstd_compress(buf)
-    return zlib.compress(buf, 6)
-
-
 def _codec_decompress(blob: bytes, codec: str) -> bytes:
+    """Legacy (pre-TACZ) lossy-blob codec — restore path only."""
     if codec == "zstd":
         return compat.zstd_decompress(blob)
     return zlib.decompress(blob)
@@ -88,26 +81,18 @@ def _unflatten_from_paths(flat):
 
 
 def _lossy_encode(a: np.ndarray, eb_rel: float):
-    """Dual-quant Lorenzo + zstd on a weight tensor (error-bounded)."""
+    """Error-bounded "sz-light" encoding into a TACZ tensor blob."""
     rng = float(np.abs(a).max())
     if rng == 0 or eb_rel <= 0:
         return None
     eb = eb_rel * rng
-    q = np.rint(a.astype(np.float64) / (2 * eb)).astype(np.int64)
-    codes = q
-    for ax in range(codes.ndim):
-        codes = np.diff(codes, axis=ax, prepend=0)
-    if np.abs(codes).max() < 2 ** 15:
-        codes16 = codes.astype(np.int16)
-        blob = _codec_compress(codes16.tobytes())
-        return {"blob": blob, "eb": eb, "dtype": "int16",
-                "shape": a.shape, "codec": _DEFAULT_CODEC}
-    blob = _codec_compress(codes.astype(np.int32).tobytes())
-    return {"blob": blob, "eb": eb, "dtype": "int32", "shape": a.shape,
-            "codec": _DEFAULT_CODEC}
+    from repro.io import tensor as tacz_tensor
+
+    return {"blob": tacz_tensor.encode_tensor(a, eb), "eb": eb}
 
 
-def _lossy_decode(entry, out_dtype) -> np.ndarray:
+def _lossy_decode_legacy(entry, out_dtype) -> np.ndarray:
+    """Decode pre-TACZ lossy entries (manifests without a "format" field)."""
     raw = _codec_decompress(entry["blob"], entry.get("codec", "zstd"))
     codes = np.frombuffer(raw, dtype=entry["dtype"]).astype(np.int64)
     codes = codes.reshape(entry["shape"])
@@ -159,9 +144,8 @@ class CheckpointManager:
             if lossy is not None:
                 arrays[key] = np.frombuffer(lossy["blob"], dtype=np.uint8)
                 manifest["lossy"][key] = {
-                    "eb": lossy["eb"], "codes_dtype": lossy["dtype"],
-                    "shape": list(lossy["shape"]), "out_dtype": str(a.dtype),
-                    "codec": lossy["codec"]}
+                    "format": "tacz", "eb": lossy["eb"],
+                    "out_dtype": str(a.dtype)}
             else:
                 arrays[key] = _to_storable(a)
             manifest["entries"][key] = {
@@ -217,12 +201,17 @@ class CheckpointManager:
                     raise IOError(f"checkpoint corruption at {meta['path']}")
                 if key in manifest["lossy"]:
                     li = manifest["lossy"][key]
-                    a = _lossy_decode(
-                        {"blob": a.tobytes(), "eb": li["eb"],
-                         "dtype": li["codes_dtype"],
-                         "shape": tuple(li["shape"]),
-                         "codec": li.get("codec", "zstd")},
-                        np.float32)
+                    if li.get("format") == "tacz":
+                        from repro.io import tensor as tacz_tensor
+
+                        a = tacz_tensor.decode_tensor(a.tobytes())
+                    else:
+                        a = _lossy_decode_legacy(
+                            {"blob": a.tobytes(), "eb": li["eb"],
+                             "dtype": li["codes_dtype"],
+                             "shape": tuple(li["shape"]),
+                             "codec": li.get("codec", "zstd")},
+                            np.float32)
                     a = a.astype(getattr(ml_dtypes, li["out_dtype"])
                                  if li["out_dtype"] in _VIEW_AS
                                  else np.dtype(li["out_dtype"]))

@@ -10,6 +10,7 @@ is vectorized bit-packing; decoding walks the canonical-code table.
 from __future__ import annotations
 
 import heapq
+import struct
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -23,6 +24,8 @@ __all__ = [
     "symbol_indices",
     "code_lengths_for",
     "codebook_size_bits",
+    "serialize_codebook",
+    "deserialize_codebook",
 ]
 
 
@@ -80,23 +83,17 @@ def _code_lengths_from_hist(symbols: np.ndarray, freqs: np.ndarray) -> np.ndarra
     return lengths
 
 
-def build_codebook(data: np.ndarray | None = None, *,
-                   symbols: np.ndarray | None = None,
-                   freqs: np.ndarray | None = None) -> Codebook:
-    """Build a canonical Huffman codebook from a symbol stream or histogram."""
-    if data is not None:
-        data = np.asarray(data).ravel()
-        symbols, freqs = np.unique(data, return_counts=True)
-    symbols = np.asarray(symbols, dtype=np.int64)
-    freqs = np.asarray(freqs, dtype=np.int64)
-    keep = freqs > 0
-    symbols, freqs = symbols[keep], freqs[keep]
-    lengths = _code_lengths_from_hist(symbols, freqs)
-    # canonical order: sort by (length, symbol)
+def _canonicalize(symbols: np.ndarray, lengths: np.ndarray) -> Codebook:
+    """Canonical code assignment from (symbol, length) pairs.
+
+    The (length, symbol) order fully determines the canonical codes, so this
+    is the shared tail of :func:`build_codebook` and
+    :func:`deserialize_codebook` — a codebook round-trips through
+    serialization bit-identically because both paths end here.
+    """
     order = np.lexsort((symbols, lengths))
     symbols, lengths = symbols[order], lengths[order]
     maxlen = int(lengths.max(initial=0))
-    # canonical codes
     codes = np.zeros(len(symbols), dtype=np.int64)
     count = np.zeros(maxlen + 1, dtype=np.int64)
     for l in lengths:
@@ -117,6 +114,60 @@ def build_codebook(data: np.ndarray | None = None, *,
     return Codebook(symbols=symbols, lengths=lengths, codes=codes,
                     first_code=first_code, first_index=first_index,
                     count=count)
+
+
+def build_codebook(data: np.ndarray | None = None, *,
+                   symbols: np.ndarray | None = None,
+                   freqs: np.ndarray | None = None) -> Codebook:
+    """Build a canonical Huffman codebook from a symbol stream or histogram."""
+    if data is not None:
+        data = np.asarray(data).ravel()
+        symbols, freqs = np.unique(data, return_counts=True)
+    symbols = np.asarray(symbols, dtype=np.int64)
+    freqs = np.asarray(freqs, dtype=np.int64)
+    keep = freqs > 0
+    symbols, freqs = symbols[keep], freqs[keep]
+    lengths = _code_lengths_from_hist(symbols, freqs)
+    return _canonicalize(symbols, lengths)
+
+
+def serialize_codebook(cb: Codebook) -> bytes:
+    """Canonical codebook → bytes: u32 count, u8 symbol width, symbols
+    (i32 when they fit — the quantization-code common case — i64
+    otherwise), u8 lengths.
+
+    Only (symbol, length) pairs are stored — canonical codes are a pure
+    function of those (the property canonical Huffman exists for).  The
+    i32 fast path makes the wire cost match :func:`codebook_size_bits`'
+    (32+8)-bits-per-symbol accounting (+5 header bytes).  Code lengths fit
+    u8: depth L needs total frequency ≥ Fib(L+1), so int64 histograms cap
+    depth well under 255.  Handles the degenerate empty and single-symbol
+    codebooks (both appear constantly in per-sub-block container payloads:
+    all-zero bricks quantize to a one-symbol alphabet).
+    """
+    symbols = np.ascontiguousarray(cb.symbols, dtype=np.int64)
+    lengths = np.ascontiguousarray(cb.lengths, dtype=np.uint8)
+    width = 8 if symbols.size and (int(symbols.min()) < -2 ** 31
+                                   or int(symbols.max()) >= 2 ** 31) else 4
+    return (struct.pack("<IB", len(symbols), width)
+            + symbols.astype(f"<i{width}").tobytes() + lengths.tobytes())
+
+
+def deserialize_codebook(buf: bytes) -> Codebook:
+    """Inverse of :func:`serialize_codebook` (bit-identical codebook)."""
+    if len(buf) < 5:
+        raise ValueError("truncated codebook")
+    n, width = struct.unpack_from("<IB", buf, 0)
+    if width not in (4, 8):
+        raise ValueError("corrupt codebook header")
+    need = 5 + n * (width + 1)
+    if len(buf) < need:
+        raise ValueError("truncated codebook")
+    symbols = np.frombuffer(buf, dtype=f"<i{width}", count=n,
+                            offset=5).astype(np.int64)
+    lengths = np.frombuffer(buf, dtype=np.uint8, count=n,
+                            offset=5 + width * n).astype(np.int64)
+    return _canonicalize(symbols, lengths)
 
 
 def encoded_size_bits(cb: Codebook, data: np.ndarray | None = None, *,
@@ -202,26 +253,42 @@ def encode(cb: Codebook, data: np.ndarray, *,
 
 
 def decode(cb: Codebook, packed: np.ndarray, nbits: int, n_symbols: int) -> np.ndarray:
-    """Decode ``n_symbols`` symbols from a packed bitstream (canonical walk)."""
+    """Decode ``n_symbols`` symbols from a packed bitstream (canonical walk).
+
+    Degenerate codebooks round-trip without caller-side special-casing:
+    an empty codebook decodes only the empty stream (anything else raises),
+    and a single-symbol alphabet (1 bit per symbol on the wire, matching
+    :func:`encode` / :func:`code_lengths_for`) validates the advertised bit
+    count instead of ignoring the stream.  A stream that ends mid-codeword
+    raises ``ValueError`` rather than crashing, so truncated container
+    payloads surface as clean corruption errors.
+    """
     if n_symbols == 0:
         return np.zeros(0, dtype=np.int64)
+    symbols = cb.symbols
+    if len(symbols) == 0:
+        raise ValueError("cannot decode symbols with an empty codebook")
     bits = np.unpackbits(np.asarray(packed, dtype=np.uint8))[:nbits]
+    nbits = min(int(nbits), bits.size)
     out = np.empty(n_symbols, dtype=np.int64)
+    if len(symbols) == 1:
+        # degenerate: single-symbol alphabet, 1 bit per symbol on the wire
+        if nbits < n_symbols:
+            raise ValueError("truncated bitstream")
+        out[:] = symbols[0]
+        return out
     maxlen = cb.max_length
     first_code = cb.first_code
     first_index = cb.first_index
     count = cb.count
-    symbols = cb.symbols
-    if len(cb.symbols) == 1:
-        # degenerate: single-symbol alphabet, 1 bit per symbol
-        out[:] = symbols[0]
-        return out
     i = 0
     bl = bits.tolist()  # python ints — much faster to index than np scalars
     for k in range(n_symbols):
         code = 0
         l = 0
         while True:
+            if i >= nbits:
+                raise ValueError("truncated bitstream")
             code = (code << 1) | bl[i]
             i += 1
             l += 1

@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from . import huffman
 from .akdtree import akdtree_partition
 from .amr import AMRDataset
 from .blocks import BlockGrid, SubBlock, make_block_grid, extract_subblock
@@ -32,12 +33,35 @@ from .opst import opst_partition
 from .she import she_encode
 from .sz import SZResult, compress_interp, compress_lorenzo, compress_lor_reg
 
-__all__ = ["LevelResult", "AMRCompressionResult", "compress_level",
-           "compress_amr", "choose_strategy", "T0", "T1", "T2"]
+__all__ = ["LevelArtifacts", "LevelResult", "AMRCompressionResult",
+           "compress_level", "compress_amr", "choose_strategy",
+           "T0", "T1", "T2"]
 
 T0 = 0.50   # Lor/Reg+SHE: OpST+ vs AKDTree+ (Fig. 12 / Fig. 14)
 T1 = 0.50   # Interp: OpST vs AKDTree (Fig. 13)
 T2 = 0.85   # Interp: AKDTree vs GSP (Fig. 13)
+
+
+@dataclass
+class LevelArtifacts:
+    """Serialization-grade level state the aggregate accounting drops.
+
+    ``LevelResult`` carries bit totals and the reconstructed grid; the TACZ
+    container (``repro.io``) additionally needs the raw code streams, the
+    sub-block placement, and the shared codebook to emit real byte streams
+    and decode them back.  Kept by default (the arrays referenced here were
+    already materialized by the compressor — this holds references, it does
+    not copy).
+    """
+
+    mask: np.ndarray              # validity mask at the level's orig shape
+    orig_shape: tuple[int, ...]   # level shape before unit-block padding
+    grid_shape: tuple[int, ...]   # padded block-grid data shape
+    unit: int                     # unit-block edge (cells)
+    sz_block: int                 # Lor/Reg regression block edge
+    subblocks: list[SubBlock]     # placement (empty for gsp/global levels)
+    results: list[SZResult]       # per-sub-block codes/branch/betas
+    codebook: huffman.Codebook | None  # shared Huffman codebook (SHE levels)
 
 
 @dataclass
@@ -53,6 +77,8 @@ class LevelResult:
     density: float
     eb: float
     n_subblocks: int = 0
+    ratio: int = 1               # coarsening ratio vs the finest grid
+    artifacts: LevelArtifacts | None = field(default=None, repr=False)
 
     @property
     def total_bits(self) -> int:
@@ -90,13 +116,16 @@ def choose_strategy(density: float, *, algorithm: str, she: bool) -> str:
     return "gsp"
 
 
-def _global_compress(x: np.ndarray, eb: float, algorithm: str) -> SZResult:
+def _global_compress(x: np.ndarray, eb: float, algorithm: str,
+                     sz_block: int = 6) -> SZResult:
     if algorithm == "interp":
         return compress_interp(x, eb)
     if algorithm == "lorenzo":
         return compress_lorenzo(x, eb)
     if algorithm == "lor_reg":
-        return compress_lor_reg(x, eb)
+        # the block edge must match what the level records (the TACZ index
+        # stores sz_block and the decoder rebuilds the betas grid from it)
+        return compress_lor_reg(x, eb, block=sz_block)
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
@@ -120,7 +149,9 @@ def _merged_compress(groups: dict[tuple[int, ...], np.ndarray], eb: float,
 def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
                    unit: int = 8, algorithm: str = "lor_reg",
                    she: bool = True, strategy: str | None = None,
-                   sz_block: int = 6, batched: bool = True) -> LevelResult:
+                   sz_block: int = 6, batched: bool = True,
+                   ratio: int = 1, keep_artifacts: bool = True,
+                   lorenzo_engine: str = "auto") -> LevelResult:
     grid = make_block_grid(data, mask, unit=unit)
     density = grid.block_density
     if strategy is None:
@@ -130,15 +161,23 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
 
     if strategy == "gsp":
         padded, grid = gsp_pad(data, mask, unit=unit)
-        r = _global_compress(padded, eb, algorithm)
+        r = _global_compress(padded, eb, algorithm, sz_block)
         recon = gsp_unpad(r.recon, grid)[
             tuple(slice(0, s) for s in orig_shape)]
+        art = None
+        if keep_artifacts:
+            art = LevelArtifacts(mask=np.asarray(mask, dtype=bool),
+                                 orig_shape=tuple(orig_shape),
+                                 grid_shape=tuple(grid.data.shape),
+                                 unit=unit, sz_block=sz_block,
+                                 subblocks=[], results=[r], codebook=None)
         return LevelResult(strategy="gsp", algorithm=algorithm, she=False,
                            payload_bits=r.payload_bits,
                            codebook_bits=r.codebook_bits,
                            meta_bits=r.meta_bits + gsp_meta_bits(grid),
                            recon=recon, n_values=int(mask.sum()),
-                           density=density, eb=eb)
+                           density=density, eb=eb, ratio=ratio,
+                           artifacts=art)
 
     if strategy == "opst":
         subblocks = opst_partition(grid)
@@ -156,7 +195,7 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
     if she and algorithm == "lor_reg":
         bricks = [extract_subblock(grid, sb) for sb in subblocks]
         enc = she_encode(bricks, eb, block=sz_block, shared=True,
-                         batched=batched)
+                         batched=batched, lorenzo_engine=lorenzo_engine)
         recon = np.zeros(grid.data.shape, dtype=np.float32)
         for sb, r in zip(subblocks, enc.results):
             ox, oy, oz = sb.cell_origin(u)
@@ -164,13 +203,22 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
             recon[ox:ox + sx, oy:oy + sy, oz:oz + sz] = r.recon
         recon = recon[tuple(slice(0, s) for s in orig_shape)]
         recon = np.where(mask, recon, 0.0).astype(np.float32)
+        art = None
+        if keep_artifacts:
+            art = LevelArtifacts(mask=np.asarray(mask, dtype=bool),
+                                 orig_shape=tuple(orig_shape),
+                                 grid_shape=tuple(grid.data.shape),
+                                 unit=grid.unit, sz_block=sz_block,
+                                 subblocks=subblocks, results=enc.results,
+                                 codebook=enc.codebook)
         return LevelResult(strategy=strategy, algorithm=algorithm, she=True,
                            payload_bits=enc.payload_bits,
                            codebook_bits=enc.codebook_bits,
                            meta_bits=enc.meta_bits + sb_meta,
                            recon=recon, n_values=int(mask.sum()),
                            density=density, eb=eb,
-                           n_subblocks=len(subblocks))
+                           n_subblocks=len(subblocks), ratio=ratio,
+                           artifacts=art)
 
     # TAC path: merge same-size blocks into 4D arrays, compress each group
     groups: dict[tuple[int, ...], list[tuple[SubBlock, np.ndarray]]] = {}
@@ -197,17 +245,22 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
             recon[ox:ox + sx, oy:oy + sy, oz:oz + sz] = back
     recon = recon[tuple(slice(0, s) for s in orig_shape)]
     recon = np.where(mask, recon, 0.0).astype(np.float32)
+    # merged-4D (non-SHE) groups interleave many sub-blocks into one code
+    # stream — no per-sub-block payload exists, so no TACZ artifacts.
     return LevelResult(strategy=strategy, algorithm=algorithm, she=False,
                        payload_bits=payload, codebook_bits=cb_bits,
                        meta_bits=sb_meta + n_groups * 64,
                        recon=recon, n_values=int(mask.sum()),
-                       density=density, eb=eb, n_subblocks=len(subblocks))
+                       density=density, eb=eb, n_subblocks=len(subblocks),
+                       ratio=ratio)
 
 
 def compress_amr(ds: AMRDataset, *, eb: float | list[float],
                  unit: int = 8, algorithm: str = "lor_reg",
                  she: bool = True, strategy: str | None = None,
-                 sz_block: int = 6, batched: bool = True) -> AMRCompressionResult:
+                 sz_block: int = 6, batched: bool = True,
+                 keep_artifacts: bool = True,
+                 lorenzo_engine: str = "auto") -> AMRCompressionResult:
     """Level-wise TAC/TAC+ over a whole AMR dataset.
 
     ``eb`` may be a scalar (uniform bound) or per-level list — the paper's
@@ -215,6 +268,17 @@ def compress_amr(ds: AMRDataset, *, eb: float | list[float],
     block edge; coarser levels use ``max(2, unit / ratio)`` so the unit
     block tracks the refinement granularity (the paper's 16³ unit blocks
     are likewise fixed in *domain* units, not in per-level cells).
+
+    ``keep_artifacts=True`` (default) retains the per-sub-block code
+    streams, placement, and shared codebook on each level so the result
+    can be serialized to a TACZ container (``repro.io.write``).  That
+    pins roughly 3× the level data in memory (int64 codes dominate) —
+    accounting-only callers that never serialize should pass
+    ``keep_artifacts=False``.
+
+    ``lorenzo_engine`` is forwarded to the batched Lor/Reg compressor:
+    ``"auto"`` uses the Pallas kernel on TPU (float32 fast path),
+    ``"numpy"`` forces the bit-exact float64 host oracle on any backend.
     """
     ebs = eb if isinstance(eb, (list, tuple)) else [eb] * ds.n_levels
     if len(ebs) != ds.n_levels:
@@ -225,6 +289,9 @@ def compress_amr(ds: AMRDataset, *, eb: float | list[float],
         levels.append(compress_level(lvl.data, lvl.mask, eb=float(e),
                                      unit=lvl_unit, algorithm=algorithm,
                                      she=she, strategy=strategy,
-                                     sz_block=sz_block, batched=batched))
+                                     sz_block=sz_block, batched=batched,
+                                     ratio=lvl.ratio,
+                                     keep_artifacts=keep_artifacts,
+                                     lorenzo_engine=lorenzo_engine))
     name = "tac+" if (she and algorithm == "lor_reg") else "tac"
     return AMRCompressionResult(levels=levels, method=f"{name}/{algorithm}")

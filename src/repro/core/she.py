@@ -39,7 +39,8 @@ from . import huffman
 from .compat import HAVE_ZSTD, zstd_size_bits
 from .sz import SZResult, compress_lor_reg, compress_lor_reg_batched
 
-__all__ = ["SHEResult", "she_encode", "aggregate_histogram"]
+__all__ = ["SHEResult", "she_encode", "aggregate_histogram",
+           "encode_brick_payloads"]
 
 # Above this code span the dense histogram would be larger than the unique
 # pass it replaces; fall back to np.unique (outlier-heavy streams only).
@@ -124,10 +125,37 @@ def _shared_entropy_stage(results: list[SZResult], *, use_zstd: bool,
     return int(payload), huffman.codebook_size_bits(cb), cb
 
 
+def encode_brick_payloads(cb: huffman.Codebook,
+                          codes_list: list[np.ndarray],
+                          ) -> list[tuple[bytes, int]]:
+    """One byte-aligned packed bitstream per brick under the shared codebook.
+
+    This is the TACZ container's payload framing: every sub-block's code
+    stream is encoded (and byte-padded) *separately* so any sub-block can be
+    decoded without touching its neighbors — the random-access property the
+    ROI reader builds on.  Returns ``(payload bytes, nbits)`` per brick;
+    ``nbits`` is exactly ``code_lengths_for(cb, codes).sum()``.
+    """
+    codes_list = [np.asarray(c, dtype=np.int64).ravel() for c in codes_list]
+    # one symbol-index pass over the pooled stream (the codebook-sort in
+    # symbol_indices is O(S log S) — pay it once, not once per brick),
+    # split back at brick boundaries for the per-brick encoder launches
+    pooled = (np.concatenate(codes_list) if codes_list
+              else np.zeros(0, dtype=np.int64))
+    idx = (huffman.symbol_indices(cb, pooled) if pooled.size
+           else np.zeros(0, dtype=np.int64))
+    splits = np.cumsum([c.size for c in codes_list])[:-1]
+    out: list[tuple[bytes, int]] = []
+    for codes, ind in zip(codes_list, np.split(idx, splits)):
+        packed, nbits = huffman.encode(cb, codes, indices=ind)
+        out.append((packed.tobytes(), int(nbits)))
+    return out
+
+
 def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
                shared: bool = True, use_zstd: bool = True,
-               batched: bool = True,
-               hist_engine: str = "numpy") -> SHEResult:
+               batched: bool = True, hist_engine: str = "numpy",
+               lorenzo_engine: str = "auto") -> SHEResult:
     """Compress a list of 3D/4D bricks with per-brick Lor/Reg prediction.
 
     ``shared=True``  → Algorithm 4: one Huffman tree over all bricks, one
@@ -139,7 +167,12 @@ def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
     ``batched=True`` (default) vectorizes the prediction stage over
     same-shape groups of bricks and builds the shared codebook from one
     aggregated histogram; ``batched=False`` is the sequential per-brick
-    reference path.  Outputs are bit-identical either way.
+    reference path.  Outputs are bit-identical either way *on the numpy
+    Lorenzo engine* (the CPU default).  ``lorenzo_engine="auto"`` routes
+    the batched Lorenzo branch through the float32 Pallas kernel when a
+    TPU is attached — codes there may differ from the float64 oracle in
+    half-integer rounding; pass ``lorenzo_engine="numpy"`` to force
+    bit-exactness on any backend.
     """
     if batched:
         results: list[SZResult | None] = [None] * len(bricks)
@@ -153,8 +186,8 @@ def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
                                               count_entropy=False)
         for shape, idxs in groups.items():
             stack = np.stack([np.asarray(bricks[i]) for i in idxs])
-            for i, r in zip(idxs, compress_lor_reg_batched(stack, eb,
-                                                           block=block)):
+            for i, r in zip(idxs, compress_lor_reg_batched(
+                    stack, eb, block=block, engine=lorenzo_engine)):
                 results[i] = r
     else:
         results = [compress_lor_reg(b, eb, block=block, count_entropy=False)

@@ -56,7 +56,9 @@ __all__ = [
     "compress_lor_reg",
     "compress_lor_reg_batched",
     "compress_interp",
+    "decode_codes",
     "entropy_bits",
+    "reg_block_grid",
 ]
 
 # --------------------------------------------------------------------------
@@ -309,12 +311,41 @@ def _block_view(a: np.ndarray, b: int) -> np.ndarray:
              .transpose(0, 2, 4, 1, 3, 5)), (bx, by, bz)
 
 
+def reg_block_grid(shape: tuple[int, ...], block: int
+                   ) -> tuple[int, tuple[int, ...]]:
+    """(block edge b, blocked-grid shape) for a brick's regression branch.
+
+    This derivation is load-bearing for serialized data: the encoder's
+    code layout, :func:`decode_codes`, and the TACZ reader's betas/prefix
+    arithmetic must all agree on it, so it lives in exactly one place.
+    """
+    b = min(block, min(shape)) if min(shape) >= 2 else 1
+    return b, tuple(-(-s // b) for s in shape)
+
+
+def _fit_from_betas(betas: np.ndarray, b: int) -> np.ndarray:
+    """Replay the plane fit from stored float32 betas (exact float64 eval).
+
+    Shared by the encoder and :func:`decode_codes`, so a regression brick
+    reconstructed from serialized (betas, codes) is bit-identical to the
+    encoder-side recon.
+    """
+    coord = np.arange(b, dtype=np.float64) - (b - 1) / 2.0
+    bf = np.asarray(betas).astype(np.float64)
+    return (bf[..., 0, None, None, None]
+            + bf[..., 1, None, None, None] * coord[:, None, None]
+            + bf[..., 2, None, None, None] * coord[None, :, None]
+            + bf[..., 3, None, None, None] * coord[None, None, :])
+
+
 def _regression_fit(xb: np.ndarray, b: int) -> tuple[np.ndarray, np.ndarray]:
     """Closed-form per-block plane fit f = β0 + β1 i + β2 j + β3 k.
 
     ``xb``: (..., b, b, b) blocks.  Returns (betas float32 (...,4), fit).
     Coordinates are centered so the normal equations are diagonal — this is
     a pure batched-``einsum`` computation (MXU-friendly, DESIGN.md §3).
+    The fit is evaluated from the *float32-cast* betas so the decoder can
+    replay it exactly from the serialized coefficients.
     """
     coord = np.arange(b, dtype=np.float64) - (b - 1) / 2.0
     var = float((coord ** 2).sum()) * b * b  # Σ over block of (i-ī)²
@@ -324,12 +355,22 @@ def _regression_fit(xb: np.ndarray, b: int) -> tuple[np.ndarray, np.ndarray]:
     b2 = np.einsum("...ijk,j->...", xc, coord) / var
     b3 = np.einsum("...ijk,k->...", xc, coord) / var
     betas = np.stack([mean[..., 0, 0, 0], b1, b2, b3], axis=-1).astype(np.float32)
-    bf = betas.astype(np.float64)
-    fit = (bf[..., 0, None, None, None]
-           + bf[..., 1, None, None, None] * coord[:, None, None]
-           + bf[..., 2, None, None, None] * coord[None, :, None]
-           + bf[..., 3, None, None, None] * coord[None, None, :])
-    return betas, fit
+    return betas, _fit_from_betas(betas, b)
+
+
+def _reg_recon(betas: np.ndarray, codes_reg: np.ndarray, b: int,
+               bgrid: tuple[int, int, int], orig_shape: tuple[int, ...],
+               eb: float) -> np.ndarray:
+    """Regression-branch reconstruction from (betas, codes) — the decode
+    path of the serialized container, and the exact recon the encoder uses."""
+    bx, by, bz = bgrid
+    fit = _fit_from_betas(betas, b)
+    recon_b = (fit + 2.0 * eb * np.asarray(codes_reg, dtype=np.int64)
+               ).astype(np.float32)
+    recon = (recon_b.reshape(bx, by, bz, b, b, b)
+                    .transpose(0, 3, 1, 4, 2, 5)
+                    .reshape(bx * b, by * b, bz * b))
+    return recon[tuple(slice(0, s) for s in orig_shape)]
 
 
 def _code_cost_bits(codes: np.ndarray, axis) -> np.ndarray:
@@ -384,7 +425,7 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
                         codebook_bits=cb_bits, meta_bits=meta, eb=eb,
                         method="lor_reg")
 
-    b = min(block, min(x.shape)) if min(x.shape) >= 2 else 1
+    b, _ = reg_block_grid(x.shape, block)
     # --- Lorenzo branch: global dual-quant Lorenzo over the brick ----------
     q = prequant(x, eb)
     codes_lor = lorenzo_nd_codes(q)
@@ -404,12 +445,7 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
         use_reg = cost_reg < cost_lor
 
     if use_reg:
-        bx, by, bz = bgrid
-        recon_b = (fit + 2.0 * eb * codes_reg).astype(np.float32)
-        recon = (recon_b.reshape(bx, by, bz, b, b, b)
-                        .transpose(0, 3, 1, 4, 2, 5)
-                        .reshape(bx * b, by * b, bz * b))
-        recon = recon[tuple(slice(0, s) for s in orig_shape)]
+        recon = _reg_recon(betas, codes_reg, b, bgrid, orig_shape, eb)
         codes = codes_reg
         meta = _DIM_META_BITS + 1 + n_blocks * 4 * 32
         method = "lor_reg/reg"
@@ -428,6 +464,45 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=meta, eb=eb,
                     method=method, extras=extras)
+
+
+# ------------------------- decode from serialized codes ---------------------
+
+
+def decode_codes(codes: np.ndarray, shape: tuple[int, ...], eb: float, *,
+                 branch: str, block: int = 6,
+                 betas: np.ndarray | None = None) -> np.ndarray:
+    """Reconstruct an array from its quantization-code stream.
+
+    This is the read path of the TACZ container: given the codes a
+    ``compress_*`` front-end produced (plus the regression betas for the
+    ``reg`` branch), replay the reconstruction **bit-identically** to the
+    ``recon`` the compressor returned.
+
+      * ``branch="lorenzo"`` — inverse of the global N-D Lorenzo codes
+        (:func:`compress_lorenzo` and the Lorenzo branch of
+        :func:`compress_lor_reg`), any rank.
+      * ``branch="interp"``  — inverse of :func:`compress_interp`.
+      * ``branch="reg"``     — regression branch of
+        :func:`compress_lor_reg`; ``codes`` are the blocked residuals and
+        ``betas`` the per-``block³`` plane coefficients (float32, shape
+        ``(bx, by, bz, 4)``).
+    """
+    shape = tuple(int(s) for s in shape)
+    codes = np.asarray(codes, dtype=np.int64)
+    if branch == "lorenzo":
+        return dequant(lorenzo_nd_recon(codes.reshape(shape)), eb)
+    if branch == "interp":
+        return dequant(interp_nd_recon(codes.reshape(shape)), eb)
+    if branch == "reg":
+        if betas is None:
+            raise ValueError("regression branch needs betas")
+        if len(shape) != 3:
+            raise ValueError("regression branch decodes 3D bricks only")
+        b, bgrid = reg_block_grid(shape, block)
+        codes_reg = codes.reshape(tuple(bgrid) + (b, b, b))
+        return _reg_recon(betas, codes_reg, b, bgrid, shape, eb)
+    raise ValueError(f"unknown branch {branch!r}")
 
 
 # ----------------------- batched Lor/Reg (SHE hot path) ---------------------
@@ -460,8 +535,53 @@ def _code_cost_bits_rows(codes: np.ndarray) -> np.ndarray:
     return mag.reshape(mag.shape[0], -1).sum(axis=1) + 1.0
 
 
-def compress_lor_reg_batched(x: np.ndarray, eb: float, *,
-                             block: int = 6) -> list[SZResult]:
+def _tpu_attached() -> bool:
+    """True when JAX's default backend is a real TPU (ROADMAP open item:
+    the batched Lorenzo branch routes through the Pallas kernel there)."""
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - jax always present in-repo
+        return False
+
+
+# One brick must fit in one VMEM tile (the kernel's zero-halo is per tile,
+# so tile == brick is the independence contract); this is the default tile's
+# footprint budget from repro.kernels.lorenzo3d.
+_MAX_PALLAS_BRICK = 8 * 128 * 128
+# The kernel quantizes as rint(x · float32(1/2eb)) in float32 and stores
+# int32 codes; the error-bound guarantee needs the quantized integers to be
+# float32-exact, i.e. |x|/(2eb) < 2^24 (one bit of margin kept).
+_MAX_PALLAS_Q = float(2 ** 23)
+
+
+def _lorenzo_codes_batched_pallas(x: np.ndarray, eb: float) -> np.ndarray | None:
+    """Fused prequant+Lorenzo via ``repro.kernels.lorenzo3d`` (batched).
+
+    The tile is the whole brick — the kernel computes a zero-halo Lorenzo
+    per tile, so tile == brick is what makes each sub-block's prediction
+    self-contained (Alg. 4 line 4).  Returns None (callers fall back to
+    the numpy oracle) when a brick exceeds the VMEM tile budget or when
+    the quantized magnitudes exceed the float32-exact integer range — past
+    that the kernel's float32/int32 arithmetic would break the error
+    bound rather than merely differ in last-ulp rounding.  The numpy host
+    path stays the bit-exact float64/int64 oracle.
+    """
+    shape = tuple(int(s) for s in x.shape[1:])
+    if int(np.prod(shape)) > _MAX_PALLAS_BRICK:
+        return None
+    if float(np.abs(x).max(initial=0.0)) / (2.0 * eb) >= _MAX_PALLAS_Q:
+        return None
+    from repro.kernels import ops
+
+    codes = ops.lorenzo3d_codes_batched(x.astype(np.float32), eb=float(eb),
+                                        tile=shape)
+    return np.asarray(codes).astype(np.int64)
+
+
+def compress_lor_reg_batched(x: np.ndarray, eb: float, *, block: int = 6,
+                             engine: str = "auto") -> list[SZResult]:
     """Batched :func:`compress_lor_reg` over a stack of same-shape bricks.
 
     ``x``: (N, X, Y, Z) — N independent 3D bricks (e.g. one padded-shape
@@ -471,6 +591,16 @@ def compress_lor_reg_batched(x: np.ndarray, eb: float, *,
     choice) to ``compress_lor_reg(x[i], eb, block=block,
     count_entropy=False)`` — the sequential path stays the oracle.
 
+    ``engine`` selects the Lorenzo-branch *codes* backend: ``"numpy"`` is
+    the bit-exact host oracle; ``"pallas"`` routes the fused
+    prequant+Lorenzo through the batched Pallas kernel — float32/int32
+    on-device arithmetic, falling back to numpy when a brick exceeds the
+    VMEM tile budget or the float32-exact quantization range.  ``"auto"``
+    (default) picks ``"pallas"`` when a TPU backend is attached and
+    ``"numpy"`` otherwise.  Reconstruction always uses the float64 host
+    dequant (the same arithmetic ``decode_codes`` replays), so serialized
+    codes round-trip bit-identically to ``recon`` on every backend.
+
     The entropy stage is intentionally left to the caller (payloads are 0):
     SHE pools all bricks' codes under one shared codebook (paper Alg. 4),
     so pricing them here would be wasted work.
@@ -478,15 +608,24 @@ def compress_lor_reg_batched(x: np.ndarray, eb: float, *,
     x = np.asarray(x)
     if x.ndim != 4:
         raise ValueError("expected a (N, X, Y, Z) stack of 3D bricks")
+    if engine not in ("auto", "numpy", "pallas"):
+        raise ValueError(f"unknown engine {engine!r}")
     n = x.shape[0]
     if n == 0:
         return []
     bshape = x.shape[1:]
-    b = min(block, min(bshape)) if min(bshape) >= 2 else 1
+    b, _ = reg_block_grid(bshape, block)
 
     # --- Lorenzo branch: zero-halo dual-quant Lorenzo per brick ------------
-    q = prequant(x, eb)
-    codes_lor = lorenzo_nd_codes(q, axes=(1, 2, 3))
+    if engine == "auto":
+        engine = "pallas" if _tpu_attached() else "numpy"
+    codes_lor = None
+    if engine == "pallas":
+        codes_lor = _lorenzo_codes_batched_pallas(x, eb)
+        if codes_lor is None:
+            engine = "numpy"
+    if codes_lor is None:
+        codes_lor = lorenzo_nd_codes(prequant(x, eb), axes=(1, 2, 3))
     cost_lor = _code_cost_bits_rows(codes_lor)
 
     # --- Regression branch: per-block plane fits ---------------------------
@@ -508,6 +647,10 @@ def compress_lor_reg_batched(x: np.ndarray, eb: float, *,
     lor_idx = np.flatnonzero(~use_reg)
     reg_idx = np.flatnonzero(use_reg)
     if lor_idx.size:
+        # recon always goes through the float64 host dequant — the same
+        # arithmetic decode_codes replays — so a container written from
+        # kernel-produced codes round-trips bit-identically on any backend
+        # (the kernel accelerates the codes hot loop; dequant is cheap)
         recon[lor_idx] = dequant(
             lorenzo_nd_recon(codes_lor[lor_idx], axes=(1, 2, 3)), eb)
     if reg_idx.size:

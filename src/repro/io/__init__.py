@@ -1,0 +1,31 @@
+"""``repro.io`` — the TACZ container: random-access storage for TAC+.
+
+TACZ turns the in-memory bit accounting of the compression pipeline into
+a real I/O system: a framed, versioned file with a per-level /
+per-sub-block index (origin, shape, branch, error bound, byte offset,
+CRC), one shared-Huffman codebook section per level, and byte-aligned
+sub-block payloads.
+
+  * :func:`write` / :class:`TACZWriter` — one-shot or streaming writes
+    (background encoder thread, atomic tmp + ``os.replace`` publish).
+  * :func:`read` / :func:`read_roi` / :class:`TACZReader` — full or
+    region-of-interest decode; ROI touches only the sub-blocks whose
+    cuboids intersect the query box.
+  * :mod:`repro.io.tensor` — one-tensor TACZ blobs for lossy checkpoints.
+
+Quick start::
+
+    from repro import io as tacz
+    from repro.core import amr, hybrid
+
+    ds = amr.load_preset("run1_z10")
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    tacz.write("snap.tacz", res)
+    crops = tacz.read_roi("snap.tacz", ((0, 16), (0, 16), (0, 16)))
+"""
+from .format import TACZ_MAGIC, TACZ_VERSION
+from .reader import ROILevel, TACZReader, read, read_roi
+from .writer import TACZWriter, write
+
+__all__ = ["TACZ_MAGIC", "TACZ_VERSION", "ROILevel", "TACZReader",
+           "TACZWriter", "read", "read_roi", "write"]

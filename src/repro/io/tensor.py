@@ -1,0 +1,71 @@
+"""TACZ blobs for single tensors — the checkpoint-manager integration.
+
+``CheckpointManager`` lossy mode used to write an ad-hoc ``(blob, eb,
+dtype, shape)`` dict per tensor; those parameters now travel inside a
+self-describing one-level TACZ container instead, so a lossy checkpoint
+entry is the same indexed, CRC-framed, versioned format the AMR pipeline
+writes — one decoder, one corruption story.
+
+The encoding itself is unchanged ("sz-light", DESIGN.md §6): dual-quant
+N-D Lorenzo codes stored *raw* (int16 when they fit, int32 otherwise)
+under a zstd/zlib byte pass — no Huffman stage, keeping restore fast.  On
+the wire that is a ``STRATEGY_GLOBAL`` level with a ``CODEC_RAW_*``
+payload.
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from repro.core.compat import HAVE_ZSTD, zstd_compress
+from repro.core.sz import lorenzo_nd_codes, prequant
+
+from . import format as fmt
+from .reader import TACZReader
+from .writer import build_container
+
+__all__ = ["encode_tensor", "decode_tensor"]
+
+
+def encode_tensor(a: np.ndarray, eb: float) -> bytes:
+    """Error-bounded lossy encoding of one tensor → TACZ container bytes.
+
+    ``eb`` is the absolute error bound; the reconstruction satisfies
+    ``|a - decode_tensor(blob)| ≤ eb`` (+ float32 rounding).
+    """
+    a = np.asarray(a)
+    if not 1 <= a.ndim <= fmt.MAX_RANK:
+        raise ValueError(f"tensor rank {a.ndim} outside 1..{fmt.MAX_RANK}")
+    codes = lorenzo_nd_codes(prequant(a, eb))
+    if np.abs(codes).max(initial=0) < 2 ** 15:
+        raw = codes.astype("<i2").tobytes()
+        codec = fmt.CODEC_RAW_I16
+    else:
+        raw = codes.astype("<i4").tobytes()
+        codec = fmt.CODEC_RAW_I32
+    if HAVE_ZSTD:
+        payload = zstd_compress(raw)
+        compressor = fmt.COMPRESSOR_ZSTD
+    else:
+        payload = zlib.compress(raw, 6)
+        compressor = fmt.COMPRESSOR_ZLIB
+    shape = tuple(int(s) for s in a.shape)
+    entry = fmt.LevelEntry(
+        shape=shape, grid_shape=shape, strategy=fmt.STRATEGY_GLOBAL,
+        algorithm=fmt.ALGO_LORENZO, unit=1, sz_block=6, ratio=1,
+        eb=float(eb), n_values=int(a.size), density=1.0)
+    entry.subblocks.append(fmt.SubBlockEntry(
+        origin=(0, 0, 0), size=(shape + (1, 1, 1))[:3],
+        branch=fmt.BRANCH_LORENZO, codec=codec, compressor=compressor,
+        payload_off=0, payload_len=len(payload), nbits=0,
+        n_codes=int(codes.size), betas_len=0, crc=zlib.crc32(payload)))
+    return build_container([(payload, entry)])
+
+
+def decode_tensor(blob: bytes) -> np.ndarray:
+    """Inverse of :func:`encode_tensor` → float32 reconstruction."""
+    with TACZReader(blob) as rd:
+        if rd.n_levels != 1:
+            raise ValueError("tensor blob must hold exactly one level")
+        return rd.read_level(0)

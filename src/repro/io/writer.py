@@ -1,0 +1,390 @@
+"""TACZ writer: level serialization + a streaming, double-buffered writer.
+
+Two entry points:
+
+  * :func:`write` — one-shot: serialize an ``AMRCompressionResult`` (the
+    output of ``repro.core.hybrid.compress_amr``) or compress-and-write an
+    ``AMRDataset`` directly.
+  * :class:`TACZWriter` — streaming: ``add_level(data, mask)`` hands raw
+    levels to a background encoder thread (bounded queue → double
+    buffering: the simulation produces level *i+1* while level *i* is
+    being SHE-encoded and appended), and ``close()`` finalizes the index
+    and publishes the file atomically via the checkpoint manager's
+    tmp + ``os.replace`` pattern — a crashed write never leaves a
+    half-valid ``.tacz`` behind.
+
+Serializable levels are the TAC+ SHE path (per-sub-block payloads under
+one shared-Huffman codebook per level — the random-access case), GSP /
+global single-payload levels, and raw-code "global" tensor levels (see
+``repro.io.tensor``).  The merged-4D non-SHE path interleaves sub-blocks
+inside shared code streams, so it has no per-sub-block payload to index;
+asking to serialize it raises with a pointer at ``she=True``.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import weakref
+import zlib
+
+import numpy as np
+
+from repro.core import huffman, she
+from repro.core.amr import AMRDataset
+from repro.core.hybrid import (AMRCompressionResult, LevelResult,
+                               compress_level)
+from repro.core.sz import SZResult
+
+from . import format as fmt
+
+__all__ = ["TACZWriter", "pack_level", "write"]
+
+
+def _branch_code(r: SZResult) -> int:
+    b = (r.extras or {}).get("branch")
+    if b == "reg":
+        return fmt.BRANCH_REG
+    if b == "lorenzo" or r.method == "lorenzo":
+        return fmt.BRANCH_LORENZO
+    if r.method == "interp":
+        return fmt.BRANCH_INTERP
+    raise ValueError(f"cannot serialize SZ method {r.method!r}")
+
+
+def _betas_bytes(r: SZResult) -> bytes:
+    if (r.extras or {}).get("branch") != "reg":
+        return b""
+    return np.ascontiguousarray(r.extras["betas"], dtype="<f4").tobytes()
+
+
+def pack_level(lr: LevelResult) -> tuple[bytes, fmt.LevelEntry]:
+    """Serialize one compressed level into (section blob, index entry).
+
+    Offsets inside the returned entry are blob-relative; the caller places
+    the blob in the file and calls ``entry.shift_offsets(base)``.
+    """
+    art = lr.artifacts
+    if art is None:
+        raise ValueError(
+            "level has no serialization artifacts — the merged-4D non-SHE "
+            "path is not indexable; compress with she=True (TAC+) or "
+            "strategy='gsp', and keep_artifacts=True")
+    if lr.strategy not in fmt.STRATEGY_CODES:
+        raise ValueError(f"unknown strategy {lr.strategy!r}")
+
+    blob = bytearray()
+
+    def append(section: bytes) -> tuple[int, int]:
+        off = len(blob)
+        blob.extend(section)
+        return off, len(section)
+
+    entry = fmt.LevelEntry(
+        shape=tuple(int(s) for s in art.orig_shape),
+        grid_shape=tuple(int(s) for s in art.grid_shape),
+        strategy=fmt.STRATEGY_CODES[lr.strategy],
+        algorithm=fmt.ALGO_CODES[lr.algorithm],
+        unit=int(art.unit), sz_block=int(art.sz_block), ratio=int(lr.ratio),
+        eb=float(lr.eb), n_values=int(lr.n_values), density=float(lr.density))
+
+    # --- shared codebook section (one per level, paper Alg. 4) -------------
+    if lr.she:
+        cb = art.codebook
+    else:
+        # gsp/global levels: one payload, rebuild its (deterministic)
+        # codebook from the code stream so decode needs no recompression
+        cb = huffman.build_codebook(np.asarray(art.results[0].codes,
+                                               dtype=np.int64))
+    cb_bytes = huffman.serialize_codebook(cb)
+    entry.codebook_off, entry.codebook_len = append(cb_bytes)
+    entry.codebook_crc = zlib.crc32(cb_bytes)
+
+    # --- validity mask section (packbits + zlib; omitted when all-True) ----
+    mask = np.asarray(art.mask, dtype=bool)
+    if not mask.all():
+        mask_bytes = zlib.compress(np.packbits(mask.ravel()).tobytes(), 6)
+        entry.mask_off, entry.mask_len = append(mask_bytes)
+        entry.mask_crc = zlib.crc32(mask_bytes)
+        entry.mask_compressor = fmt.COMPRESSOR_ZLIB
+
+    # --- sub-block payloads (byte-aligned, independently decodable) --------
+    if art.subblocks:
+        subblocks, results = art.subblocks, art.results
+        origins = [sb.cell_origin(art.unit) for sb in subblocks]
+        sizes = [sb.cell_size(art.unit) for sb in subblocks]
+    else:
+        # single payload covering the whole (padded) grid; origin/size are
+        # informative for 3D levels only (higher ranks decode via shape)
+        results = art.results
+        origins = [(0, 0, 0)]
+        gs = tuple(int(s) for s in art.grid_shape[:3])
+        sizes = [gs + (1,) * (3 - len(gs))]
+    payloads = she.encode_brick_payloads(
+        cb, [np.asarray(r.codes, dtype=np.int64) for r in results])
+    for r, (packed, nbits), origin, size in zip(results, payloads,
+                                                origins, sizes):
+        betas = _betas_bytes(r)
+        payload = betas + packed
+        off, length = append(payload)
+        entry.subblocks.append(fmt.SubBlockEntry(
+            origin=tuple(int(o) for o in origin),
+            size=tuple(int(s) for s in size),
+            branch=_branch_code(r), codec=fmt.CODEC_HUFFMAN,
+            compressor=fmt.COMPRESSOR_NONE,
+            payload_off=off, payload_len=length, nbits=int(nbits),
+            n_codes=int(np.asarray(r.codes).size), betas_len=len(betas),
+            crc=zlib.crc32(payload)))
+    return bytes(blob), entry
+
+
+def build_container(packed: list[tuple[bytes, fmt.LevelEntry]],
+                    ) -> bytes:
+    """Assemble header + level blobs + index + footer into one buffer
+    (the in-memory path used for checkpoint tensor blobs)."""
+    out = bytearray(fmt.pack_header())
+    entries = []
+    for blob, entry in packed:
+        entry.shift_offsets(len(out))
+        out.extend(blob)
+        entries.append(entry)
+    index = fmt.pack_index(entries)
+    index_off = len(out)
+    out.extend(index)
+    out.extend(fmt.pack_footer(index_off, len(index), fmt.index_crc(index)))
+    return bytes(out)
+
+
+_SENTINEL = object()
+
+
+def _nudge(q: queue.Queue) -> None:
+    """GC finalizer: wake the encoder thread of an abandoned writer."""
+    try:
+        q.put_nowait(_SENTINEL)
+    except queue.Full:   # worker is mid-item; it re-checks liveness next get
+        pass
+
+
+def _worker_loop(wref, q: queue.Queue, f, tmp: str) -> None:
+    """Encoder-thread body.  Holds only a weakref to the writer so an
+    abandoned ``TACZWriter`` (never ``close()``d) can be collected; on
+    collection the thread wakes (via the ``weakref.finalize`` nudge or the
+    next queued item), closes the fd, unlinks the tmp file, and exits —
+    no thread/fd/tmp leak per failed write."""
+    while True:
+        item = q.get()
+        w = wref()
+        try:
+            if item is _SENTINEL or w is None:
+                if w is None:   # abandoned without close()/abort()
+                    try:
+                        f.close()
+                    except OSError:  # pragma: no cover
+                        pass
+                    try:
+                        os.remove(tmp)
+                    except OSError:
+                        pass
+                return
+            if w._err is None and not w._aborted:
+                w._append_level(w._encode(item))
+        except BaseException as exc:  # propagate to the producer thread
+            if w is not None:
+                w._err = exc
+        finally:
+            del w
+            q.task_done()
+
+
+class TACZWriter:
+    """Streaming TACZ writer with a background encoder thread.
+
+    ``add_level`` enqueues a snapshot of the level and returns immediately;
+    a worker thread runs the batched SHE pipeline and appends the encoded
+    sections.  The queue is bounded: with the default ``queue_depth=2``
+    the producer can hold two snapshots queued while a third encodes
+    (peak three in-flight levels); pass ``queue_depth=1`` for strict
+    double buffering (one queued + one encoding).
+
+    The file is written to ``<path>.tmp`` and moved into place by
+    ``close()`` via ``os.replace`` — readers never observe a partial file.
+    Use as a context manager; a writer dropped without ``close()`` /
+    ``abort()`` is still reaped at GC time (encoder thread exits, fd
+    closed, tmp unlinked) but the file is never published.
+    """
+
+    def __init__(self, path: str, *, eb: float | None = None, unit: int = 8,
+                 algorithm: str = "lor_reg", she: bool = True,
+                 strategy: str | None = None, sz_block: int = 6,
+                 batched: bool = True, lorenzo_engine: str = "auto",
+                 queue_depth: int = 2):
+        self.path = str(path)
+        self._tmp = self.path + ".tmp"
+        self._defaults = dict(eb=eb, unit=unit, algorithm=algorithm, she=she,
+                              strategy=strategy, sz_block=sz_block,
+                              batched=batched, lorenzo_engine=lorenzo_engine)
+        self._f = open(self._tmp, "wb")
+        self._f.write(fmt.pack_header())
+        self._off = fmt.HEADER_SIZE
+        self._entries: list[fmt.LevelEntry] = []
+        self._err: BaseException | None = None
+        self._queue: queue.Queue = queue.Queue(maxsize=max(1, queue_depth))
+        self._finalized = False          # close() published the file
+        self._aborted = False            # tmp dropped; writer unusable
+        self._sentinel_sent = False
+        self._thread = threading.Thread(
+            target=_worker_loop,
+            args=(weakref.ref(self), self._queue, self._f, self._tmp),
+            daemon=True)
+        self._thread.start()
+        self._reaper = weakref.finalize(self, _nudge, self._queue)
+
+    # ------------------------------ producer -------------------------------
+
+    def add_level(self, data: np.ndarray, mask: np.ndarray | None = None, *,
+                  eb: float | None = None, ratio: int = 1,
+                  unit: int | None = None) -> None:
+        """Queue one raw level for encoding (snapshot taken immediately).
+
+        ``unit`` defaults to ``max(2, default_unit // ratio)`` — the same
+        domain-tracking rule ``compress_amr`` applies, so a streamed file
+        decodes bit-identically to the one-shot path.
+        """
+        self._check_live()
+        eb = self._defaults["eb"] if eb is None else eb
+        if eb is None:
+            raise ValueError("no error bound: pass eb= here or to the writer")
+        if unit is None:
+            unit = max(2, int(self._defaults["unit"]) // max(int(ratio), 1))
+        data = np.array(data, dtype=np.float32, copy=True)
+        mask = (data != 0) if mask is None else np.array(mask, dtype=bool,
+                                                         copy=True)
+        self._put(("raw", data, mask, float(eb), int(ratio), int(unit)))
+
+    def add_compressed(self, lr: LevelResult) -> None:
+        """Queue an already-compressed level (needs ``artifacts``)."""
+        self._check_live()
+        if lr.artifacts is None:
+            raise ValueError(
+                "LevelResult has no serialization artifacts — the merged-4D "
+                "non-SHE path is not indexable (compress with she=True or "
+                "strategy='gsp'), and compression must run with "
+                "keep_artifacts=True")
+        self._put(("level", lr))
+
+    def close(self) -> str:
+        """Drain the queue, write index + footer, publish atomically.
+
+        Raises the background encoder's error (if any) — even when that
+        error already surfaced through ``add_level`` — after dropping the
+        tmp file; the destination path is never reported as written
+        unless it actually was.
+        """
+        if self._finalized:
+            return self.path
+        self._stop_worker()
+        if self._aborted:
+            raise ValueError("writer was aborted")
+        try:
+            if self._err is not None:
+                raise self._err
+            index = fmt.pack_index(self._entries)
+            self._f.write(index)
+            self._f.write(fmt.pack_footer(self._off, len(index),
+                                          fmt.index_crc(index)))
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._f.close()
+            os.replace(self._tmp, self.path)
+        except BaseException:
+            self.abort()
+            raise
+        self._finalized = True
+        return self.path
+
+    def abort(self) -> None:
+        """Drop the partial file (used on error paths)."""
+        self._aborted = True
+        self._stop_worker()
+        try:
+            self._f.close()
+        except OSError:  # pragma: no cover - double close
+            pass
+        try:
+            os.remove(self._tmp)
+        except OSError:
+            pass
+
+    def __enter__(self) -> "TACZWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+
+    # ------------------------------ worker ---------------------------------
+
+    def _stop_worker(self) -> None:
+        if not self._sentinel_sent:
+            self._sentinel_sent = True
+            self._reaper.detach()   # orderly shutdown owns cleanup now
+            self._queue.put(_SENTINEL)
+        self._thread.join()
+
+    def _check_live(self) -> None:
+        if self._finalized or self._aborted or self._sentinel_sent:
+            raise ValueError("writer is closed")
+        if self._err is not None:
+            raise self._err
+
+    def _put(self, item) -> None:
+        self._queue.put(item)
+
+    def _encode(self, item) -> LevelResult:
+        if item[0] == "level":
+            return item[1]
+        _, data, mask, eb, ratio, unit = item
+        d = self._defaults
+        return compress_level(data, mask, eb=eb, unit=unit,
+                              algorithm=d["algorithm"], she=d["she"],
+                              strategy=d["strategy"], sz_block=d["sz_block"],
+                              batched=d["batched"],
+                              lorenzo_engine=d["lorenzo_engine"],
+                              ratio=ratio, keep_artifacts=True)
+
+    def _append_level(self, lr: LevelResult) -> None:
+        blob, entry = pack_level(lr)
+        entry.shift_offsets(self._off)
+        self._f.write(blob)
+        self._off += len(blob)
+        self._entries.append(entry)
+
+
+def write(path: str, obj, *, eb: float | list[float] | None = None,
+          **kwargs) -> str:
+    """Write ``obj`` to a TACZ container at ``path``.
+
+    ``obj`` may be an ``AMRCompressionResult`` (already compressed with
+    ``keep_artifacts=True`` — the default) or an ``AMRDataset`` (compressed
+    here, level by level, through the streaming writer; ``eb`` is required
+    and may be per-level).  Returns ``path``.
+    """
+    if isinstance(obj, AMRCompressionResult):
+        with TACZWriter(path, **kwargs) as w:
+            for lr in obj.levels:
+                w.add_compressed(lr)
+        return path
+    if isinstance(obj, AMRDataset):
+        if eb is None:
+            raise ValueError("writing a raw AMRDataset needs eb=")
+        ebs = eb if isinstance(eb, (list, tuple)) else [eb] * obj.n_levels
+        if len(ebs) != obj.n_levels:
+            raise ValueError("need one error bound per level")
+        with TACZWriter(path, **kwargs) as w:
+            for lvl, e in zip(obj.levels, ebs):
+                w.add_level(lvl.data, lvl.mask, eb=float(e), ratio=lvl.ratio)
+        return path
+    raise TypeError(f"cannot write {type(obj).__name__} as TACZ")

@@ -1,0 +1,105 @@
+"""Huffman codec degenerate cases (ISSUE 2 satellite): empty payloads,
+single-symbol codebooks, truncated streams, and codebook serialization —
+the edges the TACZ container hits constantly (all-zero bricks quantize to
+one-symbol alphabets; empty levels produce empty streams)."""
+import numpy as np
+import pytest
+
+from repro.core import huffman
+
+
+def test_empty_stream_roundtrip():
+    cb = huffman.build_codebook(np.zeros(0, dtype=np.int64))
+    assert len(cb.symbols) == 0
+    packed, nbits = huffman.encode(cb, np.zeros(0, dtype=np.int64))
+    assert nbits == 0
+    out = huffman.decode(cb, packed, nbits, 0)
+    assert out.size == 0
+
+
+def test_empty_codebook_cannot_decode_symbols():
+    cb = huffman.build_codebook(np.zeros(0, dtype=np.int64))
+    with pytest.raises(ValueError, match="empty codebook"):
+        huffman.decode(cb, np.zeros(0, dtype=np.uint8), 0, 3)
+
+
+def test_single_symbol_roundtrip():
+    data = np.full(11, -7, dtype=np.int64)
+    cb = huffman.build_codebook(data)
+    assert len(cb.symbols) == 1
+    packed, nbits = huffman.encode(cb, data)
+    assert nbits == 11  # 1 bit per symbol on the wire
+    assert nbits == int(huffman.code_lengths_for(cb, data).sum())
+    out = huffman.decode(cb, packed, nbits, 11)
+    np.testing.assert_array_equal(out, data)
+
+
+def test_single_symbol_truncation_detected():
+    data = np.full(16, 5, dtype=np.int64)
+    cb = huffman.build_codebook(data)
+    packed, nbits = huffman.encode(cb, data)
+    with pytest.raises(ValueError, match="truncated"):
+        huffman.decode(cb, packed, nbits - 9, 16)
+
+
+def test_multi_symbol_truncation_detected():
+    rng = np.random.default_rng(0)
+    data = rng.integers(-5, 6, size=200)
+    cb = huffman.build_codebook(data)
+    packed, nbits = huffman.encode(cb, data)
+    with pytest.raises(ValueError, match="truncated|corrupt"):
+        huffman.decode(cb, packed[: len(packed) // 2], nbits, 200)
+    with pytest.raises(ValueError, match="truncated|corrupt"):
+        huffman.decode(cb, np.zeros(0, np.uint8), 0, 200)
+
+
+@pytest.mark.parametrize("n_unique", [0, 1, 2, 17, 300])
+def test_codebook_serialization_roundtrip(n_unique):
+    rng = np.random.default_rng(n_unique)
+    if n_unique:
+        symbols = rng.choice(10_000, size=n_unique, replace=False) - 5000
+        freqs = rng.integers(1, 1000, size=n_unique)
+        cb = huffman.build_codebook(symbols=symbols, freqs=freqs)
+    else:
+        cb = huffman.build_codebook(np.zeros(0, dtype=np.int64))
+    cb2 = huffman.deserialize_codebook(huffman.serialize_codebook(cb))
+    np.testing.assert_array_equal(cb.symbols, cb2.symbols)
+    np.testing.assert_array_equal(cb.lengths, cb2.lengths)
+    np.testing.assert_array_equal(cb.codes, cb2.codes)
+    np.testing.assert_array_equal(cb.first_code, cb2.first_code)
+    np.testing.assert_array_equal(cb.first_index, cb2.first_index)
+    np.testing.assert_array_equal(cb.count, cb2.count)
+
+
+def test_codebook_serialization_wide_symbols_use_i64():
+    """Symbols beyond int32 force the 8-byte wire width; narrow alphabets
+    stay at the 4-byte width that matches codebook_size_bits accounting."""
+    wide = huffman.build_codebook(symbols=np.array([0, 2 ** 40]),
+                                  freqs=np.array([3, 5]))
+    narrow = huffman.build_codebook(symbols=np.array([-5, 7]),
+                                    freqs=np.array([3, 5]))
+    wbuf, nbuf = (huffman.serialize_codebook(c) for c in (wide, narrow))
+    assert len(wbuf) == 5 + 2 * 9
+    assert len(nbuf) == 5 + 2 * 5
+    for cb, buf in ((wide, wbuf), (narrow, nbuf)):
+        cb2 = huffman.deserialize_codebook(buf)
+        np.testing.assert_array_equal(cb.symbols, cb2.symbols)
+        np.testing.assert_array_equal(cb.codes, cb2.codes)
+
+
+def test_serialized_codebook_decodes_stream():
+    rng = np.random.default_rng(3)
+    data = rng.integers(-100, 100, size=500)
+    cb = huffman.build_codebook(data)
+    packed, nbits = huffman.encode(cb, data)
+    cb2 = huffman.deserialize_codebook(huffman.serialize_codebook(cb))
+    np.testing.assert_array_equal(huffman.decode(cb2, packed, nbits, 500),
+                                  data)
+
+
+def test_truncated_codebook_buffer_detected():
+    cb = huffman.build_codebook(np.arange(10))
+    buf = huffman.serialize_codebook(cb)
+    for cut in (2, len(buf) - 1):
+        with pytest.raises(ValueError, match="truncated"):
+            huffman.deserialize_codebook(buf[:cut])

@@ -136,6 +136,83 @@ def test_lor_reg_batched_is_bit_identical(shape, eb):
             <= _bound(eb, stack[idx])
 
 
+# ------------------- Pallas-kernel Lorenzo branch (ROADMAP) -----------------
+#
+# On a TPU backend `engine="auto"` routes the batched Lorenzo branch through
+# the Pallas kernel; on CPU the kernel runs in interpret mode, so forcing
+# `engine="pallas"` here exercises the exact routing.  Inputs are chosen on
+# the quantization lattice (x = k·2eb) so the kernel's float32 arithmetic
+# agrees exactly with the float64 numpy oracle.
+
+
+def _lattice_stack(seed, n, shape, eb):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(-50, 50, size=(n,) + shape) * (2.0 * eb)
+            ).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", [(8, 8, 8), (4, 4, 4), (16, 16, 16),
+                                   (13, 7, 9)])
+def test_pallas_engine_matches_numpy_oracle(shape):
+    """tile == brick, so any VMEM-sized brick shape routes through the
+    kernel — including non-power-of-two ones like (13, 7, 9)."""
+    eb = 0.25
+    stack = _lattice_stack(11, 5, shape, eb)
+    ref = compress_lor_reg_batched(stack, eb, block=4, engine="numpy")
+    pal = compress_lor_reg_batched(stack, eb, block=4, engine="pallas")
+    for r, p in zip(ref, pal):
+        np.testing.assert_array_equal(r.codes, p.codes)
+        np.testing.assert_array_equal(r.recon, p.recon)
+        assert r.extras["branch"] == p.extras["branch"]
+        assert r.meta_bits == p.meta_bits
+
+
+def test_pallas_engine_falls_back_on_wide_dynamic_range():
+    """|x|/(2eb) beyond float32-exact integers would break the error bound
+    in the kernel's float32/int32 arithmetic — must fall back to numpy."""
+    eb = 1e-4
+    rng = np.random.default_rng(14)
+    stack = (rng.standard_normal((2, 8, 8, 8)) * 1e4).astype(np.float32)
+    assert float(np.abs(stack).max()) / (2 * eb) >= 2 ** 23
+    ref = compress_lor_reg_batched(stack, eb, engine="numpy")
+    pal = compress_lor_reg_batched(stack, eb, engine="pallas")
+    for r, p in zip(ref, pal):
+        np.testing.assert_array_equal(r.codes, p.codes)
+        np.testing.assert_array_equal(r.recon, p.recon)
+
+
+def test_pallas_engine_falls_back_on_oversize_brick():
+    """A brick bigger than the kernel's VMEM tile budget must fall back to
+    the numpy path and still match the oracle exactly."""
+    eb = 0.25
+    stack = _lattice_stack(12, 1, (16, 128, 128), eb)  # > 8·128·128 cells
+    ref = compress_lor_reg_batched(stack, eb, engine="numpy")
+    pal = compress_lor_reg_batched(stack, eb, engine="pallas")
+    for r, p in zip(ref, pal):
+        np.testing.assert_array_equal(r.codes, p.codes)
+        np.testing.assert_array_equal(r.recon, p.recon)
+
+
+def test_engine_auto_uses_numpy_off_tpu():
+    """No TPU attached in CI → auto must be the bit-exact host path."""
+    import jax
+
+    assert jax.default_backend() != "tpu"
+    stack = (np.random.default_rng(13).standard_normal((3, 6, 6, 6)) * 10
+             ).astype(np.float32)
+    auto = compress_lor_reg_batched(stack, 1e-2, engine="auto")
+    ref = compress_lor_reg_batched(stack, 1e-2, engine="numpy")
+    for a, r in zip(auto, ref):
+        np.testing.assert_array_equal(a.codes, r.codes)
+        np.testing.assert_array_equal(a.recon, r.recon)
+
+
+def test_engine_rejects_unknown():
+    with pytest.raises(ValueError, match="engine"):
+        compress_lor_reg_batched(np.zeros((1, 4, 4, 4), np.float32), 0.1,
+                                 engine="cuda")
+
+
 # --------------------------- hypothesis sweeps ------------------------------
 #
 # Guarded (not importorskip'd at module level) so the deterministic cases

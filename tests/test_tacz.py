@@ -1,0 +1,331 @@
+"""TACZ container: round-trip, ROI decode, corruption detection (ISSUE 2).
+
+The contract:
+
+  * ``tacz.write(compress_amr(...))`` → ``read()`` reproduces every
+    level's in-memory reconstruction **bit-identically**;
+  * ``read_roi(box)`` equals cropping the full reconstruction with the
+    same box, for any box;
+  * truncation and payload corruption are *detected* (clean errors, never
+    garbage data), via the footer, the index CRC, and per-sub-block CRCs.
+
+Deterministic cases run everywhere; hypothesis sweeps run when the
+optional dep is installed (CI always has it).
+"""
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+from repro import io as tacz
+from repro.core import amr, hybrid
+from repro.io import format as fmt
+from repro.io import tensor as tacz_tensor
+
+
+def _roundtrip(tmp_path, res, name="t.tacz"):
+    path = os.path.join(str(tmp_path), name)
+    tacz.write(path, res)
+    return path
+
+
+def _assert_roi_matches(path, res, box):
+    rois = tacz.read_roi(path, box)
+    assert len(rois) == len(res.levels)
+    for roi, lr in zip(rois, res.levels):
+        crop = lr.recon[tuple(slice(lo, hi) for lo, hi in roi.box)]
+        np.testing.assert_array_equal(roi.data, crop)
+
+
+# ------------------------------ round-trip ----------------------------------
+
+
+@pytest.mark.parametrize("preset", ["run1_z10", "run2_t3"])
+def test_full_roundtrip_bit_identical(tmp_path, preset):
+    ds = amr.load_preset(preset)
+    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = _roundtrip(tmp_path, res)
+    recons = tacz.read(path)
+    for lr, rec in zip(res.levels, recons):
+        assert rec.dtype == np.float32
+        np.testing.assert_array_equal(lr.recon, rec)
+
+
+def test_gsp_level_roundtrip(tmp_path):
+    ds = amr.synthetic_amr((32, 32, 32), densities=[0.9, 0.1],
+                           refine_block=4, seed=7)
+    lvl = ds.levels[0]
+    lr = hybrid.compress_level(lvl.data, lvl.mask, eb=0.01, unit=4,
+                               strategy="gsp")
+    assert lr.strategy == "gsp"
+    path = os.path.join(str(tmp_path), "gsp.tacz")
+    with tacz.TACZWriter(path) as w:
+        w.add_compressed(lr)
+    [rec] = tacz.read(path)
+    np.testing.assert_array_equal(lr.recon, rec)
+
+
+def test_gsp_nondefault_sz_block_roundtrip(tmp_path):
+    """The GSP payload must be encoded with the sz_block the index records
+    (regression: reg-branch betas grid was rebuilt with the wrong edge)."""
+    rng = np.random.default_rng(4)
+    i, j, k = np.mgrid[0:32, 0:32, 0:32].astype(np.float32)
+    data = 3.0 * i + 2.0 * j - k + rng.normal(
+        scale=0.15, size=(32, 32, 32)).astype(np.float32)
+    mask = np.ones(data.shape, dtype=bool)
+    lr = hybrid.compress_level(data, mask, eb=0.05, unit=4, strategy="gsp",
+                               sz_block=8)
+    assert lr.artifacts.results[0].extras.get("branch") == "reg"
+    path = os.path.join(str(tmp_path), "gspb.tacz")
+    with tacz.TACZWriter(path) as w:
+        w.add_compressed(lr)
+    [rec] = tacz.read(path)
+    np.testing.assert_array_equal(lr.recon, rec)
+
+
+def test_writer_error_surfaces_and_never_publishes(tmp_path):
+    """A background-encoder failure must surface to the producer, make
+    close() raise (not report success), and leave no file behind."""
+    path = os.path.join(str(tmp_path), "bad.tacz")
+    w = tacz.TACZWriter(path, eb=-1.0)  # invalid error bound → worker raises
+    with pytest.raises(ValueError):
+        # the worker error surfaces through a later add_level or close()
+        w.add_level(np.ones((8, 8, 8), np.float32))
+        w.add_level(np.ones((8, 8, 8), np.float32))
+        w.add_level(np.ones((8, 8, 8), np.float32))
+        w.close()
+    with pytest.raises(ValueError):
+        w.close()
+    assert not os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+
+
+def test_abandoned_writer_is_reaped_at_gc(tmp_path):
+    """A writer dropped without close()/abort() must not leak its encoder
+    thread or tmp file, and must never publish the destination path."""
+    import gc
+
+    path = os.path.join(str(tmp_path), "leak.tacz")
+    w = tacz.TACZWriter(path, eb=1e-2)
+    w.add_level(np.ones((8, 8, 8), np.float32))
+    thread, tmp = w._thread, w._tmp
+    del w
+    gc.collect()
+    thread.join(timeout=10)
+    assert not thread.is_alive()
+    assert not os.path.exists(tmp)
+    assert not os.path.exists(path)
+
+
+def test_streaming_write_matches_oneshot(tmp_path):
+    """add_level (background-thread encode) ≡ compress_amr + write."""
+    ds = amr.synthetic_amr((32, 32, 32), densities=[0.23, 0.77],
+                           refine_block=4, seed=3)
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    p1 = _roundtrip(tmp_path, res, "oneshot.tacz")
+    p2 = os.path.join(str(tmp_path), "streamed.tacz")
+    with tacz.TACZWriter(p2, eb=1e-3) as w:
+        for lvl in ds.levels:
+            w.add_level(lvl.data, lvl.mask, ratio=lvl.ratio)
+    for a, b in zip(tacz.read(p1), tacz.read(p2)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_write_requires_artifacts(tmp_path):
+    ds = amr.synthetic_amr((16, 16, 16), densities=[0.23, 0.77],
+                           refine_block=4, seed=0)
+    res = hybrid.compress_amr(ds, eb=1e-2, keep_artifacts=False)
+    with pytest.raises(ValueError, match="artifacts"):
+        tacz.write(os.path.join(str(tmp_path), "x.tacz"), res)
+    # merged-4D non-SHE levels are not indexable either
+    res = hybrid.compress_amr(ds, eb=1e-2, she=False, strategy="opst")
+    with pytest.raises(ValueError, match="she=True"):
+        tacz.write(os.path.join(str(tmp_path), "y.tacz"), res)
+
+
+def test_tmp_file_never_left_behind(tmp_path):
+    ds = amr.synthetic_amr((16, 16, 16), densities=[1.0], refine_block=4,
+                           seed=1)
+    res = hybrid.compress_amr(ds, eb=1e-2)
+    path = os.path.join(str(tmp_path), "atomic.tacz")
+    tacz.write(path, res)
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+
+
+# ------------------------------ ROI decode ----------------------------------
+
+
+def test_roi_equals_cropped_full_decode(tmp_path):
+    ds = amr.load_preset("run1_z10")
+    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = _roundtrip(tmp_path, res)
+    n = ds.finest_shape[0]
+    for box in [((0, 8), (0, 8), (0, 8)),
+                ((5, 23), (11, 40), (2, 9)),
+                ((n - 8, n), (n - 16, n), (0, n)),
+                ((0, n), (0, n), (0, n))]:
+        _assert_roi_matches(path, res, box)
+
+
+def test_roi_decodes_only_intersecting_subblocks(tmp_path):
+    """A small box must touch far fewer payloads than the file holds."""
+    ds = amr.load_preset("run1_z10")
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    path = _roundtrip(tmp_path, res)
+    with tacz.TACZReader(path) as rd:
+        total = sum(len(e.subblocks) for e in rd.levels)
+        reads = []
+        orig = rd._decode_subblock
+
+        def counting(li, sb, shape, limit=None):
+            reads.append(sb)
+            return orig(li, sb, shape, limit=limit)
+
+        rd._decode_subblock = counting
+        rd.read_roi(((0, 8), (0, 8), (0, 8)))
+    assert total > 20
+    assert len(reads) < total / 3
+
+
+def test_roi_empty_and_out_of_range_box(tmp_path):
+    ds = amr.synthetic_amr((32, 32, 32), densities=[0.23, 0.77],
+                           refine_block=4, seed=5)
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    path = _roundtrip(tmp_path, res)
+    rois = tacz.read_roi(path, ((40, 50), (0, 8), (0, 8)))  # beyond extent
+    for roi in rois:
+        assert roi.data.size == 0
+
+
+# --------------------------- corruption detection ---------------------------
+
+
+def test_truncated_file_detected(tmp_path):
+    ds = amr.synthetic_amr((16, 16, 16), densities=[0.23, 0.77],
+                           refine_block=4, seed=2)
+    res = hybrid.compress_amr(ds, eb=1e-2)
+    path = _roundtrip(tmp_path, res)
+    blob = open(path, "rb").read()
+    for cut in (len(blob) - 1, len(blob) // 2, 10):
+        with pytest.raises(ValueError):
+            tacz.TACZReader(blob[:cut])
+
+
+def test_corrupted_payload_detected_by_crc(tmp_path):
+    ds = amr.synthetic_amr((16, 16, 16), densities=[0.23, 0.77],
+                           refine_block=4, seed=2)
+    res = hybrid.compress_amr(ds, eb=1e-2)
+    path = _roundtrip(tmp_path, res)
+    blob = bytearray(open(path, "rb").read())
+    rd = tacz.TACZReader(bytes(blob))
+    assert rd.verify()
+    sb = rd.levels[0].subblocks[0]
+    blob[sb.payload_off + sb.payload_len - 1] ^= 0xFF
+    corrupt = tacz.TACZReader(bytes(blob))
+    with pytest.raises(IOError, match="CRC"):
+        corrupt.verify()
+    with pytest.raises(IOError, match="CRC"):
+        corrupt.read_level(0)
+
+
+def test_corrupted_codebook_and_mask_detected(tmp_path):
+    """Section CRCs: a bit flip in a codebook or mask section must fail
+    verify() and reads loudly instead of decoding garbage."""
+    ds = amr.synthetic_amr((16, 16, 16), densities=[0.23, 0.77],
+                           refine_block=4, seed=2)
+    res = hybrid.compress_amr(ds, eb=1e-2)
+    path = _roundtrip(tmp_path, res)
+    good = open(path, "rb").read()
+    e = tacz.TACZReader(good).levels[0]
+    for off, ln, what in [(e.codebook_off, e.codebook_len, "codebook"),
+                          (e.mask_off, e.mask_len, "mask")]:
+        assert ln > 0
+        blob = bytearray(good)
+        blob[off + ln // 2] ^= 0xFF
+        corrupt = tacz.TACZReader(bytes(blob))
+        with pytest.raises(IOError, match=what):
+            corrupt.verify()
+        with pytest.raises(IOError, match=what):
+            corrupt.read_level(0)
+
+
+def test_corrupted_index_detected(tmp_path):
+    ds = amr.synthetic_amr((16, 16, 16), densities=[1.0], refine_block=4,
+                           seed=2)
+    res = hybrid.compress_amr(ds, eb=1e-2)
+    path = _roundtrip(tmp_path, res)
+    blob = bytearray(open(path, "rb").read())
+    idx_off, _, _ = fmt.parse_footer(bytes(blob))
+    blob[idx_off + 5] ^= 0xFF
+    with pytest.raises(ValueError, match="index CRC"):
+        tacz.TACZReader(bytes(blob))
+
+
+def test_not_a_tacz_file():
+    with pytest.raises(ValueError):
+        tacz.TACZReader(b"definitely not a container")
+    with pytest.raises(ValueError, match="magic"):
+        tacz.TACZReader(fmt.pack_header() + b"\x00" * 64)
+
+
+# ------------------------------ tensor blobs --------------------------------
+
+
+@pytest.mark.parametrize("shape", [(128,), (64, 48), (8, 8, 8), (4, 4, 4, 6)])
+def test_tensor_blob_roundtrip(shape):
+    rng = np.random.default_rng(hash(shape) % 2 ** 31)
+    a = (rng.standard_normal(shape) * 0.05).astype(np.float32)
+    eb = 1e-4
+    blob = tacz_tensor.encode_tensor(a, eb)
+    assert blob[:4] == tacz.TACZ_MAGIC
+    rec = tacz_tensor.decode_tensor(blob)
+    assert rec.shape == a.shape and rec.dtype == np.float32
+    assert np.abs(a - rec).max() <= eb + np.abs(a).max() * 2.0 ** -22
+    assert len(blob) < a.nbytes  # actually compresses smooth-ish data
+
+
+def test_tensor_blob_wide_codes_use_int32():
+    a = (np.random.default_rng(0).standard_normal((64, 64)) * 1e4
+         ).astype(np.float32)
+    blob = tacz_tensor.encode_tensor(a, 1e-4)  # |codes| >> 2^15
+    with tacz.TACZReader(blob) as rd:
+        assert rd.levels[0].subblocks[0].codec == fmt.CODEC_RAW_I32
+    rec = tacz_tensor.decode_tensor(blob)
+    assert np.abs(a - rec).max() <= 1e-4 + np.abs(a).max() * 2.0 ** -22
+
+
+# --------------------------- hypothesis sweeps ------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("tacz", max_examples=10, deadline=None)
+    settings.load_profile("tacz")
+except ImportError:        # pragma: no cover - environment dependent
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 1000),
+           eb=st.floats(1e-3, 0.5),
+           fine=st.floats(0.05, 0.95),
+           lo=st.tuples(st.integers(0, 30), st.integers(0, 30),
+                        st.integers(0, 30)),
+           ext=st.tuples(st.integers(1, 32), st.integers(1, 32),
+                         st.integers(1, 32)))
+    def test_property_roundtrip_and_roi(tmp_path_factory, seed, eb, fine,
+                                        lo, ext):
+        ds = amr.synthetic_amr((32, 32, 32),
+                               densities=[fine, 1.0 - fine],
+                               refine_block=4, seed=seed)
+        res = hybrid.compress_amr(ds, eb=eb)
+        path = os.path.join(str(tmp_path_factory.mktemp("tacz")), "p.tacz")
+        tacz.write(path, res)
+        for lr, rec in zip(res.levels, tacz.read(path)):
+            np.testing.assert_array_equal(lr.recon, rec)
+        box = tuple((int(l), int(l + e)) for l, e in zip(lo, ext))
+        _assert_roi_matches(path, res, box)
