@@ -1,0 +1,84 @@
+"""Warm-vs-cold TACZ region serving (ISSUE 3).
+
+Writes a TAC+ snapshot, then replays an overlapping-ROI workload (the
+AMReX-visualization access pattern: many region reads against one
+snapshot, arXiv:2309.16980) through a :class:`RegionServer` whose
+sub-block cache is budgeted at **25 % of the file's decoded level bytes**.
+Measured: the cold pass (first batch — entropy decode + batched recon),
+the warm pass (same batch again — cache hits only), and the uncached
+``read_roi`` replay of the same boxes for reference.
+
+Acceptance bar (enforced, like the ROI-decode bench): the warm repeated
+batch must run **≥3× faster** than the cold batch — if the cache stops
+absorbing the bit-serial Huffman walks, serving regressed.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import numpy as np
+
+from repro import io as tacz
+from repro.core import hybrid
+from repro.serving.regions import RegionServer
+
+from .common import dataset, eb_for, timed, write_csv
+
+
+def _workload(shape) -> list[tuple]:
+    """Overlapping boxes in one hot corner of the domain — each ~1/27 of
+    the volume, stepping by half a box so neighbors share sub-blocks."""
+    side = max(4, shape[0] // 3)
+    step = max(2, side // 2)
+    boxes = []
+    for ox in (0, step, 2 * step):
+        for oy in (0, step):
+            boxes.append(((ox, ox + side), (oy, oy + side), (0, side)))
+    return boxes
+
+
+def run(quick: bool = False):
+    names = ["run1_z10"] if quick else ["run1_z10", "run2_t4"]
+    rows = []
+    headline = None
+    for name in names:
+        ds = dataset(name)
+        res = hybrid.compress_amr(ds, eb=eb_for(ds, 1e-3))
+        level_bytes = sum(int(np.prod(lr.recon.shape)) * 4
+                          for lr in res.levels)
+        budget = max(4096, level_bytes // 4)          # 25 %-of-level budget
+        boxes = _workload(ds.finest_shape)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, name + ".tacz")
+            tacz.write(path, res)
+            with tacz.TACZReader(path) as rd:
+                _, t_serial = timed(
+                    lambda: [rd.read_roi(b) for b in boxes])
+            with RegionServer(path, cache_bytes=budget) as srv:
+                _, t_cold = timed(srv.get_regions, boxes)
+                _, t_warm = timed(srv.get_regions, boxes, repeat=3)
+                s = srv.cache.stats()
+            speedup = t_cold / max(t_warm, 1e-12)
+            rows.append((name, len(boxes), round(level_bytes / 1e3, 1),
+                         round(budget / 1e3, 1),
+                         round(t_serial * 1e3, 2), round(t_cold * 1e3, 2),
+                         round(t_warm * 1e3, 3), round(speedup, 2),
+                         s["hits"], s["misses"], s["evictions"]))
+            if name == names[0]:
+                headline = speedup
+    path = write_csv("region_serving",
+                     ["dataset", "n_boxes", "level_kb", "budget_kb",
+                      "roi_serial_ms", "cold_ms", "warm_ms",
+                      "warm_speedup", "hits", "misses", "evictions"],
+                     rows)
+    if headline is not None and headline < 3.0:
+        raise AssertionError(
+            f"region-serving acceptance regressed: warm repeated ROI batch "
+            f"only {headline:.1f}x faster than cold at a 25%-of-level "
+            f"cache budget (need >=3x)")
+    return {"csv": path, "warm_over_cold": round(headline or 0.0, 1)}
+
+
+if __name__ == "__main__":
+    print(run())

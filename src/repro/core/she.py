@@ -40,7 +40,7 @@ from .compat import HAVE_ZSTD, zstd_size_bits
 from .sz import SZResult, compress_lor_reg, compress_lor_reg_batched
 
 __all__ = ["SHEResult", "she_encode", "aggregate_histogram",
-           "encode_brick_payloads"]
+           "encode_brick_payloads", "decode_brick_payloads"]
 
 # Above this code span the dense histogram would be larger than the unique
 # pass it replaces; fall back to np.unique (outlier-heavy streams only).
@@ -150,6 +150,24 @@ def encode_brick_payloads(cb: huffman.Codebook,
         packed, nbits = huffman.encode(cb, codes, indices=ind)
         out.append((packed.tobytes(), int(nbits)))
     return out
+
+
+def decode_brick_payloads(cb: huffman.Codebook,
+                          payloads: list[tuple[bytes, int, int]],
+                          ) -> list[np.ndarray]:
+    """Inverse of :func:`encode_brick_payloads` for a batch of bricks.
+
+    ``payloads`` is a list of ``(payload bytes, nbits, n_codes)`` triples,
+    all under the same shared codebook; returns the int64 code stream per
+    brick.  This is the codec-level round-trip counterpart for consumers
+    holding raw payload sections (the TACZ reader fuses the same walk with
+    its CRC/framing checks in ``TACZReader.subblock_codes``, which is what
+    the region-serving decode planner uses); pair the recovered streams
+    with ``sz.decode_codes_batched`` for vectorized reconstruction.
+    """
+    return [huffman.decode(cb, np.frombuffer(buf, dtype=np.uint8),
+                           int(nbits), int(n_codes))
+            for buf, nbits, n_codes in payloads]
 
 
 def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,

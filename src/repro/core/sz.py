@@ -57,7 +57,9 @@ __all__ = [
     "compress_lor_reg_batched",
     "compress_interp",
     "decode_codes",
+    "decode_codes_batched",
     "entropy_bits",
+    "entropy_stage",
     "reg_block_grid",
 ]
 
@@ -247,21 +249,43 @@ def interp_nd_recon(codes: np.ndarray) -> np.ndarray:
 # --------------------------------------------------------------------------
 
 
-def entropy_bits(codes: np.ndarray, *, use_zstd: bool = True,
-                 codebook: huffman.Codebook | None = None) -> tuple[int, int]:
-    """(payload_bits, codebook_bits) from a materialized bitstream."""
+def entropy_stage(codes: np.ndarray, *, use_zstd: bool = True,
+                  codebook: huffman.Codebook | None = None,
+                  ) -> tuple[int, int, dict]:
+    """(payload_bits, codebook_bits, artifacts) from a materialized bitstream.
+
+    ``artifacts`` carries the codebook and the packed Huffman payload
+    (``{"codebook", "packed", "nbits"}``) that pricing already materialized.
+    The compressor front-ends stash it on ``SZResult.extras["entropy"]`` so
+    the TACZ write path (``repro.io.writer.pack_level``) can serialize
+    GSP/global levels without re-building the codebook and re-encoding the
+    exact same payload (ROADMAP memoization item).  Retention note: the
+    payload bytes are a small fraction of the ``codes`` array every
+    SZResult already pins (int64 per value vs the entropy-coded stream),
+    so accounting-only sweeps are not meaningfully taxed.
+    """
     codes = np.asarray(codes).ravel()
     if codes.size == 0:
-        return 0, 0
+        return 0, 0, {"codebook": None, "packed": b"", "nbits": 0}
     cb = codebook if codebook is not None else huffman.build_codebook(codes)
     packed, nbits = huffman.encode(cb, codes)
+    blob = packed.tobytes()   # one copy, shared by zstd sizing + artifacts
     payload = nbits
     if use_zstd:
-        zbits = zstd_size_bits(packed.tobytes())
+        zbits = zstd_size_bits(blob)
         if zbits is not None:
             payload = min(payload, zbits)
     cb_bits = 0 if codebook is not None else huffman.codebook_size_bits(cb)
-    return int(payload), int(cb_bits)
+    return int(payload), int(cb_bits), {"codebook": cb, "packed": blob,
+                                        "nbits": int(nbits)}
+
+
+def entropy_bits(codes: np.ndarray, *, use_zstd: bool = True,
+                 codebook: huffman.Codebook | None = None) -> tuple[int, int]:
+    """(payload_bits, codebook_bits) from a materialized bitstream."""
+    payload, cb_bits, _ = entropy_stage(codes, use_zstd=use_zstd,
+                                        codebook=codebook)
+    return payload, cb_bits
 
 
 _DIM_META_BITS = 3 * 32 + 64  # dims + eb
@@ -278,11 +302,12 @@ def compress_lorenzo(x: np.ndarray, eb: float, *, use_zstd: bool = True,
     x = np.asarray(x)
     q = prequant(x, eb)
     codes = lorenzo_nd_codes(q)
-    payload, cb_bits = entropy_bits(codes, use_zstd=use_zstd, codebook=codebook)
+    payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
+                                          codebook=codebook)
     recon = dequant(lorenzo_nd_recon(codes), eb).reshape(x.shape)
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=_DIM_META_BITS, eb=eb,
-                    method="lorenzo")
+                    method="lorenzo", extras={"entropy": ent})
 
 
 def compress_interp(x: np.ndarray, eb: float, *, use_zstd: bool = True,
@@ -291,11 +316,12 @@ def compress_interp(x: np.ndarray, eb: float, *, use_zstd: bool = True,
     x = np.asarray(x)
     q = prequant(x, eb)
     codes = interp_nd_codes(q)
-    payload, cb_bits = entropy_bits(codes, use_zstd=use_zstd, codebook=codebook)
+    payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
+                                          codebook=codebook)
     recon = dequant(interp_nd_recon(codes), eb).reshape(x.shape)
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=_DIM_META_BITS, eb=eb,
-                    method="interp")
+                    method="interp", extras={"entropy": ent})
 
 
 # ---------------------------- Lor/Reg (SZ2) --------------------------------
@@ -417,13 +443,15 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
         codes = np.concatenate([p.codes for p in parts])
         meta = sum(p.meta_bits for p in parts)
         payload = cb_bits = 0
+        extras4: dict = {}
         if count_entropy:
-            payload, cb_bits = entropy_bits(codes, use_zstd=use_zstd,
-                                            codebook=codebook)
+            payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
+                                                  codebook=codebook)
+            extras4["entropy"] = ent
         recon = np.stack([p.recon for p in parts]).reshape(orig_shape)
         return SZResult(recon=recon, codes=codes, payload_bits=payload,
                         codebook_bits=cb_bits, meta_bits=meta, eb=eb,
-                        method="lor_reg")
+                        method="lor_reg", extras=extras4)
 
     b, _ = reg_block_grid(x.shape, block)
     # --- Lorenzo branch: global dual-quant Lorenzo over the brick ----------
@@ -459,8 +487,9 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
 
     payload = cb_bits = 0
     if count_entropy:
-        payload, cb_bits = entropy_bits(codes, use_zstd=use_zstd,
-                                        codebook=codebook)
+        payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
+                                              codebook=codebook)
+        extras["entropy"] = ent
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=meta, eb=eb,
                     method=method, extras=extras)
@@ -502,6 +531,54 @@ def decode_codes(codes: np.ndarray, shape: tuple[int, ...], eb: float, *,
         b, bgrid = reg_block_grid(shape, block)
         codes_reg = codes.reshape(tuple(bgrid) + (b, b, b))
         return _reg_recon(betas, codes_reg, b, bgrid, shape, eb)
+    raise ValueError(f"unknown branch {branch!r}")
+
+
+def decode_codes_batched(codes: np.ndarray, shape: tuple[int, ...],
+                         eb: float, *, branch: str, block: int = 6,
+                         betas: np.ndarray | None = None) -> np.ndarray:
+    """Vectorized :func:`decode_codes` over a stack of same-shape bricks.
+
+    ``codes``: (N, n_codes) — N bricks that share ``shape``, ``branch``,
+    and ``eb`` (the grouping the serving-side decode planner produces);
+    for ``branch="reg"``, ``betas`` is the matching (N, bx, by, bz, 4)
+    coefficient stack.  Returns an (N, \\*shape) float32 reconstruction
+    whose every slice is **bit-identical** to
+    ``decode_codes(codes[i], shape, eb, ...)`` — the Lorenzo prefix sums
+    and the regression replay run once across the batch axis instead of
+    once per brick (the same vectorization the encode side got in PR 1).
+    The interp branch keeps a per-item loop: its stage schedule is a
+    function of the array rank, and interp only ever appears as a single
+    global payload per level.
+    """
+    shape = tuple(int(s) for s in shape)
+    codes = np.ascontiguousarray(codes, dtype=np.int64)
+    if codes.ndim != 2:
+        raise ValueError("expected a (N, n_codes) stack of code streams")
+    n = codes.shape[0]
+    if branch == "lorenzo":
+        stacked = codes.reshape((n,) + shape)
+        axes = tuple(range(1, len(shape) + 1))
+        return dequant(lorenzo_nd_recon(stacked, axes=axes), eb)
+    if branch == "interp":
+        if n == 0:
+            return np.zeros((0,) + shape, dtype=np.float32)
+        return np.stack([dequant(interp_nd_recon(codes[i].reshape(shape)),
+                                 eb) for i in range(n)])
+    if branch == "reg":
+        if betas is None:
+            raise ValueError("regression branch needs betas")
+        if len(shape) != 3:
+            raise ValueError("regression branch decodes 3D bricks only")
+        b, bgrid = reg_block_grid(shape, block)
+        bx, by, bz = bgrid
+        codes_reg = codes.reshape((n,) + tuple(bgrid) + (b, b, b))
+        fit = _fit_from_betas(np.asarray(betas), b)
+        rr = (fit + 2.0 * eb * codes_reg).astype(np.float32)
+        rr = (rr.reshape(n, bx, by, bz, b, b, b)
+                .transpose(0, 1, 4, 2, 5, 3, 6)
+                .reshape(n, bx * b, by * b, bz * b))
+        return rr[(slice(None),) + tuple(slice(0, s) for s in shape)]
     raise ValueError(f"unknown branch {branch!r}")
 
 

@@ -12,6 +12,11 @@ sub-block payloads.
     region-of-interest decode; ROI touches only the sub-blocks whose
     cuboids intersect the query box.
   * :mod:`repro.io.tensor` — one-tensor TACZ blobs for lossy checkpoints.
+  * format v2 adds an optional lossless byte pass (zstd/zlib) over the
+    shared-Huffman payload sections; v1 files remain readable.
+
+Serving-side consumers (sub-block cache, batched decode planner, HTTP
+region endpoint) live in :mod:`repro.serving.regions`.
 
 Quick start::
 

@@ -1,4 +1,4 @@
-"""TACZ container format v1: framing, enums, and index (de)serialization.
+"""TACZ container format: framing, enums, and index (de)serialization.
 
 Layout of a ``.tacz`` file (little-endian throughout)::
 
@@ -27,6 +27,18 @@ branch, payload codec, byte offset/length, exact bit count, code count,
 and the length of the inline regression-betas prefix.  This per-sub-block
 granularity is what makes region-of-interest decode possible: the reader
 touches only the payload byte ranges whose cuboids intersect the query.
+
+Version history:
+
+  * **v1** — initial container (PR 2): raw packed-bits Huffman payloads.
+  * **v2** — adds an optional lossless byte pass (zstd, or zlib via
+    ``repro.core.compat`` fallback) over the shared-Huffman payload
+    sections and records the level's configured codec in a new
+    ``payload_compressor`` byte in the per-level index head.  The
+    per-sub-block ``compressor`` field (present since v1) stays the
+    authoritative decode-side switch — a sub-block whose pass did not
+    shrink keeps ``COMPRESSOR_NONE``.  v1 files remain readable: the
+    index head is parsed by the version the header advertises.
 """
 from __future__ import annotations
 
@@ -35,7 +47,7 @@ import zlib
 from dataclasses import dataclass, field
 
 TACZ_MAGIC = b"TACZ"
-TACZ_VERSION = 1
+TACZ_VERSION = 2
 
 MAX_RANK = 8
 
@@ -85,9 +97,11 @@ _FOOTER = struct.Struct("<QII4s")                 # off, len, crc, magic
 HEADER_SIZE = _HEADER.size                        # 16
 FOOTER_SIZE = _FOOTER.size                        # 20
 
-# rank, strategy, algorithm, mask_compressor, sz_block, unit, ratio,
+# v1: rank, strategy, algorithm, mask_compressor, sz_block, unit, ratio,
 # eb, n_values, density
-_LEVEL_HEAD = struct.Struct("<BBBBBHHdQd")
+_LEVEL_HEAD_V1 = struct.Struct("<BBBBBHHdQd")
+# v2 inserts payload_compressor after mask_compressor
+_LEVEL_HEAD = struct.Struct("<BBBBBBHHdQd")
 # codebook off/len/crc, mask off/len/crc, n_subblocks
 _LEVEL_SECTIONS = struct.Struct("<QIIQIII")
 # origin xyz, size xyz, branch, codec, compressor, payload off/len,
@@ -95,8 +109,8 @@ _LEVEL_SECTIONS = struct.Struct("<QIIQIII")
 _SUBBLOCK = struct.Struct("<6I3BQIQQII")
 
 
-def pack_header(flags: int = 0) -> bytes:
-    return _HEADER.pack(TACZ_MAGIC, TACZ_VERSION, flags, 0)
+def pack_header(flags: int = 0, *, version: int = TACZ_VERSION) -> bytes:
+    return _HEADER.pack(TACZ_MAGIC, version, flags, 0)
 
 
 def parse_header(buf: bytes) -> int:
@@ -167,6 +181,9 @@ class LevelEntry:
     mask_len: int = 0                 # 0 → mask is all-True
     mask_crc: int = 0                 # CRC32 of the stored mask bytes
     mask_compressor: int = COMPRESSOR_ZLIB
+    # the level's *configured* payload pass (v2); decode always follows the
+    # per-sub-block compressor field (COMPRESSOR_NONE when the pass lost)
+    payload_compressor: int = COMPRESSOR_NONE
     subblocks: list[SubBlockEntry] = field(default_factory=list)
 
     @property
@@ -183,7 +200,8 @@ class LevelEntry:
             sb.payload_off += base
 
 
-def pack_index(levels: list[LevelEntry]) -> bytes:
+def pack_index(levels: list[LevelEntry], *,
+               version: int = TACZ_VERSION) -> bytes:
     out = bytearray(struct.pack("<I", len(levels)))
     for e in levels:
         rank = e.rank
@@ -191,9 +209,15 @@ def pack_index(levels: list[LevelEntry]) -> bytes:
             raise ValueError(f"unsupported rank {rank}")
         if len(e.grid_shape) != rank:
             raise ValueError("grid_shape rank mismatch")
-        out += _LEVEL_HEAD.pack(rank, e.strategy, e.algorithm,
-                                e.mask_compressor, e.sz_block, e.unit,
-                                e.ratio, e.eb, e.n_values, e.density)
+        if version >= 2:
+            out += _LEVEL_HEAD.pack(rank, e.strategy, e.algorithm,
+                                    e.mask_compressor, e.payload_compressor,
+                                    e.sz_block, e.unit, e.ratio, e.eb,
+                                    e.n_values, e.density)
+        else:
+            out += _LEVEL_HEAD_V1.pack(rank, e.strategy, e.algorithm,
+                                       e.mask_compressor, e.sz_block, e.unit,
+                                       e.ratio, e.eb, e.n_values, e.density)
         out += struct.pack(f"<{rank}I", *e.shape)
         out += struct.pack(f"<{rank}I", *e.grid_shape)
         out += _LEVEL_SECTIONS.pack(e.codebook_off, e.codebook_len,
@@ -209,15 +233,23 @@ def pack_index(levels: list[LevelEntry]) -> bytes:
     return bytes(out)
 
 
-def parse_index(buf: bytes) -> list[LevelEntry]:
+def parse_index(buf: bytes, *, version: int = TACZ_VERSION
+                ) -> list[LevelEntry]:
     try:
         (n_levels,) = struct.unpack_from("<I", buf, 0)
         pos = 4
         levels: list[LevelEntry] = []
         for _ in range(n_levels):
-            (rank, strategy, algorithm, mask_comp, sz_block, unit, ratio,
-             eb, n_values, density) = _LEVEL_HEAD.unpack_from(buf, pos)
-            pos += _LEVEL_HEAD.size
+            if version >= 2:
+                (rank, strategy, algorithm, mask_comp, payload_comp,
+                 sz_block, unit, ratio, eb, n_values,
+                 density) = _LEVEL_HEAD.unpack_from(buf, pos)
+                pos += _LEVEL_HEAD.size
+            else:
+                (rank, strategy, algorithm, mask_comp, sz_block, unit, ratio,
+                 eb, n_values, density) = _LEVEL_HEAD_V1.unpack_from(buf, pos)
+                payload_comp = COMPRESSOR_NONE
+                pos += _LEVEL_HEAD_V1.size
             if not 1 <= rank <= MAX_RANK:
                 raise ValueError(f"corrupt index: rank {rank}")
             shape = struct.unpack_from(f"<{rank}I", buf, pos)
@@ -234,7 +266,8 @@ def parse_index(buf: bytes) -> list[LevelEntry]:
                                codebook_off=cb_off, codebook_len=cb_len,
                                codebook_crc=cb_crc,
                                mask_off=mask_off, mask_len=mask_len,
-                               mask_crc=mask_crc, mask_compressor=mask_comp)
+                               mask_crc=mask_crc, mask_compressor=mask_comp,
+                               payload_compressor=payload_comp)
             for _ in range(n_sb):
                 vals = _SUBBLOCK.unpack_from(buf, pos)
                 pos += _SUBBLOCK.size

@@ -12,6 +12,7 @@ bit-identically.
 from __future__ import annotations
 
 import io as _stdio
+import threading
 import zlib
 from dataclasses import dataclass
 
@@ -73,11 +74,12 @@ class TACZReader:
         else:
             self._f = open(src, "rb")
             self._own = True
+        self._io_lock = threading.Lock()   # seek+read must be atomic
         try:
             self._f.seek(0, 2)
             self._size = self._f.tell()
-            fmt.parse_header(self._read_at(0, min(fmt.HEADER_SIZE,
-                                                  self._size)))
+            self.version = fmt.parse_header(
+                self._read_at(0, min(fmt.HEADER_SIZE, self._size)))
             idx_off, idx_len, idx_crc = fmt.parse_footer(
                 self._read_at(max(0, self._size - fmt.FOOTER_SIZE),
                               min(fmt.FOOTER_SIZE, self._size)))
@@ -86,7 +88,11 @@ class TACZReader:
             index = self._read_at(idx_off, idx_len)
             if fmt.index_crc(index) != idx_crc:
                 raise ValueError("corrupt TACZ file: index CRC mismatch")
-            self.levels: list[fmt.LevelEntry] = fmt.parse_index(index)
+            # the index CRC uniquely identifies the snapshot's content —
+            # the serving layer's hot-swap check compares it footer-to-footer
+            self.index_crc = idx_crc & 0xFFFFFFFF
+            self.levels: list[fmt.LevelEntry] = fmt.parse_index(
+                index, version=self.version)
         except BaseException:
             # validation raises for exactly the files callers probe with
             # (truncated/corrupt/non-TACZ) — don't leak the fd until GC
@@ -112,8 +118,11 @@ class TACZReader:
         return len(self.levels)
 
     def _read_at(self, off: int, length: int) -> bytes:
-        self._f.seek(off)
-        buf = self._f.read(length)
+        # one reader may serve many threads (RegionServer, ThreadingHTTP):
+        # the shared handle's seek+read pair must not interleave
+        with self._io_lock:
+            self._f.seek(off)
+            buf = self._f.read(length)
         if len(buf) != length:
             raise ValueError("truncated TACZ file: unexpected EOF")
         return buf
@@ -178,17 +187,17 @@ class TACZReader:
             return flat + 1
         return sb.n_codes   # interp is global — no partial decode
 
-    def _decode_subblock(self, li: int, sb: fmt.SubBlockEntry,
-                         shape: tuple[int, ...],
-                         limit: int | None = None) -> np.ndarray:
-        """Decode one payload into its reconstructed brick (bit-identical
-        to the encoder-side recon).
+    def _subblock_codes(self, li: int, sb: fmt.SubBlockEntry,
+                        shape: tuple[int, ...], limit: int | None = None,
+                        ) -> tuple[np.ndarray, np.ndarray | None]:
+        """Entropy-decode one payload → (codes, betas), no prediction replay.
 
-        ``limit`` (from :meth:`_prefix_limit`) stops the entropy decode
-        after the first ``limit`` codes: cells whose code rectangle lies
-        inside the prefix reconstruct bit-identically, later cells are
-        unspecified — only the ROI path passes it, and it never reads
-        those cells.
+        The codes array always has ``sb.n_codes`` entries; with ``limit``
+        only the leading ``limit`` are decoded (the rest are zeros and
+        unspecified for reconstruction purposes).  This is the shared
+        payload path of :meth:`_decode_subblock` (serial recon) and the
+        serving-side decode planner (batched recon through
+        ``sz.decode_codes_batched``).
         """
         e = self.levels[li]
         payload = self._read_at(sb.payload_off, sb.payload_len)
@@ -219,6 +228,40 @@ class TACZReader:
             full = np.zeros(sb.n_codes, dtype=np.int64)
             full[:n_decode] = codes
             codes = full
+        return codes, betas
+
+    def subblock_shape(self, li: int, sbi: int) -> tuple[int, ...]:
+        """Decode shape of one sub-block payload (brick shape for SHE
+        levels, the padded/original grid for gsp/global single payloads)."""
+        e = self.levels[li]
+        if e.strategy in self._SHE_STRATEGIES:
+            return tuple(int(s) for s in e.subblocks[sbi].size)
+        if e.strategy == fmt.STRATEGY_GSP:
+            return tuple(int(s) for s in e.grid_shape)
+        return tuple(int(s) for s in e.shape)
+
+    def subblock_codes(self, li: int, sbi: int, limit: int | None = None,
+                       ) -> tuple[np.ndarray, np.ndarray | None]:
+        """(codes, betas) of sub-block ``sbi`` of level ``li`` — the
+        planner's entry point for batched reconstruction."""
+        e = self.levels[li]
+        return self._subblock_codes(li, e.subblocks[sbi],
+                                    self.subblock_shape(li, sbi), limit)
+
+    def _decode_subblock(self, li: int, sb: fmt.SubBlockEntry,
+                         shape: tuple[int, ...],
+                         limit: int | None = None) -> np.ndarray:
+        """Decode one payload into its reconstructed brick (bit-identical
+        to the encoder-side recon).
+
+        ``limit`` (from :meth:`_prefix_limit`) stops the entropy decode
+        after the first ``limit`` codes: cells whose code rectangle lies
+        inside the prefix reconstruct bit-identically, later cells are
+        unspecified — only the ROI path passes it, and it never reads
+        those cells.
+        """
+        e = self.levels[li]
+        codes, betas = self._subblock_codes(li, sb, shape, limit)
         return sz.decode_codes(codes, shape, e.eb,
                                branch=fmt.BRANCH_NAMES[sb.branch],
                                block=e.sz_block, betas=betas)
@@ -255,6 +298,87 @@ class TACZReader:
         """Full decode of every level, in file order."""
         return [self.read_level(i) for i in range(self.n_levels)]
 
+    # ----------------------- ROI machinery (shared) ------------------------
+    # read_roi and the serving layer (repro.serving.regions) are the same
+    # code path: box mapping, sub-block intersection, and crop assembly live
+    # here; only *where the decoded brick comes from* differs (prefix-stop
+    # entropy decode here, the byte-budgeted sub-block cache there).
+
+    def level_box(self, li: int, box: Box) -> Box:
+        """Map a finest-grid box into level ``li`` cells (floor/ceil through
+        the coarsening ratio, clipped to the level extent)."""
+        e = self.levels[li]
+        if e.rank != 3:
+            raise ValueError("ROI reads need 3D levels")
+        r = max(int(e.ratio), 1)
+        return tuple(
+            (min(max(lo // r, 0), s), min(-(-hi // r), s))
+            for (lo, hi), s in zip(box, e.shape))
+
+    def intersecting_subblocks(self, li: int, lbox: Box,
+                               ) -> list[tuple[int, Box]]:
+        """(sub-block index, intersection box in level cells) for every
+        sub-block of level ``li`` whose cuboid overlaps ``lbox``."""
+        e = self.levels[li]
+        out: list[tuple[int, Box]] = []
+        for i, sb in enumerate(e.subblocks):
+            isect = tuple(
+                (max(lo, o), min(hi, o + s))
+                for (lo, hi), o, s in zip(lbox, sb.origin, sb.size))
+            if all(hi > lo for lo, hi in isect):
+                out.append((i, isect))
+        return out
+
+    def assemble_level_roi(self, li: int, lbox: Box, fetch_brick,
+                           fetch_level, tasks=None) -> np.ndarray:
+        """Assemble one level's crop from decoded bricks.
+
+        ``fetch_brick(li, sbi, local_hi)`` must return sub-block ``sbi``'s
+        reconstruction, valid at least on brick-local cells below
+        ``local_hi`` (exclusive); ``fetch_level(li)`` must return the full
+        level reconstruction (gsp/global levels — their single payload is
+        not block-local).  ``tasks`` may carry a precomputed
+        ``intersecting_subblocks(li, lbox)`` result (the serving planner
+        already ran the scan).  Masking and crop placement are identical
+        for every caller, which is what keeps cached serving bit-identical
+        to :meth:`read_roi`.
+        """
+        e = self.levels[li]
+        bshape = tuple(max(hi - lo, 0) for lo, hi in lbox)
+        if 0 in bshape:
+            return np.zeros(bshape, dtype=np.float32)
+        if e.strategy in self._SHE_STRATEGIES:
+            if tasks is None:
+                tasks = self.intersecting_subblocks(li, lbox)
+            acc = np.zeros(bshape, dtype=np.float32)
+            for sbi, isect in tasks:
+                sb = e.subblocks[sbi]
+                local_hi = tuple(hi - o for (_, hi), o
+                                 in zip(isect, sb.origin))
+                brick = fetch_brick(li, sbi, local_hi)
+                src = tuple(slice(lo - o, hi - o) for (lo, hi), o
+                            in zip(isect, sb.origin))
+                dst = tuple(slice(lo - b0, hi - b0) for (lo, hi), (b0, _)
+                            in zip(isect, lbox))
+                acc[dst] = brick[src]
+            mask = self._mask(li)
+            if mask is not None:
+                mcrop = mask[tuple(slice(lo, hi) for lo, hi in lbox)]
+                acc = np.where(mcrop, acc, 0.0).astype(np.float32)
+            return acc
+        # gsp/global levels have one global payload — decode fully,
+        # then crop (interpolation/padding are not block-local)
+        return fetch_level(li)[tuple(slice(lo, hi) for lo, hi in lbox)]
+
+    def _fetch_brick_prefix(self, li: int, sbi: int,
+                            local_hi: tuple[int, int, int]) -> np.ndarray:
+        """read_roi's brick source: prefix-stop entropy decode up to the
+        box's high corner (C-order prefix ⊇ Lorenzo code rectangle)."""
+        e = self.levels[li]
+        sb = e.subblocks[sbi]
+        limit = self._prefix_limit(sb, sb.size, e.sz_block, local_hi)
+        return self._decode_subblock(li, sb, sb.size, limit=limit)
+
     def read_roi(self, box: Box) -> list[ROILevel]:
         """Decode only the region of interest.
 
@@ -268,46 +392,12 @@ class TACZReader:
             raise ValueError("box must be ((x0,x1),(y0,y1),(z0,z1))")
         out: list[ROILevel] = []
         for li, e in enumerate(self.levels):
-            if e.rank != 3:
-                raise ValueError("ROI reads need 3D levels")
-            r = max(int(e.ratio), 1)
-            lbox = tuple(
-                (min(max(lo // r, 0), s), min(-(-hi // r), s))
-                for (lo, hi), s in zip(box, e.shape))
-            bshape = tuple(max(hi - lo, 0) for lo, hi in lbox)
-            if 0 in bshape:
-                out.append(ROILevel(level=li, ratio=r, box=lbox,
-                                    data=np.zeros(bshape, dtype=np.float32)))
-                continue
-            if e.strategy in self._SHE_STRATEGIES:
-                acc = np.zeros(bshape, dtype=np.float32)
-                for sb in e.subblocks:
-                    isect = tuple(
-                        (max(lo, o), min(hi, o + s))
-                        for (lo, hi), o, s in zip(lbox, sb.origin, sb.size))
-                    if any(hi <= lo for lo, hi in isect):
-                        continue
-                    local_hi = tuple(hi - o for (_, hi), o
-                                     in zip(isect, sb.origin))
-                    limit = self._prefix_limit(sb, sb.size, e.sz_block,
-                                               local_hi)
-                    brick = self._decode_subblock(li, sb, sb.size,
-                                                  limit=limit)
-                    src = tuple(slice(lo - o, hi - o) for (lo, hi), o
-                                in zip(isect, sb.origin))
-                    dst = tuple(slice(lo - b0, hi - b0) for (lo, hi), (b0, _)
-                                in zip(isect, lbox))
-                    acc[dst] = brick[src]
-                mask = self._mask(li)
-                if mask is not None:
-                    mcrop = mask[tuple(slice(lo, hi) for lo, hi in lbox)]
-                    acc = np.where(mcrop, acc, 0.0).astype(np.float32)
-            else:
-                # gsp/global levels have one global payload — decode fully,
-                # then crop (interpolation/padding are not block-local)
-                acc = self.read_level(li)[
-                    tuple(slice(lo, hi) for lo, hi in lbox)]
-            out.append(ROILevel(level=li, ratio=r, box=lbox, data=acc))
+            lbox = self.level_box(li, box)
+            data = self.assemble_level_roi(li, lbox,
+                                           self._fetch_brick_prefix,
+                                           self.read_level)
+            out.append(ROILevel(level=li, ratio=max(int(e.ratio), 1),
+                                box=lbox, data=data))
         return out
 
     def verify(self) -> bool:

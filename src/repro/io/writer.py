@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import huffman, she
 from repro.core.amr import AMRDataset
+from repro.core.compat import HAVE_ZSTD, zstd_compress
 from repro.core.hybrid import (AMRCompressionResult, LevelResult,
                                compress_level)
 from repro.core.sz import SZResult
@@ -39,6 +40,48 @@ from repro.core.sz import SZResult
 from . import format as fmt
 
 __all__ = ["TACZWriter", "pack_level", "write"]
+
+
+def resolve_payload_codec(codec: str) -> int:
+    """Map a payload-codec name to its COMPRESSOR_* wire code.
+
+    ``"auto"`` (the default everywhere) picks zstd when the optional
+    ``zstandard`` module is importable and degrades to stdlib zlib
+    otherwise (``repro.core.compat``); ``"none"`` disables the v2
+    lossless pass, reproducing v1's raw packed-bits payloads.
+    """
+    if codec == "none":
+        return fmt.COMPRESSOR_NONE
+    if codec == "zlib":
+        return fmt.COMPRESSOR_ZLIB
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise ModuleNotFoundError(
+                "payload_codec='zstd' but zstandard is not installed "
+                "(use 'auto' to fall back to zlib)")
+        return fmt.COMPRESSOR_ZSTD
+    if codec == "auto":
+        return fmt.COMPRESSOR_ZSTD if HAVE_ZSTD else fmt.COMPRESSOR_ZLIB
+    raise ValueError(f"unknown payload codec {codec!r}")
+
+
+def _lossless_pass(buf: bytes, compressor: int) -> tuple[bytes, int]:
+    """Apply the configured byte pass to one payload's code bytes.
+
+    Size-reducing only: the compressed form is kept when strictly smaller,
+    otherwise the raw bytes go to the wire as ``COMPRESSOR_NONE`` — the
+    per-sub-block compressor field records what actually happened, so the
+    reader never pays an inflate for a pass that lost.
+    """
+    if compressor == fmt.COMPRESSOR_NONE or len(buf) < 16:
+        return buf, fmt.COMPRESSOR_NONE
+    if compressor == fmt.COMPRESSOR_ZSTD:
+        comp = zstd_compress(buf)
+    else:
+        comp = zlib.compress(buf, 6)
+    if len(comp) < len(buf):
+        return comp, compressor
+    return buf, fmt.COMPRESSOR_NONE
 
 
 def _branch_code(r: SZResult) -> int:
@@ -58,11 +101,23 @@ def _betas_bytes(r: SZResult) -> bytes:
     return np.ascontiguousarray(r.extras["betas"], dtype="<f4").tobytes()
 
 
-def pack_level(lr: LevelResult) -> tuple[bytes, fmt.LevelEntry]:
+def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
+               ) -> tuple[bytes, fmt.LevelEntry]:
     """Serialize one compressed level into (section blob, index entry).
 
     Offsets inside the returned entry are blob-relative; the caller places
     the blob in the file and calls ``entry.shift_offsets(base)``.
+
+    ``payload_codec`` selects the v2 lossless byte pass over each
+    payload's packed-Huffman code bytes (betas prefixes stay raw):
+    ``"auto"`` → zstd, or zlib when zstandard is missing; ``"none"``
+    reproduces v1's raw payloads.  The pass is recorded per level
+    (``payload_compressor``) and per sub-block (only where it shrank).
+
+    GSP/global levels reuse the codebook and packed payload the
+    compress-time entropy stage already materialized
+    (``SZResult.extras["entropy"]``) instead of re-encoding the same
+    single stream — the write-path memoization the ROADMAP tracked.
     """
     art = lr.artifacts
     if art is None:
@@ -89,13 +144,23 @@ def pack_level(lr: LevelResult) -> tuple[bytes, fmt.LevelEntry]:
         eb=float(lr.eb), n_values=int(lr.n_values), density=float(lr.density))
 
     # --- shared codebook section (one per level, paper Alg. 4) -------------
+    memo = None
     if lr.she:
         cb = art.codebook
     else:
-        # gsp/global levels: one payload, rebuild its (deterministic)
-        # codebook from the code stream so decode needs no recompression
-        cb = huffman.build_codebook(np.asarray(art.results[0].codes,
-                                               dtype=np.int64))
+        # gsp/global levels: one payload.  The compress-time entropy stage
+        # already built the (deterministic) codebook and packed bitstream —
+        # reuse both when present; rebuild only for artifacts produced
+        # without entropy accounting.
+        r0 = art.results[0]
+        ent = (r0.extras or {}).get("entropy")
+        if (len(art.results) == 1 and ent is not None
+                and ent.get("codebook") is not None):
+            memo = ent
+            cb = ent["codebook"]
+        else:
+            cb = huffman.build_codebook(np.asarray(r0.codes,
+                                                   dtype=np.int64))
     cb_bytes = huffman.serialize_codebook(cb)
     entry.codebook_off, entry.codebook_len = append(cb_bytes)
     entry.codebook_crc = zlib.crc32(cb_bytes)
@@ -120,35 +185,43 @@ def pack_level(lr: LevelResult) -> tuple[bytes, fmt.LevelEntry]:
         origins = [(0, 0, 0)]
         gs = tuple(int(s) for s in art.grid_shape[:3])
         sizes = [gs + (1,) * (3 - len(gs))]
-    payloads = she.encode_brick_payloads(
-        cb, [np.asarray(r.codes, dtype=np.int64) for r in results])
+    if memo is not None:
+        payloads = [(memo["packed"], memo["nbits"])]
+    else:
+        payloads = she.encode_brick_payloads(
+            cb, [np.asarray(r.codes, dtype=np.int64) for r in results])
+    level_comp = resolve_payload_codec(payload_codec)
+    entry.payload_compressor = level_comp
     for r, (packed, nbits), origin, size in zip(results, payloads,
                                                 origins, sizes):
         betas = _betas_bytes(r)
-        payload = betas + packed
+        stored, comp = _lossless_pass(packed, level_comp)
+        payload = betas + stored
         off, length = append(payload)
         entry.subblocks.append(fmt.SubBlockEntry(
             origin=tuple(int(o) for o in origin),
             size=tuple(int(s) for s in size),
             branch=_branch_code(r), codec=fmt.CODEC_HUFFMAN,
-            compressor=fmt.COMPRESSOR_NONE,
+            compressor=comp,
             payload_off=off, payload_len=length, nbits=int(nbits),
             n_codes=int(np.asarray(r.codes).size), betas_len=len(betas),
             crc=zlib.crc32(payload)))
     return bytes(blob), entry
 
 
-def build_container(packed: list[tuple[bytes, fmt.LevelEntry]],
-                    ) -> bytes:
+def build_container(packed: list[tuple[bytes, fmt.LevelEntry]], *,
+                    version: int = fmt.TACZ_VERSION) -> bytes:
     """Assemble header + level blobs + index + footer into one buffer
-    (the in-memory path used for checkpoint tensor blobs)."""
-    out = bytearray(fmt.pack_header())
+    (the in-memory path used for checkpoint tensor blobs).  ``version``
+    exists for back-compat tooling/tests that emit v1 indexes; payloads
+    must then not rely on v2-only index fields."""
+    out = bytearray(fmt.pack_header(version=version))
     entries = []
     for blob, entry in packed:
         entry.shift_offsets(len(out))
         out.extend(blob)
         entries.append(entry)
-    index = fmt.pack_index(entries)
+    index = fmt.pack_index(entries, version=version)
     index_off = len(out)
     out.extend(index)
     out.extend(fmt.pack_footer(index_off, len(index), fmt.index_crc(index)))
@@ -218,9 +291,11 @@ class TACZWriter:
                  algorithm: str = "lor_reg", she: bool = True,
                  strategy: str | None = None, sz_block: int = 6,
                  batched: bool = True, lorenzo_engine: str = "auto",
-                 queue_depth: int = 2):
+                 payload_codec: str = "auto", queue_depth: int = 2):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
+        resolve_payload_codec(payload_codec)   # fail fast on bad names
+        self._payload_codec = payload_codec
         self._defaults = dict(eb=eb, unit=unit, algorithm=algorithm, she=she,
                               strategy=strategy, sz_block=sz_block,
                               batched=batched, lorenzo_engine=lorenzo_engine)
@@ -356,7 +431,7 @@ class TACZWriter:
                               ratio=ratio, keep_artifacts=True)
 
     def _append_level(self, lr: LevelResult) -> None:
-        blob, entry = pack_level(lr)
+        blob, entry = pack_level(lr, payload_codec=self._payload_codec)
         entry.shift_offsets(self._off)
         self._f.write(blob)
         self._off += len(blob)

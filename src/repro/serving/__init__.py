@@ -1,1 +1,14 @@
-"""Serving: prefill/decode steps, batched engine, compressed KV cache."""
+"""Serving: prefill/decode steps, batched engine, compressed KV cache,
+and the TACZ region-serving subsystem.
+
+The LM-serving pieces (``repro.serving.engine``, ``repro.serving.kv_cache``)
+import JAX and are loaded explicitly by their callers.  The region-serving
+subsystem (``repro.serving.regions`` + ``http_api`` + ``client``) is
+numpy/stdlib-only and re-exported here.
+"""
+from .client import RegionClient
+from .http_api import RegionHTTPServer, serve
+from .regions import DecodePlanner, RegionServer, SubBlockCache
+
+__all__ = ["DecodePlanner", "RegionClient", "RegionHTTPServer",
+           "RegionServer", "SubBlockCache", "serve"]

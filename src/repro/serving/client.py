@@ -1,0 +1,84 @@
+"""``repro.serving.client`` — stdlib client for the region endpoint.
+
+Mirrors the server's wire format (``repro.serving.http_api``): metadata as
+JSON, region payloads as raw little-endian float32 reassembled into
+:class:`~repro.io.reader.ROILevel` objects, so a remote fetch drops into
+the same downstream code as a local ``read_roi``.
+"""
+from __future__ import annotations
+
+import json
+import struct
+import urllib.request
+
+import numpy as np
+
+from repro.io.reader import ROILevel
+
+from .http_api import format_box, parse_box
+
+__all__ = ["RegionClient"]
+
+
+class RegionClient:
+    """Client for one region endpoint (``http://host:port``)."""
+
+    def __init__(self, base_url: str, *, timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = float(timeout)
+
+    def _get(self, path: str):
+        return urllib.request.urlopen(self.base_url + path,
+                                      timeout=self.timeout)
+
+    def meta(self) -> dict:
+        """Snapshot + level metadata + cache stats."""
+        with self._get("/v1/meta") as resp:
+            return json.loads(resp.read())
+
+    def stats(self) -> dict:
+        with self._get("/v1/stats") as resp:
+            return json.loads(resp.read())
+
+    def region(self, level: int, box) -> ROILevel:
+        """One level's crop of ``box`` (finest-grid cells)."""
+        path = f"/v1/region?level={int(level)}&box={format_box(box)}"
+        with self._get(path) as resp:
+            raw = resp.read()
+            shape = tuple(int(s) for s in
+                          resp.headers["X-TACZ-Shape"].split(",")
+                          if s != "")
+            lbox = parse_box(resp.headers["X-TACZ-Box"])
+            data = np.frombuffer(raw, dtype="<f4").reshape(shape)
+            return ROILevel(level=int(resp.headers["X-TACZ-Level"]),
+                            ratio=int(resp.headers["X-TACZ-Ratio"]),
+                            box=lbox, data=data)
+
+    def regions(self, boxes, levels=None) -> list[list[ROILevel]]:
+        """Batched fetch — one list of per-level crops per box."""
+        req = {"boxes": [[list(r) for r in box] for box in boxes]}
+        if levels is not None:
+            req["levels"] = [int(li) for li in levels]
+        body = json.dumps(req).encode()
+        request = urllib.request.Request(
+            self.base_url + "/v1/regions", data=body,
+            headers={"Content-Type": "application/json"}, method="POST")
+        with urllib.request.urlopen(request, timeout=self.timeout) as resp:
+            blob = resp.read()
+        (hdr_len,) = struct.unpack_from("<I", blob, 0)
+        header = json.loads(blob[4:4 + hdr_len])
+        payload = blob[4 + hdr_len:]
+        out: list[list[ROILevel]] = []
+        for rows in header["results"]:
+            per_box: list[ROILevel] = []
+            for r in rows:
+                shape = tuple(r["shape"])
+                data = np.frombuffer(
+                    payload, dtype="<f4", offset=r["offset"],
+                    count=int(np.prod(shape, dtype=np.int64)),
+                ).reshape(shape)
+                per_box.append(ROILevel(
+                    level=r["level"], ratio=r["ratio"],
+                    box=tuple(tuple(v) for v in r["box"]), data=data))
+            out.append(per_box)
+        return out

@@ -1,0 +1,217 @@
+"""Thin stdlib HTTP endpoint over :class:`repro.serving.regions.RegionServer`.
+
+JSON for metadata, raw little-endian float32 for region payloads — no
+framework, no third-party deps (``http.server`` + ``ThreadingHTTPServer``).
+
+Routes::
+
+    GET  /v1/meta                 snapshot + level metadata + cache stats
+    GET  /v1/stats                cache counters only
+    GET  /v1/region?level=L&box=x0:x1,y0:y1,z0:z1
+                                  one level's crop; body = C-order <f4 bytes,
+                                  shape/box/ratio travel in X-TACZ-* headers
+    POST /v1/regions              batched: JSON {"boxes": [...], "levels":
+                                  [...]?} in; u32 header length + JSON header
+                                  + concatenated <f4 payloads out
+
+The batched response header is ``{"snapshot_crc", "results"}`` where
+``results[b][l]`` holds ``{level, ratio, box, shape, offset, nbytes}`` and
+``offset`` indexes into the payload section that follows the header.
+Every request first runs the server's footer-CRC hot-swap check (when the
+server was built with ``auto_reload=True``), so an atomically republished
+snapshot is picked up without restarting the endpoint.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+import numpy as np
+
+from repro.io import format as fmt
+
+from .regions import RegionServer
+
+__all__ = ["RegionHTTPServer", "RegionRequestHandler", "serve",
+           "format_box", "parse_box"]
+
+
+def format_box(box) -> str:
+    """((x0,x1),(y0,y1),(z0,z1)) → ``"x0:x1,y0:y1,z0:z1"``."""
+    return ",".join(f"{int(lo)}:{int(hi)}" for lo, hi in box)
+
+
+def parse_box(s: str):
+    """Inverse of :func:`format_box`; raises ValueError on malformed input."""
+    dims = s.split(",")
+    if len(dims) != 3:
+        raise ValueError("box must have three x0:x1 ranges")
+    box = []
+    for d in dims:
+        lo, _, hi = d.partition(":")
+        box.append((int(lo), int(hi)))
+    return tuple(box)
+
+
+class RegionRequestHandler(BaseHTTPRequestHandler):
+    server_version = "taczserve/1"
+    protocol_version = "HTTP/1.1"
+
+    # quiet by default — the serving loop should not spam stderr per request
+    def log_message(self, *args) -> None:  # pragma: no cover - logging only
+        if getattr(self.server, "verbose", False):
+            super().log_message(*args)
+
+    @property
+    def rs(self) -> RegionServer:
+        return self.server.region_server
+
+    # ------------------------------ plumbing -------------------------------
+
+    def _send_json(self, obj, status: int = 200) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _fail(self, status: int, msg: str) -> None:
+        self._send_json({"error": msg}, status=status)
+
+    def _meta(self) -> dict:
+        rd = self.rs.reader
+        levels = []
+        for li, e in enumerate(rd.levels):
+            levels.append({
+                "level": li, "shape": list(e.shape),
+                "ratio": max(int(e.ratio), 1), "eb": e.eb,
+                "strategy": fmt.STRATEGY_NAMES.get(e.strategy, "?"),
+                "algorithm": fmt.ALGO_NAMES.get(e.algorithm, "?"),
+                "n_subblocks": len(e.subblocks),
+            })
+        return {"snapshot_crc": self.rs.snapshot_crc,
+                "version": rd.version, "levels": levels,
+                "cache": self.rs.cache.stats()}
+
+    # ------------------------------- routes --------------------------------
+
+    def do_GET(self) -> None:
+        url = urlparse(self.path)
+        if url.path == "/v1/meta":
+            # data routes hot-swap inside get_regions (auto_reload);
+            # metadata routes run the footer check themselves
+            if self.rs.auto_reload:
+                self.rs.maybe_reload()
+            return self._send_json(self._meta())
+        if url.path == "/v1/stats":
+            if self.rs.auto_reload:
+                self.rs.maybe_reload()
+            return self._send_json(self.rs.stats())
+        if url.path == "/v1/region":
+            return self._get_region(parse_qs(url.query))
+        return self._fail(404, f"unknown path {url.path!r}")
+
+    def _get_region(self, q: dict) -> None:
+        try:
+            level = int(q["level"][0])
+            box = parse_box(q["box"][0])
+            if not 0 <= level < self.rs.n_levels:
+                raise ValueError(f"level {level} out of range")
+        except (KeyError, IndexError, ValueError) as exc:
+            return self._fail(400, f"bad region query: {exc}")
+        try:
+            roi = self.rs.get_region(level, box)
+        except ValueError as exc:      # e.g. hot-swap shrank the level count
+            return self._fail(400, f"bad region query: {exc}")
+        except Exception as exc:       # corrupt payload, missing codec, ...
+            return self._fail(500, f"region decode failed: {exc}")
+        body = np.ascontiguousarray(roi.data, dtype="<f4").tobytes()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("Content-Length", str(len(body)))
+        self.send_header("X-TACZ-Level", str(roi.level))
+        self.send_header("X-TACZ-Ratio", str(roi.ratio))
+        self.send_header("X-TACZ-Box", format_box(roi.box))
+        self.send_header("X-TACZ-Shape",
+                         ",".join(str(s) for s in roi.shape))
+        self.send_header("X-TACZ-Dtype", "<f4")
+        self.send_header("X-TACZ-Snapshot-CRC", str(self.rs.snapshot_crc))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_POST(self) -> None:
+        url = urlparse(self.path)
+        if url.path != "/v1/regions":
+            return self._fail(404, f"unknown path {url.path!r}")
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            req = json.loads(self.rfile.read(n) or b"{}")
+            boxes = [tuple((int(lo), int(hi)) for lo, hi in box)
+                     for box in req["boxes"]]
+            for box in boxes:
+                if len(box) != 3:
+                    raise ValueError("each box needs three (lo, hi) ranges")
+            levels = req.get("levels")
+            if levels is not None:
+                levels = [int(li) for li in levels]
+                for li in levels:
+                    if not 0 <= li < self.rs.n_levels:
+                        raise ValueError(f"level {li} out of range")
+        except (KeyError, TypeError, ValueError,
+                json.JSONDecodeError) as exc:
+            return self._fail(400, f"bad regions request: {exc}")
+        try:
+            results = self.rs.get_regions(boxes, levels=levels)
+        except ValueError as exc:      # e.g. hot-swap shrank the level count
+            return self._fail(400, f"bad regions request: {exc}")
+        except Exception as exc:       # corrupt payload, missing codec, ...
+            return self._fail(500, f"region decode failed: {exc}")
+        payload = bytearray()
+        header: dict = {"snapshot_crc": self.rs.snapshot_crc, "results": []}
+        for per_box in results:
+            rows = []
+            for roi in per_box:
+                raw = np.ascontiguousarray(roi.data, dtype="<f4").tobytes()
+                rows.append({"level": roi.level, "ratio": roi.ratio,
+                             "box": [list(r) for r in roi.box],
+                             "shape": list(roi.shape),
+                             "offset": len(payload), "nbytes": len(raw)})
+                payload.extend(raw)
+            header["results"].append(rows)
+        hdr = json.dumps(header).encode()
+        body = struct.pack("<I", len(hdr)) + hdr + bytes(payload)
+        self.send_response(200)
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+
+class RegionHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer bound to one :class:`RegionServer`."""
+
+    daemon_threads = True
+
+    def __init__(self, addr, region_server: RegionServer, *,
+                 verbose: bool = False):
+        super().__init__(addr, RegionRequestHandler)
+        self.region_server = region_server
+        self.verbose = verbose
+
+
+def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
+          cache_bytes: int = 256 << 20, auto_reload: bool = True,
+          verbose: bool = False) -> RegionHTTPServer:
+    """Build a region endpoint from a ``.tacz`` path or a RegionServer.
+
+    Returns the (not yet running) HTTP server; call ``serve_forever()``
+    (typically on a thread) and ``shutdown()`` to stop.  ``port=0`` binds
+    an ephemeral port — read it back from ``server_address``.
+    """
+    if not isinstance(src, RegionServer):
+        src = RegionServer(src, cache_bytes=cache_bytes,
+                           auto_reload=auto_reload)
+    return RegionHTTPServer((host, port), src, verbose=verbose)

@@ -1,0 +1,395 @@
+"""Region serving over TACZ (ISSUE 3): cache, planner, server, HTTP.
+
+The contract:
+
+  * ``RegionServer.get_region/get_roi`` are **bit-identical** to
+    ``TACZReader.read_roi`` — cold cache, warm cache, and under
+    concurrent access;
+  * the ``SubBlockCache`` honors its byte budget with LRU eviction and
+    truthful hit/miss/eviction counters;
+  * the planner dedupes overlapping boxes down to unique sub-blocks and
+    batch-decodes only cache misses;
+  * the HTTP endpoint + client round-trip regions exactly, and a
+    republished snapshot hot-swaps via the footer CRC.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import io as tacz
+from repro.core import amr, hybrid
+from repro.serving.client import RegionClient
+from repro.serving.http_api import serve
+from repro.serving.regions import DecodePlanner, RegionServer, SubBlockCache
+
+BOXES = [((0, 8), (0, 8), (0, 8)),
+         ((5, 23), (11, 40), (2, 9)),
+         ((56, 64), (48, 64), (0, 64)),
+         ((0, 64), (0, 64), (0, 64)),
+         ((30, 34), (30, 34), (30, 34))]
+
+
+@pytest.fixture(scope="module")
+def snapshot(tmp_path_factory):
+    ds = amr.load_preset("run1_z10")
+    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = os.path.join(str(tmp_path_factory.mktemp("serving")), "s.tacz")
+    tacz.write(path, res)
+    return path, res
+
+
+def _assert_same_roi(got, ref):
+    assert len(got) == len(ref)
+    for g, r in zip(got, ref):
+        assert (g.level, g.ratio, g.box) == (r.level, r.ratio, r.box)
+        np.testing.assert_array_equal(g.data, r.data)
+
+
+# ------------------------------- cache --------------------------------------
+
+
+def test_cache_lru_eviction_under_byte_budget():
+    kb = np.zeros(256, dtype=np.float32)          # 1 KiB per brick
+    cache = SubBlockCache(budget_bytes=3 * kb.nbytes)
+    for i in range(3):
+        cache.put((0, i), kb)
+    assert len(cache) == 3 and cache.evictions == 0
+    assert cache.get((0, 0)) is not None          # 0 is now MRU
+    cache.put((0, 3), kb)                         # evicts LRU = 1
+    assert cache.evictions == 1
+    assert (0, 1) not in cache
+    assert (0, 0) in cache and (0, 2) in cache and (0, 3) in cache
+    assert cache.nbytes <= cache.budget_bytes
+    # counters are truthful
+    assert cache.get((0, 1)) is None
+    assert cache.stats()["misses"] == 1
+    assert cache.stats()["hits"] == 1
+
+
+def test_cache_rejects_oversized_entry_and_replaces_in_place():
+    small = np.zeros(8, dtype=np.float32)
+    cache = SubBlockCache(budget_bytes=64)
+    cache.put((0, 0), small)                      # 32 B, fits
+    big = np.zeros(1024, dtype=np.float32)        # 4 KiB > budget
+    cache.put((0, 1), big)
+    assert (0, 1) not in cache                    # cannot be held ...
+    assert (0, 0) in cache                        # ... and no hot-set flush
+    assert cache.evictions == 0
+    assert cache.nbytes <= cache.budget_bytes
+    # same-key replace updates byte accounting instead of double counting
+    cache.put((0, 0), small)
+    assert cache.nbytes == small.nbytes
+
+
+def test_cached_bricks_are_read_only(snapshot):
+    path, _ = snapshot
+    with RegionServer(path, cache_bytes=1 << 20) as srv:
+        srv.get_roi(BOXES[0])
+        brick = next(iter(srv.cache._od.values()))
+        with pytest.raises((ValueError, RuntimeError)):
+            brick[0] = 1.0
+
+
+# --------------------------- server vs read_roi -----------------------------
+
+
+def test_get_roi_bit_identical_cold_and_warm(snapshot):
+    path, _ = snapshot
+    with tacz.TACZReader(path) as rd, \
+            RegionServer(path, cache_bytes=64 << 20) as srv:
+        for box in BOXES:
+            _assert_same_roi(srv.get_roi(box), rd.read_roi(box))   # cold-ish
+        cold = srv.cache.stats()
+        for box in BOXES:
+            _assert_same_roi(srv.get_roi(box), rd.read_roi(box))   # warm
+        warm = srv.cache.stats()
+        assert warm["hits"] > cold["hits"]
+        assert warm["misses"] == cold["misses"]   # nothing re-decoded
+
+
+def test_get_region_single_level(snapshot):
+    path, _ = snapshot
+    with tacz.TACZReader(path) as rd, RegionServer(path) as srv:
+        for li in range(rd.n_levels):
+            roi = srv.get_region(li, BOXES[1])
+            ref = rd.read_roi(BOXES[1])[li]
+            assert roi.level == li
+            np.testing.assert_array_equal(roi.data, ref.data)
+
+
+def test_empty_and_out_of_range_boxes(snapshot):
+    path, _ = snapshot
+    with tacz.TACZReader(path) as rd, RegionServer(path) as srv:
+        box = ((200, 300), (0, 8), (0, 8))        # beyond the extent
+        _assert_same_roi(srv.get_roi(box), rd.read_roi(box))
+        for roi in srv.get_roi(box):
+            assert roi.data.size == 0
+
+
+def test_planner_dedupes_overlapping_boxes(snapshot):
+    path, _ = snapshot
+    boxes = [((0, 16), (0, 16), (0, 16)),
+             ((8, 24), (8, 24), (8, 24)),
+             ((4, 20), (4, 20), (4, 20))]         # heavy overlap
+    with RegionServer(path, cache_bytes=64 << 20) as srv:
+        planner = DecodePlanner(srv.reader)
+        plans = planner.plan([(li, b) for b in boxes
+                              for li in range(srv.n_levels)])
+        unique = {k for p in plans for k in p.keys()}
+        srv.get_regions(boxes)
+        s = srv.cache.stats()
+        # one decode per unique sub-block, not per box×sub-block pair
+        assert s["misses"] == len(unique)
+        assert s["entries"] == len(unique)
+        # a repeat batch is all hits
+        srv.get_regions(boxes)
+        assert srv.cache.stats()["misses"] == len(unique)
+
+
+def test_batched_group_decode_matches_serial(snapshot):
+    """The planner's decode_codes_batched groups must reproduce the
+    reader's serial per-brick decode bit-identically."""
+    path, _ = snapshot
+    with tacz.TACZReader(path) as rd, RegionServer(path) as srv:
+        box = ((0, 64), (0, 64), (0, 64))
+        srv.get_roi(box)                           # fills cache via batches
+        for li, e in enumerate(rd.levels):
+            if e.strategy not in tacz.TACZReader._SHE_STRATEGIES:
+                continue
+            for sbi, sb in enumerate(e.subblocks):
+                cached = srv.cache.get((srv.snapshot_crc, li, sbi))
+                assert cached is not None
+                serial = rd._decode_subblock(li, sb, sb.size)
+                np.testing.assert_array_equal(cached, serial)
+
+
+def test_tight_budget_still_bit_identical(snapshot):
+    """Eviction thrash must never affect results, only speed."""
+    path, _ = snapshot
+    with tacz.TACZReader(path) as rd, \
+            RegionServer(path, cache_bytes=4096) as srv:
+        for box in BOXES[:3]:
+            _assert_same_roi(srv.get_roi(box), rd.read_roi(box))
+        assert srv.cache.stats()["evictions"] > 0
+
+
+# ------------------------------ concurrency ---------------------------------
+
+
+def test_threaded_get_region_stress(snapshot):
+    path, _ = snapshot
+    rng = np.random.default_rng(0)
+    boxes = []
+    for _ in range(12):
+        lo = rng.integers(0, 48, size=3)
+        ext = rng.integers(1, 17, size=3)
+        boxes.append(tuple((int(l), int(l + e)) for l, e in zip(lo, ext)))
+    with tacz.TACZReader(path) as rd:
+        refs = {b: rd.read_roi(b) for b in boxes}
+    errors: list[BaseException] = []
+    with RegionServer(path, cache_bytes=1 << 20) as srv:
+        def worker(seed):
+            try:
+                order = np.random.default_rng(seed).permutation(len(boxes))
+                for i in order:
+                    _assert_same_roi(srv.get_roi(boxes[i]), refs[boxes[i]])
+            except BaseException as exc:   # surfaces in the main thread
+                errors.append(exc)
+
+        threads = [threading.Thread(target=worker, args=(s,))
+                   for s in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=120)
+        assert not any(t.is_alive() for t in threads)
+    if errors:
+        raise errors[0]
+
+
+# ----------------------------- HTTP endpoint --------------------------------
+
+
+@pytest.fixture()
+def endpoint(snapshot):
+    path, res = snapshot
+    httpd = serve(path, port=0, cache_bytes=64 << 20)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    client = RegionClient(f"http://127.0.0.1:{httpd.server_address[1]}")
+    client.httpd = httpd               # exposed for fault-injection tests
+    try:
+        yield client, path, res
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+def test_http_meta_and_stats(endpoint):
+    client, path, res = endpoint
+    meta = client.meta()
+    assert len(meta["levels"]) == len(res.levels)
+    assert meta["levels"][0]["shape"] == list(res.levels[0].recon.shape)
+    with tacz.TACZReader(path) as rd:
+        assert meta["snapshot_crc"] == rd.index_crc
+    assert "hits" in client.stats()
+
+
+def test_http_region_roundtrip(endpoint):
+    client, path, _ = endpoint
+    with tacz.TACZReader(path) as rd:
+        for box in BOXES[:3]:
+            ref = rd.read_roi(box)
+            for li in range(rd.n_levels):
+                roi = client.region(li, box)
+                assert (roi.level, roi.ratio, roi.box) == \
+                    (ref[li].level, ref[li].ratio, ref[li].box)
+                np.testing.assert_array_equal(roi.data, ref[li].data)
+
+
+def test_http_batched_regions_roundtrip(endpoint):
+    client, path, _ = endpoint
+    with tacz.TACZReader(path) as rd:
+        refs = [rd.read_roi(b) for b in BOXES[:3]]
+    got = client.regions(BOXES[:3])
+    for per_box, ref in zip(got, refs):
+        _assert_same_roi(per_box, ref)
+    # level-filtered batch
+    got = client.regions(BOXES[:2], levels=[1])
+    for per_box, ref in zip(got, refs):
+        assert len(per_box) == 1
+        np.testing.assert_array_equal(per_box[0].data, ref[1].data)
+
+
+def test_http_bad_requests(endpoint):
+    import urllib.error
+    client, _, _ = endpoint
+    for path in ["/v1/region?level=99&box=0:8,0:8,0:8",
+                 "/v1/region?level=-1&box=0:8,0:8,0:8",
+                 "/v1/region?level=0&box=nope",
+                 "/nope"]:
+        with pytest.raises(urllib.error.HTTPError):
+            client._get(path).read()
+    # batched route must 400 (not reset the connection) on bad levels
+    for bad in ([99], [-1]):
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            client.regions([((0, 8), (0, 8), (0, 8))], levels=bad)
+        assert exc.value.code == 400
+
+
+def test_http_decode_failure_returns_500_not_reset(endpoint):
+    """A decode-side exception must surface as an HTTP error response,
+    not a dead handler thread and a dropped connection."""
+    import urllib.error
+    client, _, _ = endpoint
+    rs = client.httpd.region_server
+    orig = rs.get_regions
+    rs.get_regions = lambda *a, **kw: (_ for _ in ()).throw(
+        IOError("injected payload corruption"))
+    try:
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            client.region(0, BOXES[0])
+        assert exc.value.code == 500
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            client.regions([BOXES[0]])
+        assert exc.value.code == 500
+    finally:
+        rs.get_regions = orig
+    np.testing.assert_array_equal(                 # endpoint still serves
+        client.region(0, BOXES[0]).data,
+        client.regions([BOXES[0]])[0][0].data)
+
+
+def test_get_regions_rejects_bad_levels(snapshot):
+    path, _ = snapshot
+    with RegionServer(path) as srv:
+        with pytest.raises(ValueError, match="out of range"):
+            srv.get_regions([BOXES[0]], levels=[srv.n_levels])
+        with pytest.raises(ValueError, match="out of range"):
+            srv.get_region(-1, BOXES[0])
+
+
+# ------------------------------- hot swap -----------------------------------
+
+
+def test_snapshot_hot_swap_via_footer_crc(tmp_path):
+    ds_a = amr.synthetic_amr((32, 32, 32), densities=[0.23, 0.77],
+                             refine_block=4, seed=1)
+    ds_b = amr.synthetic_amr((32, 32, 32), densities=[0.4, 0.6],
+                             refine_block=4, seed=9)
+    res_a = hybrid.compress_amr(ds_a, eb=1e-3)
+    res_b = hybrid.compress_amr(ds_b, eb=1e-3)
+    path = os.path.join(str(tmp_path), "hot.tacz")
+    tacz.write(path, res_a)
+    box = ((0, 16), (0, 16), (0, 16))
+    with RegionServer(path, cache_bytes=64 << 20) as srv:
+        crop_a = res_a.levels[0].recon[tuple(slice(lo, hi)
+                                             for lo, hi in box)]
+        np.testing.assert_array_equal(srv.get_roi(box)[0].data, crop_a)
+        assert srv.maybe_reload() is False           # unchanged file
+        old_crc = srv.snapshot_crc
+
+        tacz.write(path, res_b)                      # atomic republish
+        assert srv.maybe_reload() is True
+        assert srv.snapshot_crc != old_crc
+        assert srv.cache.stats()["entries"] == 0     # cache dropped
+        assert not srv._retired                      # idle reader closed
+        crop_b = res_b.levels[0].recon[tuple(slice(lo, hi)
+                                             for lo, hi in box)]
+        np.testing.assert_array_equal(srv.get_roi(box)[0].data, crop_b)
+        # repeated republish cycles never accumulate readers/fds
+        for seed in (20, 21, 22):
+            ds_c = amr.synthetic_amr((32, 32, 32), densities=[0.5, 0.5],
+                                     refine_block=4, seed=seed)
+            tacz.write(path, hybrid.compress_amr(ds_c, eb=1e-3))
+            assert srv.maybe_reload() is True
+            srv.get_roi(box)
+        assert not srv._retired and not srv._inflight
+
+
+def test_auto_reload_serves_new_snapshot_without_restart(tmp_path):
+    ds_a = amr.synthetic_amr((16, 16, 16), densities=[1.0], refine_block=4,
+                             seed=3)
+    ds_b = amr.synthetic_amr((16, 16, 16), densities=[1.0], refine_block=4,
+                             seed=4)
+    res_a = hybrid.compress_amr(ds_a, eb=1e-2)
+    res_b = hybrid.compress_amr(ds_b, eb=1e-2)
+    path = os.path.join(str(tmp_path), "auto.tacz")
+    tacz.write(path, res_a)
+    box = ((0, 16), (0, 16), (0, 16))
+    with RegionServer(path, auto_reload=True) as srv:
+        np.testing.assert_array_equal(
+            srv.get_roi(box)[0].data, res_a.levels[0].recon)
+        tacz.write(path, res_b)
+        np.testing.assert_array_equal(          # picked up by the next call
+            srv.get_roi(box)[0].data, res_b.levels[0].recon)
+
+
+# --------------------------- hypothesis sweeps ------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("serving", max_examples=10, deadline=None)
+    settings.load_profile("serving")
+except ImportError:        # pragma: no cover - environment dependent
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(lo=st.tuples(st.integers(0, 60), st.integers(0, 60),
+                        st.integers(0, 60)),
+           ext=st.tuples(st.integers(1, 64), st.integers(1, 64),
+                         st.integers(1, 64)))
+    def test_property_random_boxes_cold_and_warm(snapshot, lo, ext):
+        path, _ = snapshot
+        box = tuple((int(l), int(l + e)) for l, e in zip(lo, ext))
+        with tacz.TACZReader(path) as rd, \
+                RegionServer(path, cache_bytes=32 << 20) as srv:
+            ref = rd.read_roi(box)
+            _assert_same_roi(srv.get_roi(box), ref)   # cold
+            _assert_same_roi(srv.get_roi(box), ref)   # warm

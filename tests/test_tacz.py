@@ -201,6 +201,110 @@ def test_roi_empty_and_out_of_range_box(tmp_path):
         assert roi.data.size == 0
 
 
+# ----------------------- format v2 + write memoization ----------------------
+
+
+def test_v2_payload_pass_shrinks_and_roundtrips(tmp_path):
+    """v2's lossless byte pass over the Huffman payload sections must be
+    recorded per level + per sub-block and decode bit-identically
+    (including ROI reads through the prefix-stop path)."""
+    ds = amr.load_preset("run1_z10")
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    raw = os.path.join(str(tmp_path), "raw.tacz")
+    packed = os.path.join(str(tmp_path), "packed.tacz")
+    tacz.write(raw, res, payload_codec="none")
+    tacz.write(packed, res, payload_codec="zlib")   # deterministic codec
+    rd = tacz.TACZReader(packed)
+    assert rd.version == fmt.TACZ_VERSION == 2
+    assert all(e.payload_compressor == fmt.COMPRESSOR_ZLIB
+               for e in rd.levels)
+    used = [sb.compressor for e in rd.levels for sb in e.subblocks]
+    assert fmt.COMPRESSOR_ZLIB in used              # some payloads shrank
+    for lr, rec in zip(res.levels, rd.read()):
+        np.testing.assert_array_equal(lr.recon, rec)
+    _assert_roi_matches(packed, res, ((5, 23), (11, 40), (2, 9)))
+    # the raw file records COMPRESSOR_NONE everywhere and decodes the same
+    rd_raw = tacz.TACZReader(raw)
+    assert all(sb.compressor == fmt.COMPRESSOR_NONE
+               for e in rd_raw.levels for sb in e.subblocks)
+    for a, b in zip(rd_raw.read(), rd.read()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_v1_file_still_readable(tmp_path):
+    """A v1-framed container (old index head, raw payloads) must parse and
+    decode bit-identically under the v2 reader."""
+    from repro.io.writer import build_container, pack_level
+
+    ds = amr.synthetic_amr((32, 32, 32), densities=[0.23, 0.77],
+                           refine_block=4, seed=5)
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    packed = [pack_level(lr, payload_codec="none") for lr in res.levels]
+    blob = build_container(packed, version=1)
+    with tacz.TACZReader(blob) as rd:
+        assert rd.version == 1
+        for lr, rec in zip(res.levels, rd.read()):
+            np.testing.assert_array_equal(lr.recon, rec)
+
+
+def test_brick_payload_codec_roundtrip():
+    """she.encode_brick_payloads ↔ she.decode_brick_payloads under one
+    shared codebook, degenerate streams included."""
+    from repro.core import huffman, she
+
+    rng = np.random.default_rng(0)
+    streams = [rng.integers(-40, 40, size=n).astype(np.int64)
+               for n in (1, 17, 256)] + [np.zeros(9, dtype=np.int64)]
+    cb = huffman.build_codebook(np.concatenate(streams))
+    payloads = she.encode_brick_payloads(cb, streams)
+    decoded = she.decode_brick_payloads(
+        cb, [(buf, nbits, s.size)
+             for (buf, nbits), s in zip(payloads, streams)])
+    for got, want in zip(decoded, streams):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_unknown_payload_codec_rejected(tmp_path):
+    with pytest.raises(ValueError, match="codec"):
+        tacz.TACZWriter(os.path.join(str(tmp_path), "x.tacz"),
+                        payload_codec="lz4")
+
+
+def test_pack_level_reuses_compress_time_entropy(tmp_path):
+    """GSP/global levels must not re-Huffman-encode at write time: the
+    compress-time entropy stage's codebook+payload are memoized on
+    ``extras['entropy']`` and reused by ``pack_level`` (ROADMAP item)."""
+    from repro.core import huffman
+    from repro.io import writer as tacz_writer
+
+    ds = amr.synthetic_amr((32, 32, 32), densities=[0.9], refine_block=4,
+                           seed=7)
+    lvl = ds.levels[0]
+    lr = hybrid.compress_level(lvl.data, lvl.mask, eb=0.01, unit=4,
+                               strategy="gsp")
+    r0 = lr.artifacts.results[0]
+    ent = r0.extras.get("entropy")
+    assert ent is not None and ent.get("codebook") is not None
+
+    # the memoized pack path never touches the encoder or codebook builder
+    def boom(*a, **kw):   # pragma: no cover - failure path
+        raise AssertionError("entropy stage re-ran on memoized pack path")
+
+    orig_enc, orig_build = huffman.encode, huffman.build_codebook
+    huffman.encode = huffman.build_codebook = boom
+    try:
+        blob_memo, e_memo = tacz_writer.pack_level(lr, payload_codec="none")
+    finally:
+        huffman.encode, huffman.build_codebook = orig_enc, orig_build
+
+    # ... and serializes byte-identically to the rebuilt (no-memo) path
+    r0.extras = {k: v for k, v in r0.extras.items() if k != "entropy"}
+    blob_rebuilt, e_rebuilt = tacz_writer.pack_level(lr,
+                                                     payload_codec="none")
+    assert blob_memo == blob_rebuilt
+    assert e_memo.subblocks[0].crc == e_rebuilt.subblocks[0].crc
+
+
 # --------------------------- corruption detection ---------------------------
 
 
