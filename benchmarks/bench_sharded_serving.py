@@ -1,0 +1,168 @@
+"""Sharded vs single-server region serving under a constrained cache
+(ISSUE 4).
+
+The claim being tracked: the point of sharding the read path is that
+**aggregate cache capacity scales with the shard count**.  A workload
+whose unique decoded working set exceeds one server's cache budget
+thrashes the single server's LRU (cyclic re-decode of the bit-serial
+Huffman payloads every pass), while the same budget *per shard* lets a
+2-shard fleet hold the whole working set warm — each shard owns about
+half the ``(level, sub_block)`` keys.
+
+Setup: one TAC+ snapshot; a batch of boxes tiling the domain (every
+sub-block is needed, so the working set is the full decoded size); every
+server — the single baseline and both shards — gets the **same** cache
+budget, sized between the largest shard's slice and the full working set
+(so the fleet fits and the single server cannot).  Both sides are
+measured over the PR 3 HTTP wire format: the baseline through one
+endpoint + ``RegionClient``, the fleet through two shard-filtered
+endpoints + ``ShardedRegionRouter``.
+
+Acceptance bar (enforced, like the other serving benches): 2-shard
+aggregate warm throughput must **exceed** the single-server baseline on
+the first dataset — if it stops winning, either the shard filter stopped
+confining caches or the router's scatter-gather overhead ate the win.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+
+import numpy as np
+
+from repro import io as tacz
+from repro.core import hybrid
+from repro.serving import (RegionClient, ShardedRegionRouter, ShardMap,
+                           serve)
+from repro.serving.regions import WHOLE_LEVEL, DecodePlanner
+
+from .common import dataset, eb_for, timed, write_csv
+
+PASSES = 3
+
+
+def _workload(shape) -> list[tuple]:
+    """Eight boxes tiling the domain (2x2x2 halves): every sub-block is
+    part of the working set, so repeats thrash an undersized LRU."""
+    h = [max(1, s // 2) for s in shape]
+    boxes = []
+    for ox in (0, h[0]):
+        for oy in (0, h[1]):
+            for oz in (0, h[2]):
+                boxes.append(((ox, ox + h[0]), (oy, oy + h[1]),
+                              (oz, oz + h[2])))
+    return boxes
+
+
+def _working_set(path, boxes) -> dict:
+    """Unique decoded bytes the batch needs, total and per shard-key."""
+    with tacz.TACZReader(path) as rd:
+        plans = DecodePlanner(rd).plan(
+            [(li, b) for b in boxes for li in range(rd.n_levels)])
+        per_key: dict[tuple, int] = {}
+        for p in plans:
+            for li, sbi in p.keys():
+                shape = (rd.levels[li].shape if sbi == WHOLE_LEVEL
+                         else rd.subblock_shape(li, sbi))
+                per_key[(li, sbi)] = int(np.prod(shape)) * 4
+    return per_key
+
+
+def _balanced_map(keys_bytes: dict, n_shards: int) -> ShardMap:
+    """Pick the seed (0..15) whose largest shard slice is smallest, so the
+    per-server budget can sit between one slice and the full set."""
+    best = None
+    for seed in range(16):
+        m = ShardMap([f"s{i}" for i in range(n_shards)], seed=seed)
+        slices: dict[str, int] = {}
+        for key, nbytes in keys_bytes.items():
+            slices[m.owner(key)] = slices.get(m.owner(key), 0) + nbytes
+        worst = max(slices.values()) if len(slices) == n_shards else 1 << 62
+        if best is None or worst < best[0]:
+            best = (worst, m)
+    return best[1]
+
+
+def run(quick: bool = False):
+    names = ["run1_z10"] if quick else ["run1_z10", "run2_t4"]
+    rows = []
+    headline = None
+    for name in names:
+        ds = dataset(name)
+        # tighter bound than the single-host bench: more payload bits →
+        # a heavier entropy walk, the cost the shard fleet's aggregate
+        # cache absorbs and the thrashing single server pays every pass
+        res = hybrid.compress_amr(ds, eb=eb_for(ds, 1e-4))
+        boxes = _workload(ds.finest_shape)
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, name + ".tacz")
+            tacz.write(path, res)
+            per_key = _working_set(path, boxes)
+            ws = sum(per_key.values())
+            m = _balanced_map(per_key, 2)
+            largest = max(sum(b for k, b in per_key.items()
+                              if m.owner(k) == sid) for sid in m.shards)
+            # just over the largest shard slice: each shard's slice fits,
+            # the single server holds barely half the working set
+            budget = max(4096, int(1.05 * largest))
+
+            servers = []
+
+            def endpoint(**kw):
+                httpd = serve(path, port=0, cache_bytes=budget, **kw)
+                threading.Thread(target=httpd.serve_forever,
+                                 daemon=True).start()
+                servers.append(httpd)
+                return f"http://127.0.0.1:{httpd.server_address[1]}"
+
+            def replay(fetch):
+                return fetch(boxes)
+
+            try:
+                single = RegionClient(endpoint())
+                replay(single.regions)                      # warm-up pass
+                _, t_single = timed(replay, single.regions, repeat=PASSES)
+                s_single = single.stats()
+
+                urls = {sid: endpoint(shard_map=m, shard_id=sid)
+                        for sid in m.shards}
+                with ShardedRegionRouter(path, m, urls) as router:
+                    replay(router.get_regions)              # warm-up pass
+                    _, t_shard = timed(replay, router.get_regions,
+                                       repeat=PASSES)
+                    fallbacks = router.counters["local_fallbacks"]
+                shard_stats = [s.region_server.cache.stats()
+                               for s in servers[1:]]
+            finally:
+                for httpd in servers:
+                    httpd.shutdown()
+                    httpd.server_close()
+                    httpd.region_server.close()
+
+            speedup = t_single / max(t_shard, 1e-12)
+            rows.append((
+                name, len(boxes), round(ws / 1e3, 1),
+                round(budget / 1e3, 1), round(t_single * 1e3, 2),
+                round(t_shard * 1e3, 2), round(speedup, 2),
+                len(per_key), s_single["hits"], s_single["misses"],
+                sum(s["hits"] for s in shard_stats),
+                sum(s["misses"] for s in shard_stats), fallbacks))
+            if name == names[0]:
+                headline = speedup
+    path = write_csv("sharded_serving",
+                     ["dataset", "n_boxes", "working_set_kb", "budget_kb",
+                      "single_warm_ms", "sharded_warm_ms", "agg_speedup",
+                      "unique_subblocks", "single_hits", "single_misses",
+                      "shard_hits", "shard_misses", "local_fallbacks"],
+                     rows)
+    if headline is not None and headline <= 1.0:
+        raise AssertionError(
+            f"sharded-serving acceptance regressed: 2-shard aggregate warm "
+            f"throughput only {headline:.2f}x the single-server baseline "
+            f"on a cache-constrained batch (need >1x)")
+    return {"csv": path, "sharded_over_single": round(headline or 0.0, 2)}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -4,19 +4,26 @@ TACZ turns the in-memory bit accounting of the compression pipeline into
 a real I/O system: a framed, versioned file with a per-level /
 per-sub-block index (origin, shape, branch, error bound, byte offset,
 CRC), one shared-Huffman codebook section per level, and byte-aligned
-sub-block payloads.
+sub-block payloads.  The byte-level specification lives in
+``docs/tacz_format.md`` (kept in sync with :mod:`repro.io.format` by a
+test); an independent reader can be written from it alone.
 
   * :func:`write` / :class:`TACZWriter` — one-shot or streaming writes
     (background encoder thread, atomic tmp + ``os.replace`` publish).
   * :func:`read` / :func:`read_roi` / :class:`TACZReader` — full or
     region-of-interest decode; ROI touches only the sub-blocks whose
-    cuboids intersect the query box.
+    cuboids intersect the query box.  The reader also exposes the
+    serving-layer plumbing: ``subblock_keys`` (the key universe shard
+    maps range over), ``level_signature`` (content identity for cache
+    carry-over across republishes), and ``read_level_box`` (single-level
+    crops in level cells).
   * :mod:`repro.io.tensor` — one-tensor TACZ blobs for lossy checkpoints.
   * format v2 adds an optional lossless byte pass (zstd/zlib) over the
     shared-Huffman payload sections; v1 files remain readable.
 
 Serving-side consumers (sub-block cache, batched decode planner, HTTP
-region endpoint) live in :mod:`repro.serving.regions`.
+region endpoint, consistent-hash sharding) live in :mod:`repro.serving`
+— see ``docs/serving.md``.
 
 Quick start::
 
@@ -29,8 +36,8 @@ Quick start::
     crops = tacz.read_roi("snap.tacz", ((0, 16), (0, 16), (0, 16)))
 """
 from .format import TACZ_MAGIC, TACZ_VERSION
-from .reader import ROILevel, TACZReader, read, read_roi
+from .reader import ROILevel, TACZReader, WHOLE_LEVEL, read, read_roi
 from .writer import TACZWriter, write
 
 __all__ = ["TACZ_MAGIC", "TACZ_VERSION", "ROILevel", "TACZReader",
-           "TACZWriter", "read", "read_roi", "write"]
+           "TACZWriter", "WHOLE_LEVEL", "read", "read_roi", "write"]

@@ -110,6 +110,7 @@ _SUBBLOCK = struct.Struct("<6I3BQIQQII")
 
 
 def pack_header(flags: int = 0, *, version: int = TACZ_VERSION) -> bytes:
+    """The 16-byte file header (magic, version, flags, reserved)."""
     return _HEADER.pack(TACZ_MAGIC, version, flags, 0)
 
 
@@ -126,6 +127,7 @@ def parse_header(buf: bytes) -> int:
 
 
 def pack_footer(index_off: int, index_len: int, index_crc: int) -> bytes:
+    """The 20-byte trailer locating (and checksumming) the index."""
     return _FOOTER.pack(index_off, index_len, index_crc & 0xFFFFFFFF,
                         TACZ_MAGIC)
 
@@ -188,6 +190,7 @@ class LevelEntry:
 
     @property
     def rank(self) -> int:
+        """Number of dimensions of the level."""
         return len(self.shape)
 
     def shift_offsets(self, base: int) -> None:
@@ -202,6 +205,13 @@ class LevelEntry:
 
 def pack_index(levels: list[LevelEntry], *,
                version: int = TACZ_VERSION) -> bytes:
+    """Serialize the index: u32 level count + per-level records.
+
+    :param levels: entries with *absolute* section offsets.
+    :param version: index-head layout to emit (v1 drops the
+        ``payload_compressor`` byte).
+    :raises ValueError: on an unsupported rank or shape-rank mismatch.
+    """
     out = bytearray(struct.pack("<I", len(levels)))
     for e in levels:
         rank = e.rank
@@ -235,6 +245,12 @@ def pack_index(levels: list[LevelEntry], *,
 
 def parse_index(buf: bytes, *, version: int = TACZ_VERSION
                 ) -> list[LevelEntry]:
+    """Inverse of :func:`pack_index`.
+
+    :param buf: the index bytes (CRC already verified by the caller).
+    :param version: the layout the file header advertised.
+    :raises ValueError: on truncation or an implausible rank.
+    """
     try:
         (n_levels,) = struct.unpack_from("<I", buf, 0)
         pos = 4
@@ -284,4 +300,5 @@ def parse_index(buf: bytes, *, version: int = TACZ_VERSION
 
 
 def index_crc(index_bytes: bytes) -> int:
+    """CRC32 of the index bytes — the snapshot's content identity."""
     return zlib.crc32(index_bytes) & 0xFFFFFFFF

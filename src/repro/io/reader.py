@@ -12,6 +12,7 @@ bit-identically.
 from __future__ import annotations
 
 import io as _stdio
+import os
 import threading
 import zlib
 from dataclasses import dataclass
@@ -25,9 +26,17 @@ from repro.core.gsp import gsp_unpad
 
 from . import format as fmt
 
-__all__ = ["ROILevel", "TACZReader", "read", "read_roi"]
+__all__ = ["ROILevel", "TACZReader", "WHOLE_LEVEL", "probe_index_crc",
+           "read", "read_roi"]
 
 Box = tuple[tuple[int, int], tuple[int, int], tuple[int, int]]
+
+#: Sub-block index standing in for the single payload of a gsp/global
+#: level in a ``(level, sub_block)`` key.  SHE levels use real indices
+#: (``0..n_subblocks-1``); single-payload levels are addressed as one
+#: unit because their reconstruction is not block-local.  The serving
+#: layer (cache keys, shard placement) uses the same convention.
+WHOLE_LEVEL = -1
 
 
 @dataclass
@@ -41,6 +50,7 @@ class ROILevel:
 
     @property
     def shape(self) -> tuple[int, ...]:
+        """Extent of the crop per dim (``hi - lo`` of each box range)."""
         return tuple(hi - lo for lo, hi in self.box)
 
 
@@ -59,7 +69,19 @@ def _decompress(buf: bytes, compressor: int) -> bytes:
 
 
 class TACZReader:
-    """Random-access reader over a TACZ container (file path or bytes)."""
+    """Random-access reader over a TACZ container.
+
+    The constructor validates framing eagerly: header magic/version,
+    footer, index bounds, and the index CRC — a truncated or corrupt
+    file fails at open time, never as silent garbage mid-decode.  One
+    reader may serve many threads (the seek+read pair is lock-guarded).
+
+    :param src: file path, raw ``bytes``/``bytearray``, or a seekable
+        binary file object (not closed on :meth:`close`).
+    :raises ValueError: if the bytes are not a valid TACZ container
+        (bad magic, unsupported version, truncation, index CRC mismatch).
+    :raises OSError: if a path cannot be opened.
+    """
 
     _SHE_STRATEGIES = (fmt.STRATEGY_OPST, fmt.STRATEGY_AKDTREE,
                        fmt.STRATEGY_NAST)
@@ -104,6 +126,7 @@ class TACZReader:
     # ------------------------------ plumbing -------------------------------
 
     def close(self) -> None:
+        """Close the underlying handle (no-op for caller-owned files)."""
         if self._own:
             self._f.close()
 
@@ -115,6 +138,7 @@ class TACZReader:
 
     @property
     def n_levels(self) -> int:
+        """Number of levels (or tensors) in the container."""
         return len(self.levels)
 
     def _read_at(self, off: int, length: int) -> bytes:
@@ -267,7 +291,14 @@ class TACZReader:
                                block=e.sz_block, betas=betas)
 
     def read_level(self, li: int) -> np.ndarray:
-        """Full decode of one level → recon at its original shape."""
+        """Full decode of one level.
+
+        :param li: level index (file order).
+        :returns: float32 reconstruction at the level's original shape,
+            bit-identical to the in-memory ``compress_amr`` recon.
+        :raises IndexError: if ``li`` is out of range.
+        :raises IOError: if a section or payload fails its CRC check.
+        """
         e = self.levels[li]
         mask = self._mask(li)
         if e.strategy in self._SHE_STRATEGIES:
@@ -295,7 +326,11 @@ class TACZReader:
         raise ValueError(f"unknown strategy {e.strategy}")
 
     def read(self) -> list[np.ndarray]:
-        """Full decode of every level, in file order."""
+        """Full decode of every level.
+
+        :returns: one float32 reconstruction per level, in file order.
+        :raises IOError: if a section or payload fails its CRC check.
+        """
         return [self.read_level(i) for i in range(self.n_levels)]
 
     # ----------------------- ROI machinery (shared) ------------------------
@@ -305,8 +340,15 @@ class TACZReader:
     # entropy decode here, the byte-budgeted sub-block cache there).
 
     def level_box(self, li: int, box: Box) -> Box:
-        """Map a finest-grid box into level ``li`` cells (floor/ceil through
-        the coarsening ratio, clipped to the level extent)."""
+        """Map a finest-grid box into level ``li`` cells.
+
+        :param li: level index.
+        :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :returns: the box in level cells — lows floored, highs ceiled
+            through the coarsening ratio, both clipped to the level
+            extent (may be empty, ``hi <= lo``).
+        :raises ValueError: if the level is not 3-D.
+        """
         e = self.levels[li]
         if e.rank != 3:
             raise ValueError("ROI reads need 3D levels")
@@ -317,8 +359,13 @@ class TACZReader:
 
     def intersecting_subblocks(self, li: int, lbox: Box,
                                ) -> list[tuple[int, Box]]:
-        """(sub-block index, intersection box in level cells) for every
-        sub-block of level ``li`` whose cuboid overlaps ``lbox``."""
+        """Sub-blocks of level ``li`` whose cuboids overlap ``lbox``.
+
+        :param li: level index.
+        :param lbox: three half-open ranges in *level* cells.
+        :returns: ``(sub_block_index, intersection_box)`` pairs in index
+            order; the intersection is again in level cells.
+        """
         e = self.levels[li]
         out: list[tuple[int, Box]] = []
         for i, sb in enumerate(e.subblocks):
@@ -328,6 +375,85 @@ class TACZReader:
             if all(hi > lo for lo, hi in isect):
                 out.append((i, isect))
         return out
+
+    def subblock_keys(self, levels: list[int] | None = None,
+                      ) -> list[tuple[int, int]]:
+        """Enumerate every ``(level, sub_block)`` key in the container.
+
+        SHE levels contribute one key per partition sub-block; gsp/global
+        levels contribute a single ``(level, WHOLE_LEVEL)`` key (their one
+        payload decodes as a unit).  This is the key universe that cache
+        entries and consistent-hash shard placement range over — a shard
+        filter intersects it with a shard map to learn which payloads it
+        owns.
+
+        :param levels: restrict enumeration to these level indices
+            (default: every level, in file order).
+        :returns: list of ``(level_index, sub_block_index)`` tuples, file
+            order; ``sub_block_index`` is :data:`WHOLE_LEVEL` for
+            single-payload levels.
+        :raises IndexError: if ``levels`` names an out-of-range level.
+        """
+        lis = range(self.n_levels) if levels is None else levels
+        out: list[tuple[int, int]] = []
+        for li in lis:
+            e = self.levels[li]
+            if e.strategy in self._SHE_STRATEGIES:
+                out.extend((li, sbi) for sbi in range(len(e.subblocks)))
+            else:
+                out.append((li, WHOLE_LEVEL))
+        return out
+
+    def level_signature(self, li: int) -> tuple:
+        """Content signature of one level, independent of byte placement.
+
+        Two snapshots whose signatures match for a level reconstruct that
+        level bit-identically: the signature covers the decode-relevant
+        index fields (shape, strategy, error bound, per-sub-block
+        geometry/branch/codec) plus the CRC32 of every stored section —
+        codebook, mask, and each payload — but **not** file offsets, so a
+        level whose bytes merely moved (an earlier level changed size on
+        republish) still matches.  The serving layer uses this to carry
+        decoded-brick cache entries across snapshot hot-swaps.
+
+        :param li: level index.
+        :returns: an opaque hashable tuple; compare with ``==`` only.
+        :raises IndexError: if ``li`` is out of range.
+        """
+        e = self.levels[li]
+        return (e.shape, e.grid_shape, e.strategy, e.algorithm, e.unit,
+                e.sz_block, e.ratio, e.eb, e.n_values,
+                e.codebook_crc & 0xFFFFFFFF, e.mask_len,
+                e.mask_crc & 0xFFFFFFFF, e.mask_compressor,
+                tuple((sb.origin, sb.size, sb.branch, sb.codec,
+                       sb.payload_len, sb.nbits, sb.n_codes, sb.betas_len,
+                       sb.crc & 0xFFFFFFFF) for sb in e.subblocks))
+
+    def read_level_box(self, li: int, lbox: Box) -> np.ndarray:
+        """Decode one level's crop of a box given in *level* cells.
+
+        Unlike :meth:`read_roi` (whose box is in finest-grid cells and is
+        mapped through every level's ratio), this takes a single level and
+        a box already expressed in that level's own cells — the shape the
+        sharded router's local-fallback path works in.  The box is clipped
+        to the level extent; only intersecting sub-blocks are decoded,
+        with the same prefix-stop entropy decode as ``read_roi``.
+
+        :param li: level index.
+        :param lbox: three half-open ``(lo, hi)`` ranges in level cells.
+        :returns: float32 crop of shape ``(hi-lo, ...)`` after clipping —
+            bit-identical to slicing the full level reconstruction.
+        :raises IndexError: if ``li`` is out of range.
+        :raises ValueError: if ``lbox`` is not three ranges.
+        """
+        if len(lbox) != 3:
+            raise ValueError("box must be ((x0,x1),(y0,y1),(z0,z1))")
+        e = self.levels[li]
+        clipped = tuple((min(max(int(lo), 0), s), min(max(int(hi), 0), s))
+                        for (lo, hi), s in zip(lbox, e.shape))
+        return self.assemble_level_roi(li, clipped,
+                                       self._fetch_brick_prefix,
+                                       self.read_level)
 
     def assemble_level_roi(self, li: int, lbox: Box, fetch_brick,
                            fetch_level, tasks=None) -> np.ndarray:
@@ -402,8 +528,11 @@ class TACZReader:
 
     def verify(self) -> bool:
         """Check every section and payload CRC (the index CRC was checked
-        at open).  Raises ``IOError`` at the first corrupt byte range;
-        True otherwise.
+        at open).
+
+        :returns: True when every stored byte range checks out.
+        :raises IOError: at the first corrupt byte range, naming the
+            level and section.
         """
         for li, e in enumerate(self.levels):
             if e.codebook_len:
@@ -420,13 +549,48 @@ class TACZReader:
         return True
 
 
+def probe_index_crc(path) -> int | None:
+    """Read a file's index CRC from its 20-byte footer — nothing else.
+
+    The cheap snapshot-identity probe the serving layer's hot-swap checks
+    run per request: the CRC uniquely identifies a published snapshot's
+    content, so comparing it against an open reader's ``index_crc`` tells
+    whether the file was atomically republished.
+
+    :param path: file path.
+    :returns: the CRC as an unsigned 32-bit int, or None when the file is
+        missing, truncated, or not a TACZ container (a half-written state
+        is never adopted — the writer publishes atomically).
+    """
+    try:
+        with open(path, "rb") as f:
+            f.seek(-fmt.FOOTER_SIZE, os.SEEK_END)
+            _, _, crc = fmt.parse_footer(f.read(fmt.FOOTER_SIZE))
+    except (OSError, ValueError):
+        return None
+    return crc & 0xFFFFFFFF
+
+
 def read(path) -> list[np.ndarray]:
-    """Decode every level of ``path`` (file path or bytes)."""
+    """Decode every level of ``path``.
+
+    :param path: file path or container bytes.
+    :returns: one float32 reconstruction per level, file order.
+    :raises ValueError: if the bytes are not a valid TACZ container.
+    :raises IOError: if a section or payload fails its CRC check.
+    """
     with TACZReader(path) as rd:
         return rd.read()
 
 
 def read_roi(path, box: Box) -> list[ROILevel]:
-    """ROI decode of ``path`` — see :meth:`TACZReader.read_roi`."""
+    """ROI decode of ``path`` — see :meth:`TACZReader.read_roi`.
+
+    :param path: file path or container bytes.
+    :param box: three half-open ``(lo, hi)`` ranges in finest-grid cells.
+    :returns: one :class:`ROILevel` crop per level, finest first.
+    :raises ValueError: if the container or box is malformed.
+    :raises IOError: if a touched payload fails its CRC check.
+    """
     with TACZReader(path) as rd:
         return rd.read_roi(box)

@@ -31,8 +31,11 @@ __all__ = ["encode_tensor", "decode_tensor"]
 def encode_tensor(a: np.ndarray, eb: float) -> bytes:
     """Error-bounded lossy encoding of one tensor → TACZ container bytes.
 
-    ``eb`` is the absolute error bound; the reconstruction satisfies
-    ``|a - decode_tensor(blob)| ≤ eb`` (+ float32 rounding).
+    :param a: array of any numeric dtype, rank 1..8.
+    :param eb: absolute error bound; the reconstruction satisfies
+        ``|a - decode_tensor(blob)| ≤ eb`` (+ float32 rounding).
+    :returns: a self-describing one-level TACZ container as bytes.
+    :raises ValueError: if the tensor rank is outside 1..8.
     """
     a = np.asarray(a)
     if not 1 <= a.ndim <= fmt.MAX_RANK:
@@ -64,7 +67,13 @@ def encode_tensor(a: np.ndarray, eb: float) -> bytes:
 
 
 def decode_tensor(blob: bytes) -> np.ndarray:
-    """Inverse of :func:`encode_tensor` → float32 reconstruction."""
+    """Inverse of :func:`encode_tensor`.
+
+    :param blob: container bytes produced by :func:`encode_tensor`.
+    :returns: the float32 reconstruction at the original shape.
+    :raises ValueError: if the blob is not a one-level TACZ container.
+    :raises IOError: if the payload fails its CRC check.
+    """
     with TACZReader(blob) as rd:
         if rd.n_levels != 1:
             raise ValueError("tensor blob must hold exactly one level")

@@ -285,6 +285,27 @@ class TACZWriter:
     Use as a context manager; a writer dropped without ``close()`` /
     ``abort()`` is still reaped at GC time (encoder thread exits, fd
     closed, tmp unlinked) but the file is never published.
+
+    :param path: destination ``.tacz`` path.
+    :param eb: default absolute error bound for :meth:`add_level` (may
+        also be passed per level).
+    :param unit: default unit-block edge in cells; per-level units follow
+        the ``compress_amr`` domain-tracking rule (see :meth:`add_level`).
+    :param algorithm: prediction algorithm (``"lor_reg"``/``"lorenzo"``/
+        ``"interp"``).
+    :param she: encode SHE (per-sub-block payload) levels — required for
+        random access; ``False`` only makes sense with ``strategy="gsp"``.
+    :param strategy: partitioning strategy override (default: per-level
+        auto selection).
+    :param sz_block: Lorenzo/regression block edge in cells.
+    :param batched: run the batched SHE pipeline (bit-identical, faster).
+    :param lorenzo_engine: ``"auto"``/``"numpy"``/``"pallas"`` for the
+        Lorenzo branch.
+    :param payload_codec: v2 lossless byte pass — ``"auto"`` (zstd, zlib
+        fallback), ``"zstd"``, ``"zlib"``, or ``"none"`` (v1 payloads).
+    :param queue_depth: bounded encode queue length (≥1).
+    :raises ValueError: on an unknown ``payload_codec`` name.
+    :raises OSError: if the tmp file cannot be created.
     """
 
     def __init__(self, path: str, *, eb: float | None = None, unit: int = 8,

@@ -1,14 +1,40 @@
-"""Serving: prefill/decode steps, batched engine, compressed KV cache,
-and the TACZ region-serving subsystem.
+"""``repro.serving`` — serving stacks over the TAC+ reproduction.
 
-The LM-serving pieces (``repro.serving.engine``, ``repro.serving.kv_cache``)
-import JAX and are loaded explicitly by their callers.  The region-serving
-subsystem (``repro.serving.regions`` + ``http_api`` + ``client``) is
-numpy/stdlib-only and re-exported here.
+Two independent subsystems live here:
+
+**TACZ region serving** (numpy/stdlib-only, re-exported below) turns a
+``.tacz`` snapshot into a queryable region service and scales it out:
+
+  * :class:`~repro.serving.regions.SubBlockCache` — thread-safe,
+    byte-budgeted LRU of *decoded* bricks keyed ``(level, sub_block)``.
+  * :class:`~repro.serving.regions.DecodePlanner` — a batch of ROI boxes
+    → the minimal uncached sub-block set, reconstructed in vectorized
+    ``(level, shape, branch)`` groups.
+  * :class:`~repro.serving.regions.RegionServer` — cached, bit-identical
+    mirror of ``TACZReader.read_roi`` with footer-CRC snapshot hot-swap
+    (warm entries carry over for levels whose payload CRCs are
+    unchanged) and an optional shard filter.
+  * :mod:`~repro.serving.http_api` / :class:`~repro.serving.client.
+    RegionClient` — stdlib HTTP endpoint and client (JSON metadata, raw
+    ``<f4`` region payloads).
+  * :class:`~repro.serving.sharded.ShardMap` /
+    :class:`~repro.serving.sharded.ShardedRegionRouter` — consistent-hash
+    placement of sub-blocks over N shard endpoints and the scatter-gather
+    router that reassembles full crops (replica retry + local fallback).
+
+See ``docs/serving.md`` for the architecture guide and ``docs/
+tacz_format.md`` for the container byte layout.
+
+**LM serving** (``repro.serving.engine``, ``repro.serving.kv_cache``)
+imports JAX and is loaded explicitly by its callers — it is deliberately
+not re-exported here so the region-serving path stays importable on
+hosts without an accelerator stack.
 """
 from .client import RegionClient
 from .http_api import RegionHTTPServer, serve
 from .regions import DecodePlanner, RegionServer, SubBlockCache
+from .sharded import ShardedRegionRouter, ShardMap
 
 __all__ = ["DecodePlanner", "RegionClient", "RegionHTTPServer",
-           "RegionServer", "SubBlockCache", "serve"]
+           "RegionServer", "ShardMap", "ShardedRegionRouter",
+           "SubBlockCache", "serve"]

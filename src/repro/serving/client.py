@@ -7,8 +7,13 @@ the same downstream code as a local ``read_roi``.
 """
 from __future__ import annotations
 
+import http.client
+import io
 import json
 import struct
+import threading
+import urllib.error
+import urllib.parse
 import urllib.request
 
 import numpy as np
@@ -21,27 +26,102 @@ __all__ = ["RegionClient"]
 
 
 class RegionClient:
-    """Client for one region endpoint (``http://host:port``)."""
+    """Client for one region endpoint (``http://host:port``).
+
+    :param base_url: endpoint root, e.g. ``"http://127.0.0.1:8765"``
+        (trailing slash tolerated).
+    :param timeout: per-request socket timeout in seconds.
+    """
 
     def __init__(self, base_url: str, *, timeout: float = 30.0):
         self.base_url = base_url.rstrip("/")
         self.timeout = float(timeout)
+        split = urllib.parse.urlsplit(self.base_url)
+        if split.scheme not in ("http", "https") or not split.hostname:
+            raise ValueError(
+                f"base_url must be http(s)://host[:port][/prefix], "
+                f"got {base_url!r}")
+        self._conn_cls = (http.client.HTTPSConnection
+                          if split.scheme == "https"
+                          else http.client.HTTPConnection)
+        self._host = split.hostname
+        self._port = split.port   # None → the scheme's default port
+        self._prefix = split.path.rstrip("/")   # e.g. a reverse-proxy root
+        self._local = threading.local()   # one keep-alive conn per thread
 
     def _get(self, path: str):
         return urllib.request.urlopen(self.base_url + path,
                                       timeout=self.timeout)
 
+    def _post(self, path: str, body: bytes) -> tuple[dict, bytes]:
+        """``POST`` over a per-thread persistent HTTP/1.1 connection.
+
+        The batched-regions route is the hot path of the sharded router
+        (several POSTs per batch per shard); reusing the connection avoids
+        a TCP handshake per request.  A dropped/stale connection is
+        retried once on a fresh one; HTTP errors surface as
+        ``urllib.error.HTTPError`` (same contract as the GET routes).
+        """
+        for attempt in (0, 1):
+            conn = getattr(self._local, "conn", None)
+            try:
+                if conn is None:
+                    conn = self._conn_cls(self._host, self._port,
+                                          timeout=self.timeout)
+                    self._local.conn = conn
+                conn.request("POST", self._prefix + path, body=body,
+                             headers={"Content-Type": "application/json"})
+                resp = conn.getresponse()
+                data = resp.read()
+            except (http.client.HTTPException, OSError) as exc:
+                self._local.conn = None
+                if conn is not None:
+                    conn.close()
+                if attempt:
+                    raise urllib.error.URLError(exc) from exc
+                continue
+            if resp.status >= 400:
+                self._local.conn = None
+                conn.close()
+                raise urllib.error.HTTPError(
+                    self.base_url + path, resp.status, resp.reason,
+                    resp.headers, io.BytesIO(data))
+            if resp.will_close:
+                self._local.conn = None
+                conn.close()
+            return dict(resp.headers), data
+        raise AssertionError("unreachable")  # pragma: no cover
+
     def meta(self) -> dict:
-        """Snapshot + level metadata + cache stats."""
+        """Snapshot + level metadata + cache stats (``GET /v1/meta``).
+
+        :returns: dict with ``snapshot_crc``, ``version``, per-level
+            ``levels`` rows, ``cache`` counters, and ``shard`` info when
+            the endpoint is shard-filtered.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
         with self._get("/v1/meta") as resp:
             return json.loads(resp.read())
 
     def stats(self) -> dict:
+        """Cache/serving counters only (``GET /v1/stats``).
+
+        :returns: the server's :meth:`RegionServer.stats` dict.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
         with self._get("/v1/stats") as resp:
             return json.loads(resp.read())
 
     def region(self, level: int, box) -> ROILevel:
-        """One level's crop of ``box`` (finest-grid cells)."""
+        """One level's crop of ``box`` (finest-grid cells).
+
+        :param level: level index on the serving snapshot.
+        :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :returns: the crop, reassembled from the raw ``<f4`` body and the
+            ``X-TACZ-*`` headers.
+        :raises urllib.error.HTTPError: on a 4xx/5xx response.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
         path = f"/v1/region?level={int(level)}&box={format_box(box)}"
         with self._get(path) as resp:
             raw = resp.read()
@@ -55,16 +135,36 @@ class RegionClient:
                             box=lbox, data=data)
 
     def regions(self, boxes, levels=None) -> list[list[ROILevel]]:
-        """Batched fetch — one list of per-level crops per box."""
+        """Batched fetch — one list of per-level crops per box.
+
+        :param boxes: half-open boxes in finest-grid cells.
+        :param levels: optional level-index filter applied to every box.
+        :returns: ``out[b][l]`` = crop of ``boxes[b]`` at the l-th
+            requested level.
+        :raises urllib.error.HTTPError: on a 4xx/5xx response.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
+        return self.regions_meta(boxes, levels)[1]
+
+    def regions_meta(self, boxes, levels=None,
+                     ) -> tuple[int, list[list[ROILevel]]]:
+        """Batched fetch that also returns the serving snapshot identity.
+
+        Same wire call as :meth:`regions`, but the footer index CRC the
+        endpoint reported alongside the payload is surfaced — the sharded
+        router compares it with its own snapshot to detect a shard that
+        has not yet picked up a republish.
+
+        :returns: ``(snapshot_crc, results)`` with ``results`` as in
+            :meth:`regions`.
+        :raises urllib.error.HTTPError: on a 4xx/5xx response.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
         req = {"boxes": [[list(r) for r in box] for box in boxes]}
         if levels is not None:
             req["levels"] = [int(li) for li in levels]
         body = json.dumps(req).encode()
-        request = urllib.request.Request(
-            self.base_url + "/v1/regions", data=body,
-            headers={"Content-Type": "application/json"}, method="POST")
-        with urllib.request.urlopen(request, timeout=self.timeout) as resp:
-            blob = resp.read()
+        _, blob = self._post("/v1/regions", body)
         (hdr_len,) = struct.unpack_from("<I", blob, 0)
         header = json.loads(blob[4:4 + hdr_len])
         payload = blob[4 + hdr_len:]
@@ -81,4 +181,4 @@ class RegionClient:
                     level=r["level"], ratio=r["ratio"],
                     box=tuple(tuple(v) for v in r["box"]), data=data))
             out.append(per_box)
-        return out
+        return int(header["snapshot_crc"]), out

@@ -24,6 +24,17 @@ __all__ = ["make_prefill_step", "make_serve_step", "ServingEngine"]
 
 def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,
                       *, q_chunk=512, kv_chunk=1024, unroll_scans=False):
+    """Build the jit-able prefill step.
+
+    :param cfg: model architecture config.
+    :param run: run config; ``run.kv_quant`` quantizes the produced cache.
+    :param mesh: optional device mesh (with ``rules``) for sharded runs.
+    :param q_chunk: query-chunk size of the chunked-attention prefill.
+    :param kv_chunk: key/value-chunk size.
+    :param unroll_scans: unroll recurrent scans (trades compile time for
+        step latency).
+    :returns: ``prefill(params, batch) -> (last-token logits, state)``.
+    """
     def prefill(params, batch):
         ctx = mesh_context(mesh, rules) if mesh is not None else _null()
         with ctx:

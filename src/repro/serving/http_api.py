@@ -56,6 +56,8 @@ def parse_box(s: str):
 
 
 class RegionRequestHandler(BaseHTTPRequestHandler):
+    """Routes ``/v1/meta|stats|region|regions`` onto one RegionServer."""
+
     server_version = "taczserve/1"
     protocol_version = "HTTP/1.1"
 
@@ -66,6 +68,7 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
 
     @property
     def rs(self) -> RegionServer:
+        """The :class:`RegionServer` this endpoint serves."""
         return self.server.region_server
 
     # ------------------------------ plumbing -------------------------------
@@ -92,13 +95,19 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                 "algorithm": fmt.ALGO_NAMES.get(e.algorithm, "?"),
                 "n_subblocks": len(e.subblocks),
             })
-        return {"snapshot_crc": self.rs.snapshot_crc,
+        meta = {"snapshot_crc": self.rs.snapshot_crc,
                 "version": rd.version, "levels": levels,
                 "cache": self.rs.cache.stats()}
+        if self.rs.shard_map is not None:
+            meta["shard"] = {"shard_id": self.rs.shard_id,
+                             "n_shards": len(self.rs.shard_map),
+                             "shard_map": self.rs.shard_map.to_dict()}
+        return meta
 
     # ------------------------------- routes --------------------------------
 
     def do_GET(self) -> None:
+        """Dispatch ``/v1/meta``, ``/v1/stats``, ``/v1/region``."""
         url = urlparse(self.path)
         if url.path == "/v1/meta":
             # data routes hot-swap inside get_regions (auto_reload);
@@ -123,7 +132,9 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         except (KeyError, IndexError, ValueError) as exc:
             return self._fail(400, f"bad region query: {exc}")
         try:
-            roi = self.rs.get_region(level, box)
+            crc, results = self.rs.get_regions_with_crc([box],
+                                                        levels=[level])
+            roi = results[0][0]
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad region query: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
@@ -138,11 +149,12 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         self.send_header("X-TACZ-Shape",
                          ",".join(str(s) for s in roi.shape))
         self.send_header("X-TACZ-Dtype", "<f4")
-        self.send_header("X-TACZ-Snapshot-CRC", str(self.rs.snapshot_crc))
+        self.send_header("X-TACZ-Snapshot-CRC", str(crc))
         self.end_headers()
         self.wfile.write(body)
 
     def do_POST(self) -> None:
+        """Dispatch ``/v1/regions`` (batched fetch)."""
         url = urlparse(self.path)
         if url.path != "/v1/regions":
             return self._fail(404, f"unknown path {url.path!r}")
@@ -164,13 +176,17 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                 json.JSONDecodeError) as exc:
             return self._fail(400, f"bad regions request: {exc}")
         try:
-            results = self.rs.get_regions(boxes, levels=levels)
+            # the CRC must name the snapshot that *served this batch* —
+            # a hot-swap racing the decode must not stamp the new
+            # generation on old data (the sharded router trusts this)
+            crc, results = self.rs.get_regions_with_crc(boxes,
+                                                        levels=levels)
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad regions request: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
             return self._fail(500, f"region decode failed: {exc}")
         payload = bytearray()
-        header: dict = {"snapshot_crc": self.rs.snapshot_crc, "results": []}
+        header: dict = {"snapshot_crc": crc, "results": []}
         for per_box in results:
             rows = []
             for roi in per_box:
@@ -204,14 +220,29 @@ class RegionHTTPServer(ThreadingHTTPServer):
 
 def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
           cache_bytes: int = 256 << 20, auto_reload: bool = True,
+          shard_map=None, shard_id: str | None = None,
           verbose: bool = False) -> RegionHTTPServer:
     """Build a region endpoint from a ``.tacz`` path or a RegionServer.
 
-    Returns the (not yet running) HTTP server; call ``serve_forever()``
-    (typically on a thread) and ``shutdown()`` to stop.  ``port=0`` binds
-    an ephemeral port — read it back from ``server_address``.
+    :param src: a ``.tacz`` path (a :class:`RegionServer` is built for
+        it) or an already-configured :class:`RegionServer`.
+    :param host: bind address.
+    :param port: bind port; ``0`` binds an ephemeral port — read it back
+        from ``server_address``.
+    :param cache_bytes: sub-block cache budget (path form only).
+    :param auto_reload: run the footer-CRC hot-swap check per request
+        (path form only).
+    :param shard_map: optional :class:`repro.serving.sharded.ShardMap` —
+        with ``shard_id``, the endpoint serves (and caches) only the
+        sub-blocks that shard owns (path form only).
+    :param shard_id: this endpoint's shard in ``shard_map``.
+    :returns: the (not yet running) HTTP server; call ``serve_forever()``
+        (typically on a thread) and ``shutdown()`` to stop.
+    :raises ValueError: if only one of ``shard_map``/``shard_id`` is
+        given, or the file fails TACZ validation.
     """
     if not isinstance(src, RegionServer):
         src = RegionServer(src, cache_bytes=cache_bytes,
-                           auto_reload=auto_reload)
+                           auto_reload=auto_reload, shard_map=shard_map,
+                           shard_id=shard_id)
     return RegionHTTPServer((host, port), src, verbose=verbose)

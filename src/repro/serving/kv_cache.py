@@ -15,7 +15,13 @@ __all__ = ["quantize_kv", "dequantize_kv", "quantize_prefill_cache"]
 
 
 def quantize_kv(x):
-    """x: (..., S, H, hd) → (int8 codes, fp32 scales (..., S, H))."""
+    """Quantize one K or V tensor to int8 with per-(token, head) scales.
+
+    :param x: array shaped ``(..., S, H, hd)``, any float dtype.
+    :returns: ``(codes, scales)`` — int8 codes of ``x``'s shape and
+        float32 scales shaped ``(..., S, H)``; all-zero vectors get
+        scale 1 so dequantization is exact for them.
+    """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.rint(x.astype(jnp.float32) / scale[..., None]),
@@ -24,6 +30,14 @@ def quantize_kv(x):
 
 
 def dequantize_kv(q, scale, dtype=jnp.bfloat16):
+    """Inverse of :func:`quantize_kv`.
+
+    :param q: int8 codes ``(..., S, H, hd)``.
+    :param scale: float32 scales ``(..., S, H)``.
+    :param dtype: output dtype (bf16 by default — the attention compute
+        dtype).
+    :returns: the dequantized tensor at ``q``'s shape.
+    """
     return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 

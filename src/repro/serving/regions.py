@@ -29,7 +29,6 @@ endpoint lives in ``repro.serving.http_api``; the matching client in
 """
 from __future__ import annotations
 
-import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -38,17 +37,17 @@ import numpy as np
 
 from repro.core import sz
 from repro.io import format as fmt
-from repro.io.reader import Box, ROILevel, TACZReader
+from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
+                             probe_index_crc)
 
 __all__ = ["CacheKey", "SubBlockCache", "DecodePlanner", "PlannedLevel",
            "RegionServer", "WHOLE_LEVEL"]
 
-# planner key: (level index, sub-block index); WHOLE_LEVEL marks the full
-# reconstruction of a gsp/global level (their payload is not block-local).
-# In the cache itself keys carry a leading snapshot-CRC generation tag —
-# see DecodePlanner.fetch.
+# planner key: (level index, sub-block index); WHOLE_LEVEL (re-exported
+# from repro.io.reader) marks the full reconstruction of a gsp/global
+# level (their payload is not block-local).  In the cache itself keys
+# carry a leading snapshot-CRC generation tag — see DecodePlanner.fetch.
 CacheKey = tuple[int, int]
-WHOLE_LEVEL = -1
 
 
 class SubBlockCache:
@@ -74,6 +73,11 @@ class SubBlockCache:
         self.evictions = 0
 
     def get(self, key: tuple) -> np.ndarray | None:
+        """Look one brick up, counting a hit (entry becomes MRU) or miss.
+
+        :param key: hashable tuple, e.g. ``(gen, level, sub_block)``.
+        :returns: the cached read-only array, or None on a miss.
+        """
         with self._lock:
             arr = self._od.get(key)
             if arr is None:
@@ -84,6 +88,14 @@ class SubBlockCache:
             return arr
 
     def put(self, key: tuple, brick: np.ndarray) -> None:
+        """Insert (or replace) one decoded brick, evicting LRU entries
+        until the byte budget holds.
+
+        :param key: hashable tuple, e.g. ``(gen, level, sub_block)``.
+        :param brick: decoded array; stored C-contiguous and marked
+            read-only (it is shared across requests).  A brick larger
+            than the whole budget is silently not inserted.
+        """
         brick = np.ascontiguousarray(brick)
         brick.setflags(write=False)
         with self._lock:
@@ -100,9 +112,40 @@ class SubBlockCache:
                 self.evictions += 1
 
     def clear(self) -> None:
+        """Drop every entry (counters are kept — they are lifetime totals)."""
         with self._lock:
             self._od.clear()
             self._bytes = 0
+
+    def swap_generation(self, old_gen: int, new_gen: int,
+                        keep_levels: set) -> int:
+        """Carry entries across a snapshot hot-swap, dropping the rest.
+
+        Entries keyed ``(old_gen, level, sub_block)`` whose ``level`` is in
+        ``keep_levels`` are re-tagged to ``new_gen`` (LRU order preserved);
+        every other entry — changed levels, stale generations from raced
+        requests — is dropped.  ``swap_generation(g, g', set())`` is
+        :meth:`clear`.  The server calls this with the set of levels whose
+        :meth:`repro.io.TACZReader.level_signature` did not change, so a
+        republish that only touched some levels keeps the others warm.
+
+        :param old_gen: generation tag (snapshot index CRC) to carry from.
+        :param new_gen: generation tag of the newly adopted snapshot.
+        :param keep_levels: level indices whose decoded bricks stay valid.
+        :returns: number of entries carried over.
+        """
+        with self._lock:
+            od: OrderedDict[tuple, np.ndarray] = OrderedDict()
+            nbytes = 0
+            for key, arr in self._od.items():
+                if (len(key) == 3 and key[0] == old_gen
+                        and key[1] in keep_levels):
+                    od[(new_gen, key[1], key[2])] = arr
+                    nbytes += arr.nbytes
+            kept = len(od)
+            self._od = od
+            self._bytes = nbytes
+            return kept
 
     def __len__(self) -> int:
         with self._lock:
@@ -114,10 +157,16 @@ class SubBlockCache:
 
     @property
     def nbytes(self) -> int:
+        """Decoded bytes currently held (always ≤ ``budget_bytes``)."""
         with self._lock:
             return self._bytes
 
     def stats(self) -> dict:
+        """Lifetime counters and current occupancy.
+
+        :returns: dict with ``hits``, ``misses``, ``evictions``,
+            ``entries``, ``bytes``, ``budget_bytes``.
+        """
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions, "entries": len(self._od),
@@ -128,16 +177,29 @@ class SubBlockCache:
 @dataclass(frozen=True)
 class PlannedLevel:
     """One (level, box) query resolved against the index: which sub-blocks
-    the box touches, or whether the whole level must be materialized."""
+    the box touches, or whether the whole level must be materialized.
+
+    On a shard-filtered server ``tasks`` holds only *owned* sub-blocks and
+    ``owned`` is False for a whole-level plan whose key belongs to another
+    shard — such a plan decodes nothing and assembles to zeros (the router
+    overlays the owning shard's crop in its place).
+    """
 
     level: int
     lbox: Box
     tasks: tuple[tuple[int, Box], ...]   # (sub-block index, intersection)
     whole_level: bool                    # gsp/global single-payload level
+    owned: bool = True                   # False → serve zeros (shard filter)
 
     def keys(self) -> list[CacheKey]:
+        """Cache/placement keys this plan needs decoded.
+
+        :returns: ``[(level, WHOLE_LEVEL)]`` for an owned whole-level
+            plan, one ``(level, sub_block)`` key per task otherwise —
+            empty for non-owned or empty-box plans.
+        """
         if self.whole_level:
-            return [(self.level, WHOLE_LEVEL)]
+            return [(self.level, WHOLE_LEVEL)] if self.owned else []
         return [(self.level, sbi) for sbi, _ in self.tasks]
 
 
@@ -150,13 +212,29 @@ class DecodePlanner:
     them per (level, shape, branch) group through
     ``sz.decode_codes_batched`` — the decode-side analogue of the batched
     SHE encode pipeline.
+
+    :param reader: the open :class:`~repro.io.TACZReader` to plan against.
+    :param owned: optional set of ``(level, sub_block)`` keys this planner
+        may decode (a shard's slice of ``reader.subblock_keys()``).  When
+        given, plans are restricted to owned keys: foreign sub-blocks are
+        dropped from ``tasks`` and foreign whole-level plans are marked
+        ``owned=False``.  ``None`` (the default) plans everything.
     """
 
-    def __init__(self, reader: TACZReader):
+    def __init__(self, reader: TACZReader,
+                 owned: set[CacheKey] | None = None):
         self._rd = reader
+        self._owned = owned
 
     def plan(self, queries: list[tuple[int, Box]]) -> list[PlannedLevel]:
-        rd = self._rd
+        """Resolve ``(level, box)`` queries against the reader's index.
+
+        :param queries: pairs of level index and finest-grid box.
+        :returns: one :class:`PlannedLevel` per query, in order.
+        :raises ValueError: if a box is not three ``(lo, hi)`` ranges.
+        :raises IndexError: if a level index is out of range.
+        """
+        rd, owned = self._rd, self._owned
         out: list[PlannedLevel] = []
         for li, box in queries:
             if len(box) != 3:
@@ -165,11 +243,14 @@ class DecodePlanner:
             if any(hi <= lo for lo, hi in lbox):
                 out.append(PlannedLevel(li, lbox, (), False))
             elif rd.levels[li].strategy in TACZReader._SHE_STRATEGIES:
-                out.append(PlannedLevel(
-                    li, lbox, tuple(rd.intersecting_subblocks(li, lbox)),
-                    False))
+                tasks = rd.intersecting_subblocks(li, lbox)
+                if owned is not None:
+                    tasks = [t for t in tasks if (li, t[0]) in owned]
+                out.append(PlannedLevel(li, lbox, tuple(tasks), False))
             else:
-                out.append(PlannedLevel(li, lbox, (), True))
+                out.append(PlannedLevel(
+                    li, lbox, (), True,
+                    owned=owned is None or (li, WHOLE_LEVEL) in owned))
         return out
 
     def fetch(self, plans: list[PlannedLevel], cache: SubBlockCache,
@@ -185,6 +266,12 @@ class DecodePlanner:
         insert under the *old* generation, which no post-swap request will
         ever look up — stale bricks age out through normal LRU eviction
         instead of being served.
+
+        :param plans: output of :meth:`plan`.
+        :param cache: the server's :class:`SubBlockCache`.
+        :returns: ``{(level, sub_block): decoded brick}`` covering every
+            key of every plan.
+        :raises IOError: if a payload fails its CRC check.
         """
         rd = self._rd
         gen = rd.index_crc
@@ -243,15 +330,41 @@ class RegionServer:
 
     Hot swap: :meth:`maybe_reload` re-reads the file's 20-byte footer and
     compares the index CRC with the serving snapshot's; on change (the
-    writer republished via atomic ``os.replace``) the reader is reopened
-    and the cache dropped.  Pass ``auto_reload=True`` to run that check at
-    the start of every request batch (what the HTTP layer does).
+    writer republished via atomic ``os.replace``) the reader is reopened.
+    Cache entries for levels whose content signature
+    (:meth:`~repro.io.TACZReader.level_signature` — section CRCs, not byte
+    offsets) is unchanged are carried over to the new snapshot; the rest
+    are dropped.  Pass ``auto_reload=True`` to run the check at the start
+    of every request batch (what the HTTP layer does).
+
+    Sharding: pass ``shard_map``/``shard_id`` to restrict the server to
+    the sub-blocks the map assigns to that shard.  Foreign sub-blocks are
+    never decoded or cached (crops cover them with zeros), so N shard
+    servers hold N disjoint cache slices — aggregate cache capacity grows
+    ~linearly with N.  The :class:`repro.serving.sharded.ShardedRegionRouter`
+    scatter-gathers such servers back into full, bit-identical crops.
+
+    :param path: path of the ``.tacz`` snapshot to serve.
+    :param cache_bytes: :class:`SubBlockCache` byte budget (~25 % of the
+        decoded level bytes is a good default for overlapping workloads).
+    :param auto_reload: run :meth:`maybe_reload` before every batch.
+    :param shard_map: an object with ``owner(key) -> shard_id`` (normally
+        :class:`repro.serving.sharded.ShardMap`); requires ``shard_id``.
+    :param shard_id: this server's shard in ``shard_map``.
+    :raises ValueError: if only one of ``shard_map``/``shard_id`` is given,
+        or the file fails TACZ validation.
+    :raises OSError: if the file cannot be opened.
     """
 
     def __init__(self, path, *, cache_bytes: int = 256 << 20,
-                 auto_reload: bool = False):
+                 auto_reload: bool = False, shard_map=None,
+                 shard_id: str | None = None):
+        if (shard_map is None) != (shard_id is None):
+            raise ValueError("shard_map and shard_id go together")
         self.path = str(path)
         self.auto_reload = bool(auto_reload)
+        self.shard_map = shard_map
+        self.shard_id = shard_id
         self.cache = SubBlockCache(cache_bytes)
         self._lock = threading.Lock()
         # readers displaced by a hot swap, with in-flight request counts:
@@ -260,11 +373,19 @@ class RegionServer:
         self._inflight: dict[int, int] = {}
         self._retired: dict[int, TACZReader] = {}
         self._reader = TACZReader(self.path)
-        self._planner = DecodePlanner(self._reader)
+        self._owned = self._compute_owned(self._reader)
+        self._planner = DecodePlanner(self._reader, self._owned)
+
+    def _compute_owned(self, reader: TACZReader) -> set[CacheKey] | None:
+        if self.shard_map is None:
+            return None
+        return {k for k in reader.subblock_keys()
+                if self.shard_map.owner(k) == self.shard_id}
 
     # ------------------------------ lifecycle ------------------------------
 
     def close(self) -> None:
+        """Close the current reader and any hot-swap-retired readers."""
         with self._lock:
             self._reader.close()
             for rd in self._retired.values():
@@ -280,10 +401,12 @@ class RegionServer:
 
     @property
     def reader(self) -> TACZReader:
+        """The reader of the snapshot currently being served."""
         return self._reader
 
     @property
     def n_levels(self) -> int:
+        """Level count of the serving snapshot."""
         return self._reader.n_levels
 
     @property
@@ -297,17 +420,21 @@ class RegionServer:
         Cheap (one footer read) and safe to call per request.  A missing
         or truncated file keeps the current snapshot serving — the writer
         publishes atomically, so a half-written state is never adopted.
+
+        Cache entries are carried over for every level whose content
+        signature (section/payload CRCs — see
+        :meth:`repro.io.TACZReader.level_signature`) matches the new
+        snapshot: a republish that recompressed only some levels keeps the
+        other levels' decoded bricks warm.  Entries for changed levels are
+        dropped.
+
+        :returns: True when a new snapshot was adopted.
         """
-        try:
-            with open(self.path, "rb") as f:
-                f.seek(-fmt.FOOTER_SIZE, os.SEEK_END)
-                _, _, crc = fmt.parse_footer(f.read(fmt.FOOTER_SIZE))
-        except (OSError, ValueError):
-            return False
-        if (crc & 0xFFFFFFFF) == self.snapshot_crc:
+        crc = probe_index_crc(self.path)
+        if crc is None or crc == self.snapshot_crc:
             return False
         with self._lock:
-            if (crc & 0xFFFFFFFF) == self.snapshot_crc:   # raced reload
+            if crc == self.snapshot_crc:                  # raced reload
                 return False
             try:
                 reader = TACZReader(self.path)
@@ -316,13 +443,17 @@ class RegionServer:
             # in-flight requests may still hold the old reader — close it
             # when idle, else park it until its last request drains
             old = self._reader
+            keep = {li for li in range(min(old.n_levels, reader.n_levels))
+                    if old.level_signature(li) == reader.level_signature(li)}
             if self._inflight.get(id(old), 0) == 0:
                 old.close()
             else:
                 self._retired[id(old)] = old
             self._reader = reader
-            self._planner = DecodePlanner(reader)
-            self.cache.clear()
+            self._owned = self._compute_owned(reader)
+            self._planner = DecodePlanner(reader, self._owned)
+            self.cache.swap_generation(old.index_crc, reader.index_crc,
+                                       keep)
         return True
 
     # ------------------------------- queries -------------------------------
@@ -330,7 +461,36 @@ class RegionServer:
     def get_regions(self, boxes: list[Box],
                     levels: list[int] | None = None,
                     ) -> list[list[ROILevel]]:
-        """Serve a batch of boxes; one list of per-level crops per box."""
+        """Serve a batch of boxes; one list of per-level crops per box.
+
+        The whole batch is planned as one unit: overlapping boxes decode
+        each hot sub-block once, and cache misses reconstruct in
+        vectorized ``(level, shape, branch)`` groups.  On a shard-filtered
+        server, cells belonging to foreign sub-blocks come back as zeros.
+
+        :param boxes: half-open boxes in finest-grid cells.
+        :param levels: restrict crops to these level indices (default:
+            every level, finest first).
+        :returns: ``out[b][l]`` = crop of ``boxes[b]`` at ``levels[l]``.
+        :raises ValueError: if a level is out of range or a box malformed.
+        :raises IOError: if a payload fails its CRC check.
+        """
+        return self.get_regions_with_crc(boxes, levels)[1]
+
+    def get_regions_with_crc(self, boxes: list[Box],
+                             levels: list[int] | None = None,
+                             ) -> tuple[int, list[list[ROILevel]]]:
+        """:meth:`get_regions` plus the identity of the snapshot that
+        actually served the batch.
+
+        A hot-swap can land *while* a batch is decoding against the
+        previous reader; ``self.snapshot_crc`` read afterwards would then
+        name the new generation for old data.  Callers that publish the
+        CRC next to the payload (the HTTP layer, whose CRC the sharded
+        router trusts for its generation check) must use this method.
+
+        :returns: ``(index_crc_of_serving_snapshot, results)``.
+        """
         if self.auto_reload:
             self.maybe_reload()
         with self._lock:
@@ -359,15 +519,22 @@ class RegionServer:
                 per_box: list[ROILevel] = []
                 for li in lis:
                     p = next(it)
-                    data = rd.assemble_level_roi(p.level, p.lbox,
-                                                 fetch_brick, fetch_level,
-                                                 tasks=p.tasks)
+                    if not p.owned:   # foreign whole-level key: zeros —
+                        # the router overlays the owning shard's crop
+                        data = np.zeros(tuple(max(hi - lo, 0)
+                                              for lo, hi in p.lbox),
+                                        dtype=np.float32)
+                    else:
+                        data = rd.assemble_level_roi(p.level, p.lbox,
+                                                     fetch_brick,
+                                                     fetch_level,
+                                                     tasks=p.tasks)
                     per_box.append(ROILevel(
                         level=p.level,
                         ratio=max(int(rd.levels[p.level].ratio), 1),
                         box=p.lbox, data=data))
                 out.append(per_box)
-            return out
+            return rd.index_crc, out
         finally:
             with self._lock:
                 n = self._inflight.get(id(rd), 1) - 1
@@ -380,15 +547,37 @@ class RegionServer:
                         retired.close()
 
     def get_region(self, level: int, box: Box) -> ROILevel:
-        """One level's crop of ``box`` (finest-grid cells)."""
+        """One level's crop of ``box`` (finest-grid cells).
+
+        :param level: level index.
+        :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :returns: the :class:`~repro.io.reader.ROILevel` crop.
+        :raises ValueError: if ``level`` is out of range or ``box``
+            malformed.
+        """
         return self.get_regions([box], levels=[level])[0][0]
 
     def get_roi(self, box: Box) -> list[ROILevel]:
-        """All levels' crops — the cached mirror of ``read_roi(box)``."""
+        """All levels' crops — the cached mirror of ``read_roi(box)``.
+
+        :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :returns: one crop per level, finest first (file order).
+        """
         return self.get_regions([box])[0]
 
     def stats(self) -> dict:
+        """Cache counters plus snapshot identity (and shard info when
+        shard-filtered).
+
+        :returns: dict with ``hits/misses/evictions/entries/bytes/
+            budget_bytes/snapshot_crc/n_levels`` and, on a shard, ``shard``
+            = ``{shard_id, n_shards, owned_keys}``.
+        """
         s = self.cache.stats()
         s["snapshot_crc"] = self.snapshot_crc
         s["n_levels"] = self.n_levels
+        if self.shard_map is not None:
+            s["shard"] = {"shard_id": self.shard_id,
+                          "n_shards": len(self.shard_map),
+                          "owned_keys": len(self._owned or ())}
         return s

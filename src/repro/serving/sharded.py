@@ -1,0 +1,500 @@
+"""``repro.serving.sharded`` — multi-host sharded region serving.
+
+One :class:`~repro.serving.regions.RegionServer` caps the warm working
+set at a single host's cache budget; on large AMR levels (AMRIC, Wang et
+al. 2023 makes the same point for the write side) the per-level sub-block
+count far exceeds what one host can hold decoded.  This module spreads
+the ``(level, sub_block)`` key universe of a snapshot over N shard
+servers and reassembles full crops on the way back:
+
+  * :class:`ShardMap` — deterministic rendezvous (highest-random-weight)
+    placement of ``(level, sub_block)`` keys onto named shards.  Stable
+    under shard add/remove (only keys touching the added/removed shard
+    move), independent of shard-list order and of ``PYTHONHASHSEED``
+    (keyed BLAKE2b), and serializable — clients and servers built from
+    the same config compute identical owners, which is what makes the
+    server-side shard filter and the client-side scatter compose.
+  * :class:`ShardedRegionRouter` — splits a batch of ROI boxes into
+    per-shard sub-block fetch sets via the same
+    :class:`~repro.serving.regions.DecodePlanner` box→sub-block mapping
+    the servers use, scatter-gathers over the PR 3 HTTP wire format
+    (concurrent ``POST /v1/regions`` per shard×level group), overlays the
+    returned crops, and falls back per group — replica endpoints first,
+    then a direct local :class:`~repro.io.TACZReader` decode — so one
+    unreachable shard degrades throughput, not availability or
+    correctness.
+
+Each shard runs the stock ``RegionServer``/``http_api`` stack with a
+shard filter (``RegionServer(shard_map=..., shard_id=...)``): it decodes
+and caches only owned sub-blocks, so N shards hold N disjoint cache
+slices and aggregate cache capacity scales ~linearly.  Reassembled crops
+are bit-identical to a single unsharded server (property-tested), because
+every cell of a crop is produced by exactly one owner through the shared
+``assemble_level_roi`` code path.  Snapshot hot-swaps propagate through
+the footer ``index_crc``: the router revalidates its own file per batch,
+shards auto-reload per request, and a shard still serving a different
+snapshot generation is treated as failed for that batch (replica/local
+fallback) instead of silently mixing generations.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import struct
+import threading
+from concurrent.futures import ThreadPoolExecutor, wait
+
+import numpy as np
+
+from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
+                             probe_index_crc)
+
+from .client import RegionClient
+from .regions import CacheKey, DecodePlanner
+
+__all__ = ["ShardMap", "ShardedRegionRouter"]
+
+
+class ShardMap:
+    """Deterministic rendezvous-hash placement of sub-block keys.
+
+    Every ``(level, sub_block)`` key scores each shard with a keyed
+    64-bit BLAKE2b of ``(seed, level, sub_block, shard_id)`` and is owned
+    by the highest score.  Rendezvous hashing gives the two properties a
+    serving fleet needs when resizing:
+
+      * adding a shard moves only the keys whose new highest score is the
+        added shard (~``1/(N+1)`` of them) — no key moves between two
+        pre-existing shards;
+      * removing a shard moves only the keys it owned.
+
+    Ownership is a pure function of ``(shards, seed, key)``: it does not
+    depend on shard-list order, process, platform, or ``PYTHONHASHSEED``,
+    so a router and its shard servers agree as long as they were built
+    from the same serialized config (:meth:`to_json`/:meth:`from_json`).
+
+    :param shards: shard identifiers (non-empty unique strings) — usually
+        the names the deployment uses to look up endpoints.
+    :param seed: placement salt; changing it reshuffles every key.
+    :raises ValueError: on an empty/duplicate shard list or empty ids.
+    """
+
+    _ALGORITHM = "rendezvous-blake2b64"
+
+    def __init__(self, shards, *, seed: int = 0):
+        shards = [str(s) for s in shards]
+        if not shards:
+            raise ValueError("ShardMap needs at least one shard")
+        if any(not s for s in shards):
+            raise ValueError("shard ids must be non-empty strings")
+        if len(set(shards)) != len(shards):
+            raise ValueError(f"duplicate shard ids in {shards!r}")
+        self.shards: tuple[str, ...] = tuple(sorted(shards))
+        self.seed = int(seed)
+
+    # ------------------------------ placement ------------------------------
+
+    def _score(self, shard: str, key: CacheKey) -> int:
+        h = hashlib.blake2b(digest_size=8)
+        h.update(struct.pack("<qqq", self.seed, int(key[0]), int(key[1])))
+        h.update(shard.encode("utf-8"))
+        return int.from_bytes(h.digest(), "little")
+
+    def owner(self, key: CacheKey) -> str:
+        """The shard owning one ``(level, sub_block)`` key.
+
+        :param key: ``(level_index, sub_block_index)``;
+            ``sub_block_index`` is :data:`~repro.io.reader.WHOLE_LEVEL`
+            for single-payload levels.
+        :returns: the owning shard id.
+        """
+        return max(self.shards, key=lambda s: (self._score(s, key), s))
+
+    def partition(self, keys) -> dict[str, list[CacheKey]]:
+        """Group keys by owner.
+
+        :param keys: iterable of ``(level, sub_block)`` keys.
+        :returns: ``{shard_id: [keys it owns]}`` — only shards owning at
+            least one key appear.
+        """
+        out: dict[str, list[CacheKey]] = {}
+        for key in keys:
+            out.setdefault(self.owner(key), []).append(key)
+        return out
+
+    # ------------------------------ resizing -------------------------------
+
+    def with_shard(self, shard_id: str) -> "ShardMap":
+        """A new map with ``shard_id`` added (same seed).
+
+        :raises ValueError: if the shard already exists.
+        """
+        return ShardMap(self.shards + (str(shard_id),), seed=self.seed)
+
+    def without_shard(self, shard_id: str) -> "ShardMap":
+        """A new map with ``shard_id`` removed (same seed).
+
+        :raises ValueError: if the shard is unknown, or it was the last.
+        """
+        if str(shard_id) not in self.shards:
+            raise ValueError(f"unknown shard {shard_id!r}")
+        return ShardMap([s for s in self.shards if s != str(shard_id)],
+                        seed=self.seed)
+
+    # ---------------------------- serialization ----------------------------
+
+    def to_dict(self) -> dict:
+        """JSON-safe config; :meth:`from_dict` rebuilds an equal map."""
+        return {"algorithm": self._ALGORITHM, "seed": self.seed,
+                "shards": list(self.shards)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardMap":
+        """Inverse of :meth:`to_dict`.
+
+        :raises ValueError: if the config names a different placement
+            algorithm (a config from a future/incompatible version must
+            fail loudly, not silently place keys elsewhere).
+        """
+        algo = d.get("algorithm", cls._ALGORITHM)
+        if algo != cls._ALGORITHM:
+            raise ValueError(f"unsupported shard-map algorithm {algo!r}")
+        return cls(d["shards"], seed=int(d.get("seed", 0)))
+
+    def to_json(self) -> str:
+        """Canonical JSON form of :meth:`to_dict` (stable key order)."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ShardMap":
+        """Inverse of :meth:`to_json`."""
+        return cls.from_dict(json.loads(s))
+
+    # ------------------------------- dunder --------------------------------
+
+    def __len__(self) -> int:
+        return len(self.shards)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, ShardMap) and self.shards == other.shards
+                and self.seed == other.seed)
+
+    def __hash__(self) -> int:
+        return hash((self.shards, self.seed))
+
+    def __repr__(self) -> str:
+        return f"ShardMap(shards={list(self.shards)!r}, seed={self.seed})"
+
+
+class _Part:
+    """One rectangle of one planned (box, level) query: where it comes
+    from (level-cell intersection box) and where it lands (plan index)."""
+
+    __slots__ = ("plan_idx", "isect")
+
+    def __init__(self, plan_idx: int, isect: Box):
+        self.plan_idx = plan_idx
+        self.isect = isect
+
+
+class ShardedRegionRouter:
+    """Scatter-gather region queries across shard-filtered region servers.
+
+    The router plans a batch exactly like a single
+    :class:`~repro.serving.regions.RegionServer` (same
+    :class:`~repro.serving.regions.DecodePlanner` box→sub-block mapping
+    against a local reader of the same snapshot), assigns every needed
+    sub-block to its owner through the :class:`ShardMap`, and issues one
+    batched ``POST /v1/regions`` per (shard, level) group — concurrently,
+    over the unmodified PR 3 wire format.  Each returned crop covers the
+    intersection of one query box with one owned sub-block (or a whole
+    gsp/global level), and is pasted into the output at the same offsets
+    the single server's assembly would write — which is why the result is
+    bit-identical to an unsharded ``get_regions``.
+
+    Failure handling is per group: endpoints for a shard are tried in
+    order (primary, then replicas); a connection error, HTTP error,
+    malformed response, or a shard answering for a *different snapshot
+    generation* (footer ``index_crc`` mismatch) moves to the next
+    endpoint, and when all are exhausted the group is decoded directly
+    from the local file (``TACZReader.read_level_box``) — unless
+    ``local_fallback=False``, in which case the batch raises.
+
+    :param path: local path of the ``.tacz`` snapshot (used for planning
+        and for the fallback decode; on a multi-host deployment this is
+        the replicated copy of the same published file).
+    :param shard_map: the :class:`ShardMap` the shard servers were
+        configured with (same serialized config — ownership must agree).
+    :param endpoints: ``{shard_id: url}`` or ``{shard_id: [url, ...]}``
+        (first is primary, rest are replicas).  A shard missing from the
+        dict is served through the local fallback.
+    :param timeout: per-request socket timeout, seconds.
+    :param local_fallback: decode groups locally when every endpoint of
+        the owning shard failed (default True).
+    :param auto_reload: revalidate the local snapshot (footer CRC) at the
+        start of every batch, like the servers do per request.
+    :param max_workers: concurrent shard requests per batch.
+    :raises ValueError: if the file fails TACZ validation.
+    :raises OSError: if the file cannot be opened.
+    """
+
+    def __init__(self, path, shard_map: ShardMap,
+                 endpoints: dict[str, str | list[str]], *,
+                 timeout: float = 30.0, local_fallback: bool = True,
+                 auto_reload: bool = True, max_workers: int = 8):
+        self.path = str(path)
+        self.shard_map = shard_map
+        self.endpoints: dict[str, list[str]] = {
+            str(sid): [urls] if isinstance(urls, str) else list(urls)
+            for sid, urls in endpoints.items()}
+        self.timeout = float(timeout)
+        self.local_fallback = bool(local_fallback)
+        self.auto_reload = bool(auto_reload)
+        self._clients: dict[str, RegionClient] = {}
+        self._pool = ThreadPoolExecutor(max_workers=max(1, int(max_workers)),
+                                        thread_name_prefix="shard-router")
+        self._lock = threading.Lock()
+        self._reader = TACZReader(self.path)
+        self._planner = DecodePlanner(self._reader)
+        # readers displaced by a reload, with per-reader in-flight counts
+        # (same drain discipline as RegionServer: each retired reader
+        # closes when *its* last batch finishes, so sustained overlapping
+        # traffic across republishes never accumulates fds)
+        self._inflight: dict[int, int] = {}
+        self._retired: dict[int, TACZReader] = {}
+        self.counters = {"batches": 0, "shard_requests": 0,
+                         "endpoint_failures": 0, "local_fallbacks": 0}
+
+    # ------------------------------ lifecycle ------------------------------
+
+    def close(self) -> None:
+        """Release the thread pool and every reader (current + retired)."""
+        self._pool.shutdown(wait=True)
+        with self._lock:
+            self._reader.close()
+            for rd in self._retired.values():
+                rd.close()
+            self._retired.clear()
+            self._inflight.clear()
+
+    def __enter__(self) -> "ShardedRegionRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def snapshot_crc(self) -> int:
+        """Index CRC of the snapshot the router currently plans against."""
+        return self._reader.index_crc
+
+    def maybe_reload(self) -> bool:
+        """Adopt a republished local snapshot; True when a swap happened.
+
+        Mirrors :meth:`RegionServer.maybe_reload`: one footer read, and a
+        missing/truncated/corrupt file keeps the current snapshot.  After
+        a swap, shard responses carrying the old generation's CRC fail
+        validation and fall back, so a batch never mixes generations.
+
+        :returns: True when a new snapshot was adopted.
+        """
+        crc = probe_index_crc(self.path)
+        if crc is None or crc == self.snapshot_crc:
+            return False
+        with self._lock:
+            if crc == self.snapshot_crc:
+                return False
+            try:
+                reader = TACZReader(self.path)
+            except (OSError, ValueError):
+                return False
+            old = self._reader
+            if self._inflight.get(id(old), 0) == 0:
+                old.close()
+            else:
+                self._retired[id(old)] = old
+            self._reader = reader
+            self._planner = DecodePlanner(reader)
+        return True
+
+    # ------------------------------- scatter -------------------------------
+
+    def _client(self, url: str) -> RegionClient:
+        with self._lock:   # pool-thread safe; clients are thread-safe
+            cli = self._clients.get(url)
+            if cli is None:
+                cli = self._clients[url] = RegionClient(
+                    url, timeout=self.timeout)
+            return cli
+
+    def _count(self, counter: str) -> None:
+        with self._lock:   # += from pool threads is not atomic
+            self.counters[counter] += 1
+
+    def _fetch_group(self, rd: TACZReader, shard: str, li: int,
+                     parts: list[_Part]) -> list[np.ndarray]:
+        """Crops for one (shard, level) group, in ``parts`` order.
+
+        Tries the shard's endpoints in order; every failure mode —
+        unreachable, HTTP error, stale snapshot generation, mis-shaped
+        response — moves on, and the local reader is the last resort.
+
+        :raises RuntimeError: when every endpoint failed and
+            ``local_fallback`` is off.
+        """
+        r = max(int(rd.levels[li].ratio), 1)
+        boxes_f = [tuple((lo * r, hi * r) for lo, hi in p.isect)
+                   for p in parts]
+        want_crc = rd.index_crc
+        errors: list[str] = []
+        for url in self.endpoints.get(shard, ()):
+            try:
+                self._count("shard_requests")
+                crc, results = self._client(url).regions_meta(
+                    boxes_f, levels=[li])
+                if (crc & 0xFFFFFFFF) != want_crc:
+                    raise ValueError(
+                        f"snapshot mismatch: shard serves {crc:#x}, "
+                        f"router plans against {want_crc:#x}")
+                crops = []
+                for part, per_box in zip(parts, results):
+                    roi = per_box[0]
+                    if tuple(roi.box) != tuple(part.isect):
+                        raise ValueError(
+                            f"shard returned box {roi.box}, "
+                            f"wanted {part.isect}")
+                    crops.append(roi.data)
+                return crops
+            except Exception as exc:   # noqa: BLE001 — isolate per endpoint
+                self._count("endpoint_failures")
+                errors.append(f"{url}: {exc}")
+        if not self.local_fallback:
+            raise RuntimeError(
+                f"shard {shard!r} unreachable for level {li} and local "
+                f"fallback is disabled: {'; '.join(errors) or 'no endpoints'}")
+        self._count("local_fallbacks")
+        return [rd.read_level_box(li, p.isect) for p in parts]
+
+    # ------------------------------- queries -------------------------------
+
+    def get_regions(self, boxes: list[Box],
+                    levels: list[int] | None = None,
+                    ) -> list[list[ROILevel]]:
+        """Serve a batch of boxes across the shard fleet.
+
+        Bit-identical to a single unsharded
+        ``RegionServer.get_regions(boxes, levels)`` on the same snapshot,
+        including when shards are unreachable (fallback path).
+
+        :param boxes: half-open boxes in finest-grid cells.
+        :param levels: restrict crops to these level indices (default:
+            every level, finest first).
+        :returns: ``out[b][l]`` = crop of ``boxes[b]`` at ``levels[l]``.
+        :raises ValueError: if a level is out of range or a box malformed.
+        :raises RuntimeError: if a shard is unreachable and
+            ``local_fallback`` is disabled.
+        """
+        if self.auto_reload:
+            self.maybe_reload()
+        with self._lock:
+            rd, planner = self._reader, self._planner
+            self._inflight[id(rd)] = self._inflight.get(id(rd), 0) + 1
+        try:
+            lis = list(range(rd.n_levels)) if levels is None else \
+                [int(li) for li in levels]
+            for li in lis:
+                if not 0 <= li < rd.n_levels:
+                    raise ValueError(f"level {li} out of range "
+                                     f"(0..{rd.n_levels - 1})")
+            self._count("batches")
+            plans = planner.plan([(li, box) for box in boxes for li in lis])
+
+            # scatter: group every needed rectangle by (owner shard, level)
+            groups: dict[tuple[str, int], list[_Part]] = {}
+            for pi, p in enumerate(plans):
+                if p.whole_level:
+                    owner = self.shard_map.owner((p.level, WHOLE_LEVEL))
+                    groups.setdefault((owner, p.level), []).append(
+                        _Part(pi, p.lbox))
+                else:
+                    for sbi, isect in p.tasks:
+                        owner = self.shard_map.owner((p.level, sbi))
+                        groups.setdefault((owner, p.level), []).append(
+                            _Part(pi, isect))
+
+            futures = {gk: self._pool.submit(self._fetch_group, rd,
+                                             gk[0], gk[1], parts)
+                       for gk, parts in groups.items()}
+            # settle every group before consuming any result: a raising
+            # group must not leave siblings still decoding from a reader
+            # the finally block may let a hot-swap close
+            wait(list(futures.values()))
+
+            # gather: paste every crop at the offsets the single-server
+            # assembly would write (isect relative to the plan's lbox)
+            acc: dict[int, np.ndarray] = {}
+            for pi, p in enumerate(plans):
+                acc[pi] = np.zeros(tuple(max(hi - lo, 0)
+                                         for lo, hi in p.lbox),
+                                   dtype=np.float32)
+            for gk, fut in futures.items():
+                crops = fut.result()
+                for part, crop in zip(groups[gk], crops):
+                    dst = tuple(slice(lo - b0, hi - b0)
+                                for (lo, hi), (b0, _)
+                                in zip(part.isect, plans[part.plan_idx].lbox))
+                    acc[part.plan_idx][dst] = crop
+
+            out: list[list[ROILevel]] = []
+            it = iter(range(len(plans)))
+            for _ in boxes:
+                per_box: list[ROILevel] = []
+                for li in lis:
+                    pi = next(it)
+                    p = plans[pi]
+                    per_box.append(ROILevel(
+                        level=p.level,
+                        ratio=max(int(rd.levels[p.level].ratio), 1),
+                        box=p.lbox, data=acc[pi]))
+                out.append(per_box)
+            return out
+        finally:
+            with self._lock:
+                n = self._inflight.get(id(rd), 1) - 1
+                if n:
+                    self._inflight[id(rd)] = n
+                else:
+                    self._inflight.pop(id(rd), None)
+                    retired = self._retired.pop(id(rd), None)
+                    if retired is not None:   # last batch on it drained
+                        retired.close()
+
+    def get_region(self, level: int, box: Box) -> ROILevel:
+        """One level's crop of ``box`` (finest-grid cells).
+
+        :param level: level index.
+        :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :returns: the :class:`~repro.io.reader.ROILevel` crop.
+        :raises ValueError: if ``level`` is out of range.
+        """
+        return self.get_regions([box], levels=[level])[0][0]
+
+    def get_roi(self, box: Box) -> list[ROILevel]:
+        """All levels' crops of one box, finest first.
+
+        :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :returns: one crop per level (the sharded mirror of ``read_roi``).
+        """
+        return self.get_regions([box])[0]
+
+    def stats(self) -> dict:
+        """Router counters plus the planning snapshot's identity.
+
+        :returns: dict with ``batches``, ``shard_requests``,
+            ``endpoint_failures``, ``local_fallbacks``, ``snapshot_crc``,
+            and the shard-map config.
+        """
+        s = dict(self.counters)
+        s["snapshot_crc"] = self.snapshot_crc
+        s["shard_map"] = self.shard_map.to_dict()
+        return s

@@ -1,0 +1,104 @@
+"""Documentation stays honest (ISSUE 4 acceptance): the byte-level
+format spec's field tables must match the constants in ``io/format.py``,
+both docs must exist, and the README must link them."""
+import os
+import re
+
+import pytest
+
+from repro.io import format as fmt
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _read(rel: str) -> str:
+    path = os.path.join(REPO, rel)
+    assert os.path.exists(path), f"missing {rel}"
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+@pytest.fixture(scope="module")
+def format_doc() -> str:
+    return _read("docs/tacz_format.md")
+
+
+@pytest.fixture(scope="module")
+def serving_doc() -> str:
+    return _read("docs/serving.md")
+
+
+def test_readme_links_both_docs():
+    readme = _read("README.md")
+    assert "docs/tacz_format.md" in readme
+    assert "docs/serving.md" in readme
+
+
+def test_format_doc_enum_tables_match_constants(format_doc):
+    """Every enum row in the spec is `| CONSTANT | value | ...` — each
+    must agree with the live constant, and no constant may be missing."""
+    enums = ["STRATEGY_OPST", "STRATEGY_AKDTREE", "STRATEGY_GSP",
+             "STRATEGY_GLOBAL", "STRATEGY_NAST",
+             "ALGO_LOR_REG", "ALGO_LORENZO", "ALGO_INTERP",
+             "BRANCH_LORENZO", "BRANCH_REG", "BRANCH_INTERP",
+             "CODEC_HUFFMAN", "CODEC_RAW_I16", "CODEC_RAW_I32",
+             "COMPRESSOR_NONE", "COMPRESSOR_ZLIB", "COMPRESSOR_ZSTD"]
+    for name in enums:
+        value = getattr(fmt, name)
+        assert f"| `{name}` | {value} |" in format_doc, \
+            f"doc table row for {name} missing or stale (expect {value})"
+    # and the doc names no enum value the module does not have
+    for name, value in re.findall(r"^\| `([A-Z_0-9]+)` \| (\d+) \|",
+                                  format_doc, flags=re.MULTILINE):
+        assert int(value) == getattr(fmt, name), \
+            f"doc claims {name}={value}, module says {getattr(fmt, name)}"
+
+
+def test_format_doc_enum_names_match_wire_maps(format_doc):
+    for names in (fmt.STRATEGY_NAMES, fmt.ALGO_NAMES, fmt.BRANCH_NAMES):
+        for code, name in names.items():
+            pat = re.compile(r"\| `[A-Z_0-9]+` \| %d \| `%s` \|"
+                             % (code, re.escape(name)))
+            assert pat.search(format_doc), \
+                f"doc missing name row for code {code} -> {name!r}"
+
+
+def test_format_doc_struct_strings_match(format_doc):
+    """The spec quotes every wire struct verbatim; a format change in the
+    module must force a doc update."""
+    for struct_obj in (fmt._HEADER, fmt._FOOTER, fmt._LEVEL_HEAD,
+                       fmt._LEVEL_HEAD_V1, fmt._LEVEL_SECTIONS,
+                       fmt._SUBBLOCK):
+        assert f"`{struct_obj.format}`" in format_doc, \
+            f"struct string {struct_obj.format!r} not documented"
+
+
+def test_format_doc_framing_constants(format_doc):
+    assert f"HEADER ({fmt.HEADER_SIZE} B)" in format_doc
+    assert f"FOOTER ({fmt.FOOTER_SIZE} B)" in format_doc
+    assert f'`"{fmt.TACZ_MAGIC.decode()}"`' in format_doc
+    assert f"Current version: **{fmt.TACZ_VERSION}**" in format_doc
+    assert f"rank ≤ {fmt.MAX_RANK}" in format_doc
+
+
+def test_serving_doc_covers_required_topics(serving_doc):
+    """The architecture guide must keep covering what ISSUE 4 scoped."""
+    for needle in ["SubBlockCache", "DecodePlanner", "RegionServer",
+                   "POST /v1/regions", "GET /v1/meta", "X-TACZ-",
+                   "cache_bytes", "maybe_reload", "ShardMap",
+                   "ShardedRegionRouter", "rendezvous", "index_crc",
+                   "tacz_format.md"]:
+        assert needle in serving_doc, f"serving.md lost coverage: {needle}"
+
+
+def test_docs_reference_live_apis(serving_doc):
+    """Spot-check that the APIs the guide names still exist."""
+    from repro import serving
+    from repro.io.reader import TACZReader
+    for attr in ("SubBlockCache", "DecodePlanner", "RegionServer",
+                 "ShardMap", "ShardedRegionRouter", "RegionClient",
+                 "serve"):
+        assert hasattr(serving, attr)
+    for attr in ("subblock_keys", "level_signature", "read_level_box",
+                 "read_roi"):
+        assert hasattr(TACZReader, attr)

@@ -287,8 +287,8 @@ def test_http_decode_failure_returns_500_not_reset(endpoint):
     import urllib.error
     client, _, _ = endpoint
     rs = client.httpd.region_server
-    orig = rs.get_regions
-    rs.get_regions = lambda *a, **kw: (_ for _ in ()).throw(
+    orig = rs.get_regions_with_crc
+    rs.get_regions_with_crc = lambda *a, **kw: (_ for _ in ()).throw(
         IOError("injected payload corruption"))
     try:
         with pytest.raises(urllib.error.HTTPError) as exc:
@@ -298,7 +298,7 @@ def test_http_decode_failure_returns_500_not_reset(endpoint):
             client.regions([BOXES[0]])
         assert exc.value.code == 500
     finally:
-        rs.get_regions = orig
+        rs.get_regions_with_crc = orig
     np.testing.assert_array_equal(                 # endpoint still serves
         client.region(0, BOXES[0]).data,
         client.regions([BOXES[0]])[0][0].data)
@@ -367,6 +367,101 @@ def test_auto_reload_serves_new_snapshot_without_restart(tmp_path):
         tacz.write(path, res_b)
         np.testing.assert_array_equal(          # picked up by the next call
             srv.get_roi(box)[0].data, res_b.levels[0].recon)
+
+
+# -------------------- cache carry-over across hot swap ----------------------
+
+
+def test_cache_swap_generation_unit():
+    kb = np.zeros(256, dtype=np.float32)
+    cache = SubBlockCache(budget_bytes=1 << 20)
+    for li in (0, 1):
+        for sbi in range(3):
+            cache.put((111, li, sbi), kb)
+    # keep level 0, drop level 1 and any stale generation
+    cache.put((99, 0, 7), kb)                     # raced old-gen insert
+    kept = cache.swap_generation(111, 222, {0})
+    assert kept == 3
+    assert len(cache) == 3 and cache.nbytes == 3 * kb.nbytes
+    for sbi in range(3):
+        assert (222, 0, sbi) in cache
+        assert (222, 1, sbi) not in cache
+    assert (99, 0, 7) not in cache
+    # empty keep set == clear
+    assert cache.swap_generation(222, 333, set()) == 0
+    assert len(cache) == 0 and cache.nbytes == 0
+
+
+def test_hot_swap_preserves_cache_for_unchanged_levels(tmp_path):
+    """A republish that changed only some levels must keep the other
+    levels' decoded bricks warm (matched via per-level index CRCs)."""
+    rng = np.random.default_rng(0)
+    lvl0_a = rng.normal(size=(32, 32, 32)).astype(np.float32)
+    lvl1_a = rng.normal(size=(16, 16, 16)).astype(np.float32)
+    lvl1_b = rng.normal(size=(16, 16, 16)).astype(np.float32)
+    path = os.path.join(str(tmp_path), "carry.tacz")
+
+    def publish(lvl1):
+        with tacz.TACZWriter(path, eb=1e-2) as w:
+            w.add_level(lvl0_a, np.ones_like(lvl0_a, bool), ratio=1)
+            w.add_level(lvl1, np.ones_like(lvl1, bool), ratio=2)
+
+    publish(lvl1_a)
+    box = ((0, 32), (0, 32), (0, 32))
+    with RegionServer(path, cache_bytes=64 << 20) as srv:
+        srv.get_roi(box)                          # warm both levels
+        warm = srv.cache.stats()
+        lvl0_keys = [k for k in srv.cache._od if k[1] == 0]
+        assert lvl0_keys
+
+        publish(lvl1_b)                           # level 0 bytes unchanged
+        assert srv.maybe_reload() is True
+        s = srv.cache.stats()
+        assert s["entries"] == len(lvl0_keys)     # level 0 carried over
+        for key in srv.cache._od:
+            assert key[0] == srv.snapshot_crc and key[1] == 0
+
+        with tacz.TACZReader(path) as rd:         # still bit-identical
+            ref = rd.read_roi(box)
+        got = srv.get_roi(box)
+        for g, r in zip(got, ref):
+            np.testing.assert_array_equal(g.data, r.data)
+        after = srv.cache.stats()
+        # level 0 served warm (one hit per carried key), only the changed
+        # level re-decoded
+        assert after["hits"] - warm["hits"] == len(lvl0_keys)
+        assert after["misses"] > warm["misses"]
+
+        # a republish where everything changed drops the whole cache
+        rng2 = np.random.default_rng(9)
+        with tacz.TACZWriter(path, eb=1e-2) as w:
+            l0 = rng2.normal(size=(32, 32, 32)).astype(np.float32)
+            l1 = rng2.normal(size=(16, 16, 16)).astype(np.float32)
+            w.add_level(l0, np.ones_like(l0, bool), ratio=1)
+            w.add_level(l1, np.ones_like(l1, bool), ratio=2)
+        assert srv.maybe_reload() is True
+        assert srv.cache.stats()["entries"] == 0
+
+
+def test_level_signature_ignores_byte_placement(tmp_path):
+    """Same content behind different file offsets (an earlier level grew)
+    must produce an equal signature; changed content must not."""
+    rng = np.random.default_rng(1)
+    small = rng.normal(size=(8, 8, 8)).astype(np.float32)
+    big = rng.normal(size=(16, 16, 16)).astype(np.float32)
+    shared = rng.normal(size=(16, 16, 16)).astype(np.float32)
+    pa = os.path.join(str(tmp_path), "a.tacz")
+    pb = os.path.join(str(tmp_path), "b.tacz")
+    for p, first in ((pa, small), (pb, big)):
+        with tacz.TACZWriter(p, eb=1e-2) as w:
+            w.add_level(first, np.ones_like(first, bool), ratio=1)
+            w.add_level(shared, np.ones_like(shared, bool), ratio=2)
+    with tacz.TACZReader(pa) as ra, tacz.TACZReader(pb) as rb:
+        assert ra.level_signature(1) == rb.level_signature(1)
+        assert ra.level_signature(0) != rb.level_signature(0)
+        # offsets really did differ — the signature ignored them
+        assert (ra.levels[1].subblocks[0].payload_off
+                != rb.levels[1].subblocks[0].payload_off)
 
 
 # --------------------------- hypothesis sweeps ------------------------------
