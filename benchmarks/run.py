@@ -12,10 +12,10 @@ import time
 
 from . import (bench_density_sweep, bench_distributed, bench_grad_compress,
                bench_halo, bench_kernels, bench_nast_opst,
-               bench_partition_time, bench_power_spectrum,
-               bench_rate_distortion, bench_region_serving,
-               bench_roi_decode, bench_sharded_serving, bench_she,
-               bench_throughput)
+               bench_parallel_write, bench_partition_time,
+               bench_power_spectrum, bench_rate_distortion,
+               bench_region_serving, bench_roi_decode,
+               bench_sharded_serving, bench_she, bench_throughput)
 
 BENCHES = [
     ("rate_distortion (Figs 20-27)", bench_rate_distortion),
@@ -32,6 +32,7 @@ BENCHES = [
     ("roi_decode (TACZ container)", bench_roi_decode),
     ("region_serving (TACZ serving)", bench_region_serving),
     ("sharded_serving (TACZ serving)", bench_sharded_serving),
+    ("parallel_write (TACZ multi-part)", bench_parallel_write),
 ]
 
 

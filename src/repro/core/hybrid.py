@@ -35,7 +35,7 @@ from .sz import SZResult, compress_interp, compress_lorenzo, compress_lor_reg
 
 __all__ = ["LevelArtifacts", "LevelResult", "AMRCompressionResult",
            "compress_level", "compress_amr", "choose_strategy",
-           "T0", "T1", "T2"]
+           "partition_level", "T0", "T1", "T2"]
 
 T0 = 0.50   # Lor/Reg+SHE: OpST+ vs AKDTree+ (Fig. 12 / Fig. 14)
 T1 = 0.50   # Interp: OpST vs AKDTree (Fig. 13)
@@ -146,16 +146,52 @@ def _merged_compress(groups: dict[tuple[int, ...], np.ndarray], eb: float,
     return results, recon
 
 
+def partition_level(data: np.ndarray, mask: np.ndarray, *, unit: int = 8,
+                    algorithm: str = "lor_reg", she: bool = True,
+                    strategy: str | None = None,
+                    ) -> tuple[BlockGrid, str, float, list[SubBlock]]:
+    """Resolve one level's strategy and sub-block placement — without
+    compressing anything.
+
+    This is the global, deterministic prefix of :func:`compress_level`:
+    the unit-block grid, the density-driven strategy choice, and (for
+    SHE-style strategies) the partition into sub-blocks.  A parallel
+    writer (``repro.io.parallel``) runs it once per level so N workers
+    can compress disjoint slices of the *same* placement — every brick's
+    codes are then bit-identical to the single-writer path, because the
+    batched compressor is per-brick independent.
+
+    :returns: ``(grid, strategy, density, subblocks)`` — ``subblocks``
+        is empty for ``"gsp"`` (single global payload).
+    :raises ValueError: on an unknown ``strategy``.
+    """
+    grid = make_block_grid(data, mask, unit=unit)
+    density = grid.block_density
+    if strategy is None:
+        strategy = choose_strategy(density, algorithm=algorithm, she=she)
+    if strategy == "gsp":
+        return grid, "gsp", density, []
+    if strategy == "opst":
+        subblocks = opst_partition(grid)
+    elif strategy == "akdtree":
+        subblocks = akdtree_partition(grid)
+    elif strategy == "nast":
+        subblocks = [SubBlock(origin=tuple(c), bsize=(1, 1, 1))
+                     for c in np.argwhere(grid.occ)]
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return grid, strategy, density, subblocks
+
+
 def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
                    unit: int = 8, algorithm: str = "lor_reg",
                    she: bool = True, strategy: str | None = None,
                    sz_block: int = 6, batched: bool = True,
                    ratio: int = 1, keep_artifacts: bool = True,
                    lorenzo_engine: str = "auto") -> LevelResult:
-    grid = make_block_grid(data, mask, unit=unit)
-    density = grid.block_density
-    if strategy is None:
-        strategy = choose_strategy(density, algorithm=algorithm, she=she)
+    grid, strategy, density, subblocks = partition_level(
+        data, mask, unit=unit, algorithm=algorithm, she=she,
+        strategy=strategy)
 
     orig_shape = data.shape
 
@@ -178,16 +214,6 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
                            recon=recon, n_values=int(mask.sum()),
                            density=density, eb=eb, ratio=ratio,
                            artifacts=art)
-
-    if strategy == "opst":
-        subblocks = opst_partition(grid)
-    elif strategy == "akdtree":
-        subblocks = akdtree_partition(grid)
-    elif strategy == "nast":
-        subblocks = [SubBlock(origin=tuple(c), bsize=(1, 1, 1))
-                     for c in np.argwhere(grid.occ)]
-    else:
-        raise ValueError(f"unknown strategy {strategy!r}")
 
     sb_meta = sum(sb.meta_bits() for sb in subblocks)
     u = grid.unit

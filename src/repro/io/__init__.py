@@ -20,6 +20,15 @@ test); an independent reader can be written from it alone.
   * :mod:`repro.io.tensor` — one-tensor TACZ blobs for lossy checkpoints.
   * format v2 adds an optional lossless byte pass (zstd/zlib) over the
     shared-Huffman payload sections; v1 files remain readable.
+  * :class:`ParallelTACZWriter` / :func:`write_multipart` — multi-part
+    snapshots: N workers (threads or processes) each stream their own
+    rendezvous-hash partition of every level into ``part-XXXX.tacz``,
+    bound by an atomic CRC'd ``manifest.json``
+    (:mod:`repro.io.manifest`); :func:`open_snapshot` opens either kind
+    behind one reader surface (:class:`MultiPartReader` for
+    directories).  The placement rule lives in
+    :mod:`repro.io.placement` — the same hashing the serving-side shard
+    maps use, so shards can align 1:1 with parts.
 
 Serving-side consumers (sub-block cache, batched decode planner, HTTP
 region endpoint, consistent-hash sharding) live in :mod:`repro.serving`
@@ -36,8 +45,12 @@ Quick start::
     crops = tacz.read_roi("snap.tacz", ((0, 16), (0, 16), (0, 16)))
 """
 from .format import TACZ_MAGIC, TACZ_VERSION
-from .reader import ROILevel, TACZReader, WHOLE_LEVEL, read, read_roi
+from .parallel import MultiPartReader, ParallelTACZWriter, write_multipart
+from .reader import (ROILevel, TACZReader, WHOLE_LEVEL, open_snapshot,
+                     read, read_roi)
 from .writer import TACZWriter, write
 
-__all__ = ["TACZ_MAGIC", "TACZ_VERSION", "ROILevel", "TACZReader",
-           "TACZWriter", "WHOLE_LEVEL", "read", "read_roi", "write"]
+__all__ = ["TACZ_MAGIC", "TACZ_VERSION", "MultiPartReader",
+           "ParallelTACZWriter", "ROILevel", "TACZReader", "TACZWriter",
+           "WHOLE_LEVEL", "open_snapshot", "read", "read_roi", "write",
+           "write_multipart"]

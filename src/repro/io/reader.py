@@ -26,8 +26,8 @@ from repro.core.gsp import gsp_unpad
 
 from . import format as fmt
 
-__all__ = ["ROILevel", "TACZReader", "WHOLE_LEVEL", "probe_index_crc",
-           "read", "read_roi"]
+__all__ = ["ROILevel", "TACZReader", "WHOLE_LEVEL", "open_snapshot",
+           "probe_index_crc", "read", "read_roi"]
 
 Box = tuple[tuple[int, int], tuple[int, int], tuple[int, int]]
 
@@ -477,6 +477,8 @@ class TACZReader:
             if tasks is None:
                 tasks = self.intersecting_subblocks(li, lbox)
             acc = np.zeros(bshape, dtype=np.float32)
+            if not tasks:      # nothing decoded → all zeros; masking is a
+                return acc     # no-op, so skip the mask-section read
             for sbi, isect in tasks:
                 sb = e.subblocks[sbi]
                 local_hi = tuple(hi - o for (_, hi), o
@@ -550,18 +552,24 @@ class TACZReader:
 
 
 def probe_index_crc(path) -> int | None:
-    """Read a file's index CRC from its 20-byte footer — nothing else.
+    """Read a snapshot's identity CRC — nothing else.
 
     The cheap snapshot-identity probe the serving layer's hot-swap checks
     run per request: the CRC uniquely identifies a published snapshot's
     content, so comparing it against an open reader's ``index_crc`` tells
-    whether the file was atomically republished.
+    whether the file was atomically republished.  For a single-file
+    snapshot that is the 20-byte footer's index CRC; for a multi-part
+    snapshot directory it is the manifest's own CRC (``manifest.json``
+    is the commit point — part files only count once it names them).
 
-    :param path: file path.
+    :param path: ``.tacz`` file path or multi-part snapshot directory.
     :returns: the CRC as an unsigned 32-bit int, or None when the file is
         missing, truncated, or not a TACZ container (a half-written state
         is never adopted — the writer publishes atomically).
     """
+    from . import manifest as _manifest
+    if _manifest.is_multipart(path):
+        return _manifest.probe_crc(path)
     try:
         with open(path, "rb") as f:
             f.seek(-fmt.FOOTER_SIZE, os.SEEK_END)
@@ -569,6 +577,28 @@ def probe_index_crc(path) -> int | None:
     except (OSError, ValueError):
         return None
     return crc & 0xFFFFFFFF
+
+
+def open_snapshot(src) -> TACZReader:
+    """Open a snapshot — single-file or multi-part — behind one surface.
+
+    A multi-part snapshot directory (or its ``manifest.json``) yields a
+    :class:`repro.io.parallel.MultiPartReader`; anything else — a
+    ``.tacz`` path, raw bytes, or a seekable file object — yields a
+    plain :class:`TACZReader`.  Both expose the same read surface
+    (``read``/``read_roi``/``subblock_keys``/``level_signature``/...),
+    which is what lets the serving stack treat them interchangeably.
+
+    :param src: snapshot path (file or directory), bytes, or file object.
+    :returns: an open reader; the caller owns :meth:`TACZReader.close`.
+    :raises ValueError: if the snapshot fails validation.
+    :raises OSError: if the path cannot be opened.
+    """
+    from . import manifest as _manifest
+    if _manifest.is_multipart(src):
+        from .parallel import MultiPartReader
+        return MultiPartReader(src)
+    return TACZReader(src)
 
 
 def read(path) -> list[np.ndarray]:

@@ -118,6 +118,10 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
     compress-time entropy stage already materialized
     (``SZResult.extras["entropy"]``) instead of re-encoding the same
     single stream — the write-path memoization the ROADMAP tracked.
+
+    Artifacts with an *empty* result list (a parallel part writer's stub
+    for a level whose every sub-block lives in other parts) serialize to
+    a head + mask section only: no codebook, no payloads.
     """
     art = lr.artifacts
     if art is None:
@@ -144,8 +148,11 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
         eb=float(lr.eb), n_values=int(lr.n_values), density=float(lr.density))
 
     # --- shared codebook section (one per level, paper Alg. 4) -------------
+    # (omitted, codebook_len = 0, when this part holds no payloads at all)
     memo = None
-    if lr.she:
+    if not art.results:
+        cb = None
+    elif lr.she:
         cb = art.codebook
     else:
         # gsp/global levels: one payload.  The compress-time entropy stage
@@ -161,9 +168,10 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
         else:
             cb = huffman.build_codebook(np.asarray(r0.codes,
                                                    dtype=np.int64))
-    cb_bytes = huffman.serialize_codebook(cb)
-    entry.codebook_off, entry.codebook_len = append(cb_bytes)
-    entry.codebook_crc = zlib.crc32(cb_bytes)
+    if art.results:
+        cb_bytes = huffman.serialize_codebook(cb)
+        entry.codebook_off, entry.codebook_len = append(cb_bytes)
+        entry.codebook_crc = zlib.crc32(cb_bytes)
 
     # --- validity mask section (packbits + zlib; omitted when all-True) ----
     mask = np.asarray(art.mask, dtype=bool)
@@ -174,6 +182,10 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
         entry.mask_compressor = fmt.COMPRESSOR_ZLIB
 
     # --- sub-block payloads (byte-aligned, independently decodable) --------
+    level_comp = resolve_payload_codec(payload_codec)
+    entry.payload_compressor = level_comp
+    if not art.results:
+        return bytes(blob), entry
     if art.subblocks:
         subblocks, results = art.subblocks, art.results
         origins = [sb.cell_origin(art.unit) for sb in subblocks]
@@ -190,8 +202,6 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
     else:
         payloads = she.encode_brick_payloads(
             cb, [np.asarray(r.codes, dtype=np.int64) for r in results])
-    level_comp = resolve_payload_codec(payload_codec)
-    entry.payload_compressor = level_comp
     for r, (packed, nbits), origin, size in zip(results, payloads,
                                                 origins, sizes):
         betas = _betas_bytes(r)
@@ -236,6 +246,19 @@ def _nudge(q: queue.Queue) -> None:
     try:
         q.put_nowait(_SENTINEL)
     except queue.Full:   # worker is mid-item; it re-checks liveness next get
+        pass
+
+
+def _reap_sync(f, tmp: str) -> None:
+    """GC finalizer for a ``background=False`` writer abandoned without
+    close()/abort(): close the fd and drop the never-published tmp."""
+    try:
+        f.close()
+    except OSError:      # pragma: no cover - already closed
+        pass
+    try:
+        os.remove(tmp)
+    except OSError:
         pass
 
 
@@ -304,6 +327,12 @@ class TACZWriter:
     :param payload_codec: v2 lossless byte pass — ``"auto"`` (zstd, zlib
         fallback), ``"zstd"``, ``"zlib"``, or ``"none"`` (v1 payloads).
     :param queue_depth: bounded encode queue length (≥1).
+    :param background: run the encoder on a background thread (the
+        double-buffering default).  ``background=False`` encodes inline
+        in the calling thread — ``add_level`` then blocks but never
+        contends for the GIL with a second thread, which is what a
+        caller that *is already* a dedicated worker wants (each part
+        worker of ``repro.io.parallel`` writes this way).
     :raises ValueError: on an unknown ``payload_codec`` name.
     :raises OSError: if the tmp file cannot be created.
     """
@@ -312,7 +341,8 @@ class TACZWriter:
                  algorithm: str = "lor_reg", she: bool = True,
                  strategy: str | None = None, sz_block: int = 6,
                  batched: bool = True, lorenzo_engine: str = "auto",
-                 payload_codec: str = "auto", queue_depth: int = 2):
+                 payload_codec: str = "auto", queue_depth: int = 2,
+                 background: bool = True):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
         resolve_payload_codec(payload_codec)   # fail fast on bad names
@@ -324,17 +354,29 @@ class TACZWriter:
         self._f.write(fmt.pack_header())
         self._off = fmt.HEADER_SIZE
         self._entries: list[fmt.LevelEntry] = []
+        #: index CRC of the published file (set by :meth:`close` — the
+        #: same value ``probe_index_crc`` reads back from the footer)
+        self.index_crc: int | None = None
         self._err: BaseException | None = None
-        self._queue: queue.Queue = queue.Queue(maxsize=max(1, queue_depth))
+        self._background = bool(background)
         self._finalized = False          # close() published the file
         self._aborted = False            # tmp dropped; writer unusable
         self._sentinel_sent = False
-        self._thread = threading.Thread(
-            target=_worker_loop,
-            args=(weakref.ref(self), self._queue, self._f, self._tmp),
-            daemon=True)
-        self._thread.start()
-        self._reaper = weakref.finalize(self, _nudge, self._queue)
+        if self._background:
+            self._queue: queue.Queue = queue.Queue(
+                maxsize=max(1, queue_depth))
+            self._thread = threading.Thread(
+                target=_worker_loop,
+                args=(weakref.ref(self), self._queue, self._f, self._tmp),
+                daemon=True)
+            self._thread.start()
+            self._reaper = weakref.finalize(self, _nudge, self._queue)
+        else:
+            self._queue = None
+            self._thread = None
+            # still reap an abandoned writer: close the fd, drop the tmp
+            self._reaper = weakref.finalize(self, _reap_sync, self._f,
+                                            self._tmp)
 
     # ------------------------------ producer -------------------------------
 
@@ -369,13 +411,20 @@ class TACZWriter:
                 "keep_artifacts=True")
         self._put(("level", lr))
 
-    def close(self) -> str:
+    def close(self, *, publish: bool = True) -> str:
         """Drain the queue, write index + footer, publish atomically.
 
         Raises the background encoder's error (if any) — even when that
         error already surfaced through ``add_level`` — after dropping the
         tmp file; the destination path is never reported as written
         unless it actually was.
+
+        ``publish=False`` finalizes the file completely (index, footer,
+        fsync, fd closed) but leaves it at ``<path>.tmp`` and returns
+        that tmp path — the multi-part writer's two-phase commit: every
+        part finalizes first, and only when all of them succeeded are
+        they renamed into place, so a failing sibling can never leave a
+        previously published snapshot half-replaced.
         """
         if self._finalized:
             return self.path
@@ -387,17 +436,19 @@ class TACZWriter:
                 raise self._err
             index = fmt.pack_index(self._entries)
             self._f.write(index)
+            self.index_crc = fmt.index_crc(index)
             self._f.write(fmt.pack_footer(self._off, len(index),
-                                          fmt.index_crc(index)))
+                                          self.index_crc))
             self._f.flush()
             os.fsync(self._f.fileno())
             self._f.close()
-            os.replace(self._tmp, self.path)
+            if publish:
+                os.replace(self._tmp, self.path)
         except BaseException:
             self.abort()
             raise
         self._finalized = True
-        return self.path
+        return self.path if publish else self._tmp
 
     def abort(self) -> None:
         """Drop the partial file (used on error paths)."""
@@ -427,8 +478,10 @@ class TACZWriter:
         if not self._sentinel_sent:
             self._sentinel_sent = True
             self._reaper.detach()   # orderly shutdown owns cleanup now
-            self._queue.put(_SENTINEL)
-        self._thread.join()
+            if self._background:
+                self._queue.put(_SENTINEL)
+        if self._thread is not None:
+            self._thread.join()
 
     def _check_live(self) -> None:
         if self._finalized or self._aborted or self._sentinel_sent:
@@ -437,7 +490,14 @@ class TACZWriter:
             raise self._err
 
     def _put(self, item) -> None:
-        self._queue.put(item)
+        if self._background:
+            self._queue.put(item)
+            return
+        try:                  # inline encode: errors surface immediately
+            self._append_level(self._encode(item))
+        except BaseException as exc:
+            self._err = exc   # close() must keep refusing to publish
+            raise
 
     def _encode(self, item) -> LevelResult:
         if item[0] == "level":

@@ -38,7 +38,7 @@ import numpy as np
 from repro.core import sz
 from repro.io import format as fmt
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
-                             probe_index_crc)
+                             open_snapshot, probe_index_crc)
 
 __all__ = ["CacheKey", "SubBlockCache", "DecodePlanner", "PlannedLevel",
            "RegionServer", "WHOLE_LEVEL"]
@@ -344,7 +344,9 @@ class RegionServer:
     ~linearly with N.  The :class:`repro.serving.sharded.ShardedRegionRouter`
     scatter-gathers such servers back into full, bit-identical crops.
 
-    :param path: path of the ``.tacz`` snapshot to serve.
+    :param path: path of the snapshot to serve — a ``.tacz`` file or a
+        multi-part snapshot directory (opened via
+        :func:`repro.io.open_snapshot`; the reader surface is the same).
     :param cache_bytes: :class:`SubBlockCache` byte budget (~25 % of the
         decoded level bytes is a good default for overlapping workloads).
     :param auto_reload: run :meth:`maybe_reload` before every batch.
@@ -372,7 +374,7 @@ class RegionServer:
         # immediately when idle), so republishing never accumulates fds
         self._inflight: dict[int, int] = {}
         self._retired: dict[int, TACZReader] = {}
-        self._reader = TACZReader(self.path)
+        self._reader = open_snapshot(self.path)
         self._owned = self._compute_owned(self._reader)
         self._planner = DecodePlanner(self._reader, self._owned)
 
@@ -437,7 +439,7 @@ class RegionServer:
             if crc == self.snapshot_crc:                  # raced reload
                 return False
             try:
-                reader = TACZReader(self.path)
+                reader = open_snapshot(self.path)
             except (OSError, ValueError):
                 return False
             # in-flight requests may still hold the old reader — close it

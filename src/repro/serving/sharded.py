@@ -38,16 +38,15 @@ fallback) instead of silently mixing generations.
 """
 from __future__ import annotations
 
-import hashlib
 import json
-import struct
 import threading
 from concurrent.futures import ThreadPoolExecutor, wait
 
 import numpy as np
 
+from repro.io import placement
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
-                             probe_index_crc)
+                             open_snapshot, probe_index_crc)
 
 from .client import RegionClient
 from .regions import CacheKey, DecodePlanner
@@ -73,13 +72,19 @@ class ShardMap:
     so a router and its shard servers agree as long as they were built
     from the same serialized config (:meth:`to_json`/:meth:`from_json`).
 
+    The scoring function itself lives in :mod:`repro.io.placement` — the
+    same rule the multi-part parallel writer partitions part files with,
+    so a map built from a multi-part manifest's ``partition`` config
+    (``ShardMap.from_dict(reader.partition)``) assigns each shard
+    exactly the keys its part file holds.
+
     :param shards: shard identifiers (non-empty unique strings) — usually
         the names the deployment uses to look up endpoints.
     :param seed: placement salt; changing it reshuffles every key.
     :raises ValueError: on an empty/duplicate shard list or empty ids.
     """
 
-    _ALGORITHM = "rendezvous-blake2b64"
+    _ALGORITHM = placement.ALGORITHM
 
     def __init__(self, shards, *, seed: int = 0):
         shards = [str(s) for s in shards]
@@ -95,10 +100,7 @@ class ShardMap:
     # ------------------------------ placement ------------------------------
 
     def _score(self, shard: str, key: CacheKey) -> int:
-        h = hashlib.blake2b(digest_size=8)
-        h.update(struct.pack("<qqq", self.seed, int(key[0]), int(key[1])))
-        h.update(shard.encode("utf-8"))
-        return int.from_bytes(h.digest(), "little")
+        return placement.score(self.seed, key, shard)
 
     def owner(self, key: CacheKey) -> str:
         """The shard owning one ``(level, sub_block)`` key.
@@ -108,7 +110,7 @@ class ShardMap:
             for single-payload levels.
         :returns: the owning shard id.
         """
-        return max(self.shards, key=lambda s: (self._score(s, key), s))
+        return placement.owner(self.shards, self.seed, key)
 
     def partition(self, keys) -> dict[str, list[CacheKey]]:
         """Group keys by owner.
@@ -220,9 +222,10 @@ class ShardedRegionRouter:
     from the local file (``TACZReader.read_level_box``) — unless
     ``local_fallback=False``, in which case the batch raises.
 
-    :param path: local path of the ``.tacz`` snapshot (used for planning
-        and for the fallback decode; on a multi-host deployment this is
-        the replicated copy of the same published file).
+    :param path: local path of the snapshot — a ``.tacz`` file or a
+        multi-part snapshot directory — used for planning and for the
+        fallback decode; on a multi-host deployment this is the
+        replicated copy of the same published snapshot.
     :param shard_map: the :class:`ShardMap` the shard servers were
         configured with (same serialized config — ownership must agree).
     :param endpoints: ``{shard_id: url}`` or ``{shard_id: [url, ...]}``
@@ -234,14 +237,22 @@ class ShardedRegionRouter:
     :param auto_reload: revalidate the local snapshot (footer CRC) at the
         start of every batch, like the servers do per request.
     :param max_workers: concurrent shard requests per batch.
-    :raises ValueError: if the file fails TACZ validation.
-    :raises OSError: if the file cannot be opened.
+    :param load_balance: rotate read traffic across a shard's healthy
+        endpoints (round-robin per request group) instead of always
+        hitting the primary and treating replicas as failover-only.  An
+        endpoint that fails is demoted to last place until it next
+        succeeds; correctness is unchanged either way (every endpoint of
+        a shard serves identical bytes, and failures still walk the
+        remaining endpoints then the local fallback).
+    :raises ValueError: if the snapshot fails validation.
+    :raises OSError: if the snapshot cannot be opened.
     """
 
     def __init__(self, path, shard_map: ShardMap,
                  endpoints: dict[str, str | list[str]], *,
                  timeout: float = 30.0, local_fallback: bool = True,
-                 auto_reload: bool = True, max_workers: int = 8):
+                 auto_reload: bool = True, max_workers: int = 8,
+                 load_balance: bool = False):
         self.path = str(path)
         self.shard_map = shard_map
         self.endpoints: dict[str, list[str]] = {
@@ -250,11 +261,14 @@ class ShardedRegionRouter:
         self.timeout = float(timeout)
         self.local_fallback = bool(local_fallback)
         self.auto_reload = bool(auto_reload)
+        self.load_balance = bool(load_balance)
+        self._rotation: dict[str, int] = {}      # per-shard round-robin
+        self._unhealthy: set[str] = set()        # demoted endpoint urls
         self._clients: dict[str, RegionClient] = {}
         self._pool = ThreadPoolExecutor(max_workers=max(1, int(max_workers)),
                                         thread_name_prefix="shard-router")
         self._lock = threading.Lock()
-        self._reader = TACZReader(self.path)
+        self._reader = open_snapshot(self.path)
         self._planner = DecodePlanner(self._reader)
         # readers displaced by a reload, with per-reader in-flight counts
         # (same drain discipline as RegionServer: each retired reader
@@ -305,7 +319,7 @@ class ShardedRegionRouter:
             if crc == self.snapshot_crc:
                 return False
             try:
-                reader = TACZReader(self.path)
+                reader = open_snapshot(self.path)
             except (OSError, ValueError):
                 return False
             old = self._reader
@@ -331,13 +345,41 @@ class ShardedRegionRouter:
         with self._lock:   # += from pool threads is not atomic
             self.counters[counter] += 1
 
+    def _endpoint_order(self, shard: str) -> list[str]:
+        """The order this request group walks the shard's endpoints.
+
+        Failover-only (default): primary first, replicas after, as
+        configured.  With ``load_balance=True``: round-robin over the
+        endpoint list per request group, with endpoints whose last
+        attempt failed demoted to the end — reads spread across healthy
+        replicas instead of pinning the primary.
+        """
+        urls = self.endpoints.get(shard, ())
+        if not self.load_balance or len(urls) < 2:
+            return list(urls)
+        with self._lock:
+            k = self._rotation[shard] = self._rotation.get(shard, -1) + 1
+            unhealthy = set(self._unhealthy)
+        k %= len(urls)
+        rotated = list(urls[k:]) + list(urls[:k])
+        return ([u for u in rotated if u not in unhealthy]
+                + [u for u in rotated if u in unhealthy])
+
+    def _mark_endpoint(self, url: str, healthy: bool) -> None:
+        with self._lock:
+            if healthy:
+                self._unhealthy.discard(url)
+            else:
+                self._unhealthy.add(url)
+
     def _fetch_group(self, rd: TACZReader, shard: str, li: int,
                      parts: list[_Part]) -> list[np.ndarray]:
         """Crops for one (shard, level) group, in ``parts`` order.
 
-        Tries the shard's endpoints in order; every failure mode —
-        unreachable, HTTP error, stale snapshot generation, mis-shaped
-        response — moves on, and the local reader is the last resort.
+        Tries the shard's endpoints (see :meth:`_endpoint_order`); every
+        failure mode — unreachable, HTTP error, stale snapshot
+        generation, mis-shaped response — moves on, and the local reader
+        is the last resort.
 
         :raises RuntimeError: when every endpoint failed and
             ``local_fallback`` is off.
@@ -347,7 +389,7 @@ class ShardedRegionRouter:
                    for p in parts]
         want_crc = rd.index_crc
         errors: list[str] = []
-        for url in self.endpoints.get(shard, ()):
+        for url in self._endpoint_order(shard):
             try:
                 self._count("shard_requests")
                 crc, results = self._client(url).regions_meta(
@@ -364,9 +406,11 @@ class ShardedRegionRouter:
                             f"shard returned box {roi.box}, "
                             f"wanted {part.isect}")
                     crops.append(roi.data)
+                self._mark_endpoint(url, healthy=True)
                 return crops
             except Exception as exc:   # noqa: BLE001 — isolate per endpoint
                 self._count("endpoint_failures")
+                self._mark_endpoint(url, healthy=False)
                 errors.append(f"{url}: {exc}")
         if not self.local_fallback:
             raise RuntimeError(
@@ -492,9 +536,14 @@ class ShardedRegionRouter:
 
         :returns: dict with ``batches``, ``shard_requests``,
             ``endpoint_failures``, ``local_fallbacks``, ``snapshot_crc``,
-            and the shard-map config.
+            the shard-map config, and — when read load-balancing is on —
+            the currently demoted endpoints.
         """
         s = dict(self.counters)
         s["snapshot_crc"] = self.snapshot_crc
         s["shard_map"] = self.shard_map.to_dict()
+        s["load_balance"] = self.load_balance
+        if self.load_balance:
+            with self._lock:
+                s["unhealthy_endpoints"] = sorted(self._unhealthy)
         return s

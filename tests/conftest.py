@@ -1,0 +1,86 @@
+"""Shared test fixtures: the AMR snapshot factory (ISSUE 5).
+
+``make_amr_snapshot`` replaces the compress-and-write boilerplate that
+was duplicated across ``test_tacz.py``, ``test_region_serving.py``, and
+``test_sharded_serving.py``: one call builds (or reuses) a compressed
+AMR dataset and writes it as a single-file ``.tacz`` snapshot or — with
+``parts=N`` — a multi-part ``.taczd`` snapshot directory.
+
+The expensive part (synthesize + ``compress_amr``) is cached per
+parameter set for the whole session, so modules sharing a dataset pay
+for compression once; the snapshot *file* is written fresh per call
+(tests mutate/republish files, never the cached result).
+"""
+import os
+from types import SimpleNamespace
+
+import pytest
+
+from repro import io as tacz
+from repro.core import amr, hybrid
+from repro.io.parallel import write_multipart
+
+#: (dataset args) -> (ds, res, eb); session-wide compression cache.
+_COMPRESS_CACHE: dict = {}
+
+
+def _default_densities(levels: int) -> list[float]:
+    """A deterministic density split for an n-level synthetic dataset
+    (``synthetic_amr`` normalizes the sum itself)."""
+    return [0.35, 0.65, 0.45, 0.55, 0.25, 0.75][:levels] or [1.0]
+
+
+@pytest.fixture(scope="session")
+def make_amr_snapshot(tmp_path_factory):
+    """Factory fixture: ``make_amr_snapshot(levels, seed, codec, parts)``.
+
+    :param levels: synthetic level count (ignored when ``preset`` given).
+    :param seed: synthetic dataset seed.
+    :param codec: TACZ payload codec (``"auto"``/``"zlib"``/``"none"``).
+    :param parts: None → single ``.tacz`` file; N ≥ 1 → multi-part
+        ``.taczd`` snapshot directory with N parts.
+    :param preset: use ``amr.load_preset(preset)`` instead of synthesis.
+    :param shape: finest grid shape for synthetic datasets.
+    :param densities: per-level densities (default: a fixed split).
+    :param eb_rel: error bound as a fraction of the finest level's range.
+    :param mode: parallel-writer worker mode for multi-part snapshots.
+    :param name: snapshot base name inside a fresh tmp directory.
+    :returns: ``SimpleNamespace(path, res, ds, eb)``.
+    """
+    def factory(levels: int = 2, seed: int = 5, codec: str = "auto",
+                parts: int | None = None, *, preset: str | None = None,
+                shape=(32, 32, 32), densities=None, eb_rel: float = 1e-3,
+                refine_block: int | None = None, mode: str = "thread",
+                name: str = "snap"):
+        if densities is not None:
+            levels = len(densities)
+        if refine_block is None:
+            # the coarsest ratio (2^(L-1)) must divide the refine block
+            refine_block = max(4, 2 ** (levels - 1))
+        key = (levels, seed, preset, tuple(shape),
+               tuple(densities) if densities else None, eb_rel,
+               refine_block)
+        if key not in _COMPRESS_CACHE:
+            if preset is not None:
+                ds = amr.load_preset(preset)
+            else:
+                ds = amr.synthetic_amr(
+                    tuple(shape),
+                    densities=densities or _default_densities(levels),
+                    refine_block=refine_block, seed=seed)
+            eb = eb_rel * float(ds.levels[0].data.max()
+                                - ds.levels[0].data.min())
+            res = hybrid.compress_amr(ds, eb=eb)
+            _COMPRESS_CACHE[key] = (ds, res, eb)
+        ds, res, eb = _COMPRESS_CACHE[key]
+        d = tmp_path_factory.mktemp("snap")
+        if parts is None:
+            path = os.path.join(str(d), name + ".tacz")
+            tacz.write(path, res, payload_codec=codec)
+        else:
+            path = os.path.join(str(d), name + ".taczd")
+            write_multipart(path, res, parts=parts, mode=mode,
+                            payload_codec=codec)
+        return SimpleNamespace(path=path, res=res, ds=ds, eb=eb)
+
+    return factory

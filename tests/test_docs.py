@@ -7,6 +7,8 @@ import re
 import pytest
 
 from repro.io import format as fmt
+from repro.io import manifest as mfst
+from repro.io import placement
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -81,20 +83,42 @@ def test_format_doc_framing_constants(format_doc):
     assert f"rank ≤ {fmt.MAX_RANK}" in format_doc
 
 
+def test_format_doc_multipart_manifest_spec(format_doc):
+    """§9 (multi-part snapshots) must stay in sync with the manifest and
+    placement modules: names, magic, version, algorithm, field table."""
+    assert f'`"{mfst.MANIFEST_MAGIC}"`' in format_doc
+    assert f"currently **{mfst.MANIFEST_VERSION}**" in format_doc
+    assert f"`{placement.ALGORITHM}`" in format_doc
+    assert f"`{mfst.MANIFEST_NAME}`" in format_doc
+    assert f"`{mfst.part_name(0)}`" in format_doc
+    for field in ["magic", "version", "n_levels", "subblocks",
+                  "partition", "parts", "crc32"]:
+        assert f"| `{field}` |" in format_doc, \
+            f"manifest field {field} missing from the §9 table"
+    # the CRC rule (canonical serialization) must be spelled out
+    assert "sorted keys" in format_doc
+
+
 def test_serving_doc_covers_required_topics(serving_doc):
-    """The architecture guide must keep covering what ISSUE 4 scoped."""
+    """The architecture guide must keep covering what ISSUEs 4 + 5
+    scoped."""
     for needle in ["SubBlockCache", "DecodePlanner", "RegionServer",
                    "POST /v1/regions", "GET /v1/meta", "X-TACZ-",
                    "cache_bytes", "maybe_reload", "ShardMap",
                    "ShardedRegionRouter", "rendezvous", "index_crc",
-                   "tacz_format.md"]:
+                   "tacz_format.md", "load_balance", "manifest.json",
+                   "open_snapshot", "ParallelTACZWriter", "open_parts"]:
         assert needle in serving_doc, f"serving.md lost coverage: {needle}"
 
 
 def test_docs_reference_live_apis(serving_doc):
     """Spot-check that the APIs the guide names still exist."""
+    from repro import io as repro_io
     from repro import serving
+    from repro.io.parallel import MultiPartReader
     from repro.io.reader import TACZReader
+    from repro.serving.sharded import ShardedRegionRouter
+    import inspect
     for attr in ("SubBlockCache", "DecodePlanner", "RegionServer",
                  "ShardMap", "ShardedRegionRouter", "RegionClient",
                  "serve"):
@@ -102,3 +126,10 @@ def test_docs_reference_live_apis(serving_doc):
     for attr in ("subblock_keys", "level_signature", "read_level_box",
                  "read_roi"):
         assert hasattr(TACZReader, attr)
+    for attr in ("open_snapshot", "write_multipart", "ParallelTACZWriter",
+                 "MultiPartReader"):
+        assert hasattr(repro_io, attr)
+    for attr in ("open_parts", "partition", "part_names"):
+        assert hasattr(MultiPartReader, attr)
+    assert "load_balance" in inspect.signature(
+        ShardedRegionRouter.__init__).parameters

@@ -32,13 +32,9 @@ BOXES = [((0, 8), (0, 8), (0, 8)),
 
 
 @pytest.fixture(scope="module")
-def snapshot(tmp_path_factory):
-    ds = amr.load_preset("run1_z10")
-    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
-    res = hybrid.compress_amr(ds, eb=eb)
-    path = os.path.join(str(tmp_path_factory.mktemp("serving")), "s.tacz")
-    tacz.write(path, res)
-    return path, res
+def snapshot(make_amr_snapshot):
+    snap = make_amr_snapshot(preset="run1_z10", name="s")
+    return snap.path, snap.res
 
 
 def _assert_same_roi(got, ref):

@@ -37,14 +37,9 @@ BOXES = [((0, 8), (0, 8), (0, 8)),
 
 
 @pytest.fixture(scope="module")
-def snapshot(tmp_path_factory):
-    ds = amr.synthetic_amr((32, 32, 32), densities=[0.35, 0.65],
-                           refine_block=4, seed=5)
-    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
-    res = hybrid.compress_amr(ds, eb=eb)
-    path = os.path.join(str(tmp_path_factory.mktemp("sharded")), "s.tacz")
-    tacz.write(path, res)
-    return path, res
+def snapshot(make_amr_snapshot):
+    snap = make_amr_snapshot(densities=[0.35, 0.65], seed=5, name="s")
+    return snap.path, snap.res
 
 
 @pytest.fixture(scope="module")
@@ -219,6 +214,48 @@ def test_router_replica_retry_avoids_fallback(snapshot):
                                  single.get_regions(BOXES))
             assert router.counters["endpoint_failures"] > 0
             assert router.counters["local_fallbacks"] == 0
+
+
+def test_router_load_balances_across_replicas(snapshot):
+    """With load_balance=True, a shard's read traffic must spread across
+    its healthy replica endpoints (both see work) — and the reassembled
+    bytes must be unchanged."""
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=2)
+    with RegionServer(path) as single, shard_fleet(path, m) as (urls, _):
+        # a second full replica endpoint for shard s0
+        with shard_fleet(path, ShardMap(["s0"], seed=2)) as (r_urls,
+                                                            r_servers):
+            routed = {"s0": [urls["s0"], r_urls["s0"]], "s1": urls["s1"]}
+            with ShardedRegionRouter(path, m, routed,
+                                     load_balance=True) as router:
+                ref = single.get_regions(BOXES)
+                for _ in range(4):             # several batches → rotation
+                    _assert_same_regions(router.get_regions(BOXES), ref)
+                assert router.counters["local_fallbacks"] == 0
+                assert router.counters["endpoint_failures"] == 0
+                assert router.stats()["unhealthy_endpoints"] == []
+            replica = r_servers["s0"].region_server
+            s = replica.cache.stats()
+            assert s["hits"] + s["misses"] > 0     # the replica saw reads
+
+
+def test_router_load_balance_demotes_dead_endpoint(snapshot):
+    """A dead replica in the rotation is demoted after its first failure:
+    batches keep succeeding off the healthy endpoint, bytes unchanged."""
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=2)
+    with RegionServer(path) as single, shard_fleet(path, m) as (urls, _):
+        routed = {"s0": [dead_url(), urls["s0"]], "s1": urls["s1"]}
+        with ShardedRegionRouter(path, m, routed,
+                                 load_balance=True) as router:
+            ref = single.get_regions(BOXES)
+            for _ in range(3):
+                _assert_same_regions(router.get_regions(BOXES), ref)
+            assert router.counters["local_fallbacks"] == 0
+            assert router.counters["endpoint_failures"] > 0
+            assert router.stats()["unhealthy_endpoints"] == \
+                [routed["s0"][0]]
 
 
 def test_router_missing_endpoint_uses_local_fallback(snapshot):

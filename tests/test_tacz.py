@@ -42,13 +42,10 @@ def _assert_roi_matches(path, res, box):
 
 
 @pytest.mark.parametrize("preset", ["run1_z10", "run2_t3"])
-def test_full_roundtrip_bit_identical(tmp_path, preset):
-    ds = amr.load_preset(preset)
-    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
-    res = hybrid.compress_amr(ds, eb=eb)
-    path = _roundtrip(tmp_path, res)
-    recons = tacz.read(path)
-    for lr, rec in zip(res.levels, recons):
+def test_full_roundtrip_bit_identical(make_amr_snapshot, preset):
+    snap = make_amr_snapshot(preset=preset)
+    recons = tacz.read(snap.path)
+    for lr, rec in zip(snap.res.levels, recons):
         assert rec.dtype == np.float32
         np.testing.assert_array_equal(lr.recon, rec)
 
@@ -119,17 +116,14 @@ def test_abandoned_writer_is_reaped_at_gc(tmp_path):
     assert not os.path.exists(path)
 
 
-def test_streaming_write_matches_oneshot(tmp_path):
+def test_streaming_write_matches_oneshot(tmp_path, make_amr_snapshot):
     """add_level (background-thread encode) ≡ compress_amr + write."""
-    ds = amr.synthetic_amr((32, 32, 32), densities=[0.23, 0.77],
-                           refine_block=4, seed=3)
-    res = hybrid.compress_amr(ds, eb=1e-3)
-    p1 = _roundtrip(tmp_path, res, "oneshot.tacz")
+    snap = make_amr_snapshot(densities=[0.23, 0.77], seed=3)
     p2 = os.path.join(str(tmp_path), "streamed.tacz")
-    with tacz.TACZWriter(p2, eb=1e-3) as w:
-        for lvl in ds.levels:
+    with tacz.TACZWriter(p2, eb=snap.eb) as w:
+        for lvl in snap.ds.levels:
             w.add_level(lvl.data, lvl.mask, ratio=lvl.ratio)
-    for a, b in zip(tacz.read(p1), tacz.read(p2)):
+    for a, b in zip(tacz.read(snap.path), tacz.read(p2)):
         np.testing.assert_array_equal(a, b)
 
 
@@ -158,17 +152,14 @@ def test_tmp_file_never_left_behind(tmp_path):
 # ------------------------------ ROI decode ----------------------------------
 
 
-def test_roi_equals_cropped_full_decode(tmp_path):
-    ds = amr.load_preset("run1_z10")
-    eb = 1e-3 * float(ds.levels[0].data.max() - ds.levels[0].data.min())
-    res = hybrid.compress_amr(ds, eb=eb)
-    path = _roundtrip(tmp_path, res)
-    n = ds.finest_shape[0]
+def test_roi_equals_cropped_full_decode(make_amr_snapshot):
+    snap = make_amr_snapshot(preset="run1_z10")
+    n = snap.ds.finest_shape[0]
     for box in [((0, 8), (0, 8), (0, 8)),
                 ((5, 23), (11, 40), (2, 9)),
                 ((n - 8, n), (n - 16, n), (0, n)),
                 ((0, n), (0, n), (0, n))]:
-        _assert_roi_matches(path, res, box)
+        _assert_roi_matches(snap.path, snap.res, box)
 
 
 def test_roi_decodes_only_intersecting_subblocks(tmp_path):
@@ -204,17 +195,15 @@ def test_roi_empty_and_out_of_range_box(tmp_path):
 # ----------------------- format v2 + write memoization ----------------------
 
 
-def test_v2_payload_pass_shrinks_and_roundtrips(tmp_path):
+def test_v2_payload_pass_shrinks_and_roundtrips(make_amr_snapshot):
     """v2's lossless byte pass over the Huffman payload sections must be
     recorded per level + per sub-block and decode bit-identically
     (including ROI reads through the prefix-stop path)."""
-    ds = amr.load_preset("run1_z10")
-    res = hybrid.compress_amr(ds, eb=1e-3)
-    raw = os.path.join(str(tmp_path), "raw.tacz")
-    packed = os.path.join(str(tmp_path), "packed.tacz")
-    tacz.write(raw, res, payload_codec="none")
-    tacz.write(packed, res, payload_codec="zlib")   # deterministic codec
-    rd = tacz.TACZReader(packed)
+    raw = make_amr_snapshot(preset="run1_z10", codec="none", name="raw")
+    packed = make_amr_snapshot(preset="run1_z10", codec="zlib",
+                               name="packed")   # deterministic codec
+    res = packed.res
+    rd = tacz.TACZReader(packed.path)
     assert rd.version == fmt.TACZ_VERSION == 2
     assert all(e.payload_compressor == fmt.COMPRESSOR_ZLIB
                for e in rd.levels)
@@ -222,9 +211,9 @@ def test_v2_payload_pass_shrinks_and_roundtrips(tmp_path):
     assert fmt.COMPRESSOR_ZLIB in used              # some payloads shrank
     for lr, rec in zip(res.levels, rd.read()):
         np.testing.assert_array_equal(lr.recon, rec)
-    _assert_roi_matches(packed, res, ((5, 23), (11, 40), (2, 9)))
+    _assert_roi_matches(packed.path, res, ((5, 23), (11, 40), (2, 9)))
     # the raw file records COMPRESSOR_NONE everywhere and decodes the same
-    rd_raw = tacz.TACZReader(raw)
+    rd_raw = tacz.TACZReader(raw.path)
     assert all(sb.compressor == fmt.COMPRESSOR_NONE
                for e in rd_raw.levels for sb in e.subblocks)
     for a, b in zip(rd_raw.read(), rd.read()):
