@@ -1,0 +1,94 @@
+"""Batched entropy engine vs the serial oracle (ISSUE 6).
+
+The claim being tracked: the :mod:`repro.core.entropy` engines remove the
+per-payload launch/walk overhead of the Huffman stage.
+
+  * **Decode** — the serial oracle walks every payload bit by bit in a
+    Python loop; the batched engine decodes all payloads of a level in
+    lockstep (one vectorized step per emitted symbol).  Gate: at ≥256
+    payloads under one shared codebook, batched decode is **≥3×** the
+    serial per-payload walk.
+  * **Encode** — the serial path scatters one payload per launch; the
+    batched engine packs the whole payload list in one offset-scatter
+    pass over the pooled stream.  Gate: batched whole-level encode beats
+    the per-payload loop (≥1×; typically well above).
+
+Both gates run on synthetic quantization-code payloads shaped like SHE
+levels (geometric-ish code distribution around the zero bin).  The bench
+also re-asserts bit-identity — batched encode bytes and decode arrays
+must equal the oracle's exactly, payload by payload — so a speedup can
+never come from drifting off the format.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import huffman
+from repro.core.entropy import BatchedEngine, NumpyEngine
+
+from .common import timed, write_csv
+
+DECODE_BAR = 3.0
+ENCODE_BAR = 1.0
+
+
+def _payloads(n_payloads: int, n_codes: int, seed: int = 0):
+    """Synthetic per-brick code streams under one shared codebook —
+    two-sided geometric around the zero bin, like Lorenzo residuals."""
+    rng = np.random.default_rng(seed)
+    mag = rng.geometric(0.35, size=(n_payloads, n_codes)) - 1
+    sign = rng.choice((-1, 1), size=(n_payloads, n_codes))
+    codes = (mag * sign).astype(np.int64)
+    cb = huffman.build_codebook(codes.ravel())
+    return cb, [codes[i] for i in range(n_payloads)]
+
+
+def run(quick: bool = False):
+    n_payloads = 256 if quick else 1024
+    n_codes = 512                         # one 8**3 unit brick per payload
+    cb, codes_list = _payloads(n_payloads, n_codes)
+    serial = NumpyEngine()
+    batched = BatchedEngine()
+
+    # -- encode: one pooled offset-scatter pass vs one launch per payload
+    enc_b, t_enc_b = timed(batched.encode_payloads, cb, codes_list,
+                           repeat=3)
+    enc_s, t_enc_s = timed(serial.encode_payloads, cb, codes_list)
+    assert enc_b == enc_s, "batched encode drifted off the serial bytes"
+    enc_speedup = t_enc_s / max(t_enc_b, 1e-9)
+
+    # -- decode: lockstep canonical walk vs per-payload serial bit-walk
+    payloads = [(blob, nbits, n_codes) for blob, nbits in enc_s]
+    dec_b, t_dec_b = timed(batched.decode_payloads, cb, payloads,
+                           repeat=3)
+    dec_s, t_dec_s = timed(serial.decode_payloads, cb, payloads)
+    for a, b, ref in zip(dec_b, dec_s, codes_list):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, ref)
+    dec_speedup = t_dec_s / max(t_dec_b, 1e-9)
+
+    total_bits = sum(nbits for _, nbits in enc_s)
+    rows = [(n_payloads, n_codes, total_bits,
+             round(t_enc_s, 4), round(t_enc_b, 4), round(enc_speedup, 2),
+             round(t_dec_s, 4), round(t_dec_b, 4), round(dec_speedup, 2))]
+    path = write_csv("entropy",
+                     ["payloads", "codes_per_payload", "total_bits",
+                      "encode_serial_s", "encode_batched_s",
+                      "encode_speedup", "decode_serial_s",
+                      "decode_batched_s", "decode_speedup"],
+                     rows)
+    if dec_speedup < DECODE_BAR:
+        raise AssertionError(
+            f"entropy acceptance regressed: batched decode is only "
+            f"{dec_speedup:.2f}x the serial walk at {n_payloads} payloads "
+            f"(bar {DECODE_BAR}x)")
+    if enc_speedup < ENCODE_BAR:
+        raise AssertionError(
+            f"entropy acceptance regressed: batched whole-level encode is "
+            f"{enc_speedup:.2f}x the per-payload loop (must beat it)")
+    return {"csv": path, "decode_speedup": round(dec_speedup, 2),
+            "encode_speedup": round(enc_speedup, 2)}
+
+
+if __name__ == "__main__":
+    print(run(quick=True))

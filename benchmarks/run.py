@@ -10,9 +10,9 @@ import argparse
 import json
 import time
 
-from . import (bench_density_sweep, bench_distributed, bench_grad_compress,
-               bench_halo, bench_kernels, bench_nast_opst,
-               bench_parallel_write, bench_partition_time,
+from . import (bench_density_sweep, bench_distributed, bench_entropy,
+               bench_grad_compress, bench_halo, bench_kernels,
+               bench_nast_opst, bench_parallel_write, bench_partition_time,
                bench_power_spectrum, bench_rate_distortion,
                bench_region_serving, bench_roi_decode,
                bench_sharded_serving, bench_she, bench_throughput)
@@ -33,6 +33,7 @@ BENCHES = [
     ("region_serving (TACZ serving)", bench_region_serving),
     ("sharded_serving (TACZ serving)", bench_sharded_serving),
     ("parallel_write (TACZ multi-part)", bench_parallel_write),
+    ("entropy (batched Huffman engines)", bench_entropy),
 ]
 
 

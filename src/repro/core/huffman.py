@@ -175,13 +175,13 @@ def encoded_size_bits(cb: Codebook, data: np.ndarray | None = None, *,
                       freqs: np.ndarray | None = None) -> int:
     """Exact payload size in bits without materializing the bitstream."""
     if data is not None:
-        data = np.asarray(data).ravel()
-        symbols, freqs = np.unique(data, return_counts=True)
-    lookup = {int(s): int(l) for s, l in zip(cb.symbols, cb.lengths)}
-    total = 0
-    for s, f in zip(np.asarray(symbols), np.asarray(freqs)):
-        total += lookup[int(s)] * int(f)
-    return int(total)
+        return int(code_lengths_for(cb, data).sum())
+    symbols = np.asarray(symbols, dtype=np.int64).ravel()
+    freqs = np.asarray(freqs, dtype=np.int64).ravel()
+    if symbols.size == 0:
+        return 0
+    idx = symbol_indices(cb, symbols)
+    return int((cb.lengths[idx] * freqs).sum())
 
 
 def symbol_indices(cb: Codebook, data: np.ndarray) -> np.ndarray:
@@ -224,32 +224,14 @@ def encode(cb: Codebook, data: np.ndarray, *,
 
     ``indices`` may carry a precomputed ``symbol_indices(cb, data)`` so
     callers that already priced the stream skip the second lookup pass.
+
+    Deprecated as a batch surface: this is the single-stream serial
+    oracle (``repro.core.entropy.encode_stream``).  Call sites packing
+    many payloads under one codebook should go through
+    ``entropy.get_engine(...).encode_payloads`` instead of looping here.
     """
-    data = np.asarray(data, dtype=np.int64).ravel()
-    if data.size == 0:
-        return np.zeros(0, dtype=np.uint8), 0
-    idx = symbol_indices(cb, data) if indices is None else indices
-    codes = cb.codes[idx]
-    lens = cb.lengths[idx]
-    maxlen = int(lens.max())
-    # bit-offset scatter: codeword i occupies [start_i, start_i + len_i);
-    # one vectorized pass per bit position beats materializing the dense
-    # (N, maxlen) bit matrix + boolean extract it replaces (SHE encodes the
-    # whole pooled stream in one launch, so this is a hot loop)
-    ends = np.cumsum(lens)
-    starts = ends - lens
-    nbits = int(ends[-1])
-    bitstream = np.zeros(nbits, dtype=np.uint8)
-    sel = np.ones(data.size, dtype=bool)
-    for j in range(maxlen):
-        if j > 0:
-            sel = lens > j
-            if not sel.any():
-                break
-        c, l, s = codes[sel], lens[sel], starts[sel]
-        bitstream[s + j] = (c >> (l - 1 - j)) & 1
-    packed = np.packbits(bitstream)
-    return packed, nbits
+    from . import entropy
+    return entropy.encode_stream(cb, data, indices=indices)
 
 
 def decode(cb: Codebook, packed: np.ndarray, nbits: int, n_symbols: int) -> np.ndarray:
@@ -262,40 +244,11 @@ def decode(cb: Codebook, packed: np.ndarray, nbits: int, n_symbols: int) -> np.n
     count instead of ignoring the stream.  A stream that ends mid-codeword
     raises ``ValueError`` rather than crashing, so truncated container
     payloads surface as clean corruption errors.
+
+    Deprecated as a batch surface: this is the single-stream serial
+    oracle (``repro.core.entropy.decode_stream``).  Call sites walking
+    many payloads under one codebook should go through
+    ``entropy.get_engine(...).decode_payloads`` instead of looping here.
     """
-    if n_symbols == 0:
-        return np.zeros(0, dtype=np.int64)
-    symbols = cb.symbols
-    if len(symbols) == 0:
-        raise ValueError("cannot decode symbols with an empty codebook")
-    bits = np.unpackbits(np.asarray(packed, dtype=np.uint8))[:nbits]
-    nbits = min(int(nbits), bits.size)
-    out = np.empty(n_symbols, dtype=np.int64)
-    if len(symbols) == 1:
-        # degenerate: single-symbol alphabet, 1 bit per symbol on the wire
-        if nbits < n_symbols:
-            raise ValueError("truncated bitstream")
-        out[:] = symbols[0]
-        return out
-    maxlen = cb.max_length
-    first_code = cb.first_code
-    first_index = cb.first_index
-    count = cb.count
-    i = 0
-    bl = bits.tolist()  # python ints — much faster to index than np scalars
-    for k in range(n_symbols):
-        code = 0
-        l = 0
-        while True:
-            if i >= nbits:
-                raise ValueError("truncated bitstream")
-            code = (code << 1) | bl[i]
-            i += 1
-            l += 1
-            if l > maxlen:
-                raise ValueError("corrupt bitstream")
-            c0 = first_code[l]
-            if count[l] and code - c0 < count[l] and code >= c0:
-                out[k] = symbols[first_index[l] + (code - c0)]
-                break
-    return out
+    from . import entropy
+    return entropy.decode_stream(cb, packed, nbits, n_symbols)

@@ -117,15 +117,17 @@ def choose_strategy(density: float, *, algorithm: str, she: bool) -> str:
 
 
 def _global_compress(x: np.ndarray, eb: float, algorithm: str,
-                     sz_block: int = 6) -> SZResult:
+                     sz_block: int = 6,
+                     entropy_engine: str = "auto") -> SZResult:
     if algorithm == "interp":
-        return compress_interp(x, eb)
+        return compress_interp(x, eb, entropy_engine=entropy_engine)
     if algorithm == "lorenzo":
-        return compress_lorenzo(x, eb)
+        return compress_lorenzo(x, eb, entropy_engine=entropy_engine)
     if algorithm == "lor_reg":
         # the block edge must match what the level records (the TACZ index
         # stores sz_block and the decoder rebuilds the betas grid from it)
-        return compress_lor_reg(x, eb, block=sz_block)
+        return compress_lor_reg(x, eb, block=sz_block,
+                                entropy_engine=entropy_engine)
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
@@ -188,7 +190,8 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
                    she: bool = True, strategy: str | None = None,
                    sz_block: int = 6, batched: bool = True,
                    ratio: int = 1, keep_artifacts: bool = True,
-                   lorenzo_engine: str = "auto") -> LevelResult:
+                   lorenzo_engine: str = "auto",
+                   entropy_engine: str = "auto") -> LevelResult:
     grid, strategy, density, subblocks = partition_level(
         data, mask, unit=unit, algorithm=algorithm, she=she,
         strategy=strategy)
@@ -197,7 +200,7 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
 
     if strategy == "gsp":
         padded, grid = gsp_pad(data, mask, unit=unit)
-        r = _global_compress(padded, eb, algorithm, sz_block)
+        r = _global_compress(padded, eb, algorithm, sz_block, entropy_engine)
         recon = gsp_unpad(r.recon, grid)[
             tuple(slice(0, s) for s in orig_shape)]
         art = None
@@ -221,7 +224,8 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
     if she and algorithm == "lor_reg":
         bricks = [extract_subblock(grid, sb) for sb in subblocks]
         enc = she_encode(bricks, eb, block=sz_block, shared=True,
-                         batched=batched, lorenzo_engine=lorenzo_engine)
+                         batched=batched, lorenzo_engine=lorenzo_engine,
+                         entropy_engine=entropy_engine)
         recon = np.zeros(grid.data.shape, dtype=np.float32)
         for sb, r in zip(subblocks, enc.results):
             ox, oy, oz = sb.cell_origin(u)
@@ -259,7 +263,7 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
     for shape, items in groups.items():
         arr = np.stack([b for _, _, b in items])
         alg = "lorenzo" if algorithm == "lor_reg" else algorithm
-        r = _global_compress(arr, eb, alg)
+        r = _global_compress(arr, eb, alg, entropy_engine=entropy_engine)
         payload += r.payload_bits
         cb_bits += r.codebook_bits
         n_groups += 1
@@ -286,7 +290,8 @@ def compress_amr(ds: AMRDataset, *, eb: float | list[float],
                  she: bool = True, strategy: str | None = None,
                  sz_block: int = 6, batched: bool = True,
                  keep_artifacts: bool = True,
-                 lorenzo_engine: str = "auto") -> AMRCompressionResult:
+                 lorenzo_engine: str = "auto",
+                 entropy_engine: str = "auto") -> AMRCompressionResult:
     """Level-wise TAC/TAC+ over a whole AMR dataset.
 
     ``eb`` may be a scalar (uniform bound) or per-level list — the paper's
@@ -305,6 +310,9 @@ def compress_amr(ds: AMRDataset, *, eb: float | list[float],
     ``lorenzo_engine`` is forwarded to the batched Lor/Reg compressor:
     ``"auto"`` uses the Pallas kernel on TPU (float32 fast path),
     ``"numpy"`` forces the bit-exact float64 host oracle on any backend.
+    ``entropy_engine`` is forwarded to the :mod:`repro.core.entropy`
+    stage the same way; entropy engines are bit-identical, so it only
+    affects speed.
     """
     ebs = eb if isinstance(eb, (list, tuple)) else [eb] * ds.n_levels
     if len(ebs) != ds.n_levels:
@@ -318,6 +326,7 @@ def compress_amr(ds: AMRDataset, *, eb: float | list[float],
                                      sz_block=sz_block, batched=batched,
                                      ratio=lvl.ratio,
                                      keep_artifacts=keep_artifacts,
-                                     lorenzo_engine=lorenzo_engine))
+                                     lorenzo_engine=lorenzo_engine,
+                                     entropy_engine=entropy_engine))
     name = "tac+" if (she and algorithm == "lor_reg") else "tac"
     return AMRCompressionResult(levels=levels, method=f"{name}/{algorithm}")

@@ -35,7 +35,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from . import huffman
+from . import entropy, huffman
 from .compat import HAVE_ZSTD, zstd_size_bits
 from .sz import SZResult, compress_lor_reg, compress_lor_reg_batched
 
@@ -96,7 +96,8 @@ def aggregate_histogram(codes: np.ndarray, *, engine: str = "numpy",
 
 
 def _shared_entropy_stage(results: list[SZResult], *, use_zstd: bool,
-                          engine: str) -> tuple[int, int, huffman.Codebook]:
+                          engine: str, entropy_engine: str = "auto",
+                          ) -> tuple[int, int, huffman.Codebook]:
     """One histogram → one codebook → one encoder launch → one zstd pass.
 
     The Huffman payload is priced exactly from the per-occurrence code
@@ -113,8 +114,9 @@ def _shared_entropy_stage(results: list[SZResult], *, use_zstd: bool,
     lengths = cb.lengths[idx]
     payload = int(lengths.sum())
     if use_zstd and HAVE_ZSTD and payload:
-        packed, _ = huffman.encode(cb, all_codes, indices=idx)
-        zbits = zstd_size_bits(packed.tobytes())
+        (blob, _), = entropy.get_engine(entropy_engine).encode_payloads(
+            cb, [all_codes])
+        zbits = zstd_size_bits(blob)
         if zbits is not None:
             payload = min(payload, zbits)
     # per-brick payloads (diagnostics only; totals use the shared stream) —
@@ -126,8 +128,8 @@ def _shared_entropy_stage(results: list[SZResult], *, use_zstd: bool,
 
 
 def encode_brick_payloads(cb: huffman.Codebook,
-                          codes_list: list[np.ndarray],
-                          ) -> list[tuple[bytes, int]]:
+                          codes_list: list[np.ndarray], *,
+                          engine: str = "auto") -> list[tuple[bytes, int]]:
     """One byte-aligned packed bitstream per brick under the shared codebook.
 
     This is the TACZ container's payload framing: every sub-block's code
@@ -135,45 +137,39 @@ def encode_brick_payloads(cb: huffman.Codebook,
     decoded without touching its neighbors — the random-access property the
     ROI reader builds on.  Returns ``(payload bytes, nbits)`` per brick;
     ``nbits`` is exactly ``code_lengths_for(cb, codes).sum()``.
+
+    Thin wrapper (kept for compatibility) over
+    ``repro.core.entropy.EntropyEngine.encode_payloads`` — the batched
+    engines pack the whole brick list in one offset-scatter pass; output
+    bytes are identical for every ``engine``.
     """
-    codes_list = [np.asarray(c, dtype=np.int64).ravel() for c in codes_list]
-    # one symbol-index pass over the pooled stream (the codebook-sort in
-    # symbol_indices is O(S log S) — pay it once, not once per brick),
-    # split back at brick boundaries for the per-brick encoder launches
-    pooled = (np.concatenate(codes_list) if codes_list
-              else np.zeros(0, dtype=np.int64))
-    idx = (huffman.symbol_indices(cb, pooled) if pooled.size
-           else np.zeros(0, dtype=np.int64))
-    splits = np.cumsum([c.size for c in codes_list])[:-1]
-    out: list[tuple[bytes, int]] = []
-    for codes, ind in zip(codes_list, np.split(idx, splits)):
-        packed, nbits = huffman.encode(cb, codes, indices=ind)
-        out.append((packed.tobytes(), int(nbits)))
-    return out
+    return entropy.get_engine(engine).encode_payloads(cb, codes_list)
 
 
 def decode_brick_payloads(cb: huffman.Codebook,
-                          payloads: list[tuple[bytes, int, int]],
-                          ) -> list[np.ndarray]:
+                          payloads: list[tuple[bytes, int, int]], *,
+                          engine: str = "auto") -> list[np.ndarray]:
     """Inverse of :func:`encode_brick_payloads` for a batch of bricks.
 
     ``payloads`` is a list of ``(payload bytes, nbits, n_codes)`` triples,
     all under the same shared codebook; returns the int64 code stream per
-    brick.  This is the codec-level round-trip counterpart for consumers
-    holding raw payload sections (the TACZ reader fuses the same walk with
-    its CRC/framing checks in ``TACZReader.subblock_codes``, which is what
-    the region-serving decode planner uses); pair the recovered streams
-    with ``sz.decode_codes_batched`` for vectorized reconstruction.
+    brick; pair the recovered streams with ``sz.decode_codes_batched`` for
+    vectorized reconstruction.
+
+    Thin wrapper (kept for compatibility) over
+    ``repro.core.entropy.EntropyEngine.decode_payloads`` — the batched
+    engines replace the per-brick serial bit-walk with one lockstep
+    canonical decode; outputs and error behavior match the serial oracle
+    exactly for every ``engine``.
     """
-    return [huffman.decode(cb, np.frombuffer(buf, dtype=np.uint8),
-                           int(nbits), int(n_codes))
-            for buf, nbits, n_codes in payloads]
+    return entropy.get_engine(engine).decode_payloads(cb, payloads)
 
 
 def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
                shared: bool = True, use_zstd: bool = True,
                batched: bool = True, hist_engine: str = "numpy",
-               lorenzo_engine: str = "auto") -> SHEResult:
+               lorenzo_engine: str = "auto",
+               entropy_engine: str = "auto") -> SHEResult:
     """Compress a list of 3D/4D bricks with per-brick Lor/Reg prediction.
 
     ``shared=True``  → Algorithm 4: one Huffman tree over all bricks, one
@@ -190,7 +186,10 @@ def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
     the batched Lorenzo branch through the float32 Pallas kernel when a
     TPU is attached — codes there may differ from the float64 oracle in
     half-integer rounding; pass ``lorenzo_engine="numpy"`` to force
-    bit-exactness on any backend.
+    bit-exactness on any backend.  ``entropy_engine`` selects the
+    :mod:`repro.core.entropy` engine used when the zstd pass sizes the
+    pooled bitstream — all entropy engines are bit-identical, so this
+    only affects speed.
     """
     if batched:
         results: list[SZResult | None] = [None] * len(bricks)
@@ -215,14 +214,18 @@ def she_encode(bricks: list[np.ndarray], eb: float, *, block: int = 6,
     meta += 32 * len(results)
     if shared:
         payload, cb_bits, cb = _shared_entropy_stage(
-            results, use_zstd=use_zstd, engine=hist_engine)
+            results, use_zstd=use_zstd, engine=hist_engine,
+            entropy_engine=entropy_engine)
     else:
         payload = 0
         cb_bits = 0
         cb = None
         for r in results:
+            # per-block baseline: one codebook per brick, so there is no
+            # shared-codebook batch to form — the single-stream surface
+            # is the right one here
             rcb = huffman.build_codebook(r.codes)
-            packed, nbits = huffman.encode(rcb, r.codes)
+            packed, nbits = entropy.encode_stream(rcb, r.codes)
             bits = nbits
             if use_zstd and nbits:
                 zbits = zstd_size_bits(packed.tobytes())

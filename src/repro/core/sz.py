@@ -251,7 +251,7 @@ def interp_nd_recon(codes: np.ndarray) -> np.ndarray:
 
 def entropy_stage(codes: np.ndarray, *, use_zstd: bool = True,
                   codebook: huffman.Codebook | None = None,
-                  ) -> tuple[int, int, dict]:
+                  engine: str = "auto") -> tuple[int, int, dict]:
     """(payload_bits, codebook_bits, artifacts) from a materialized bitstream.
 
     ``artifacts`` carries the codebook and the packed Huffman payload
@@ -263,13 +263,19 @@ def entropy_stage(codes: np.ndarray, *, use_zstd: bool = True,
     payload bytes are a small fraction of the ``codes`` array every
     SZResult already pins (int64 per value vs the entropy-coded stream),
     so accounting-only sweeps are not meaningfully taxed.
+
+    Thin wrapper (kept for compatibility) over
+    ``repro.core.entropy.EntropyEngine.encode_payloads`` for its single
+    pooled stream; all engines produce identical bytes, so ``engine``
+    only affects speed.
     """
+    from . import entropy as _entropy
+
     codes = np.asarray(codes).ravel()
     if codes.size == 0:
         return 0, 0, {"codebook": None, "packed": b"", "nbits": 0}
     cb = codebook if codebook is not None else huffman.build_codebook(codes)
-    packed, nbits = huffman.encode(cb, codes)
-    blob = packed.tobytes()   # one copy, shared by zstd sizing + artifacts
+    (blob, nbits), = _entropy.get_engine(engine).encode_payloads(cb, [codes])
     payload = nbits
     if use_zstd:
         zbits = zstd_size_bits(blob)
@@ -297,13 +303,15 @@ _DIM_META_BITS = 3 * 32 + 64  # dims + eb
 
 
 def compress_lorenzo(x: np.ndarray, eb: float, *, use_zstd: bool = True,
-                     codebook: huffman.Codebook | None = None) -> SZResult:
+                     codebook: huffman.Codebook | None = None,
+                     entropy_engine: str = "auto") -> SZResult:
     """Global N-D dual-quant Lorenzo (the TPU-kernel-backed path)."""
     x = np.asarray(x)
     q = prequant(x, eb)
     codes = lorenzo_nd_codes(q)
     payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
-                                          codebook=codebook)
+                                          codebook=codebook,
+                                          engine=entropy_engine)
     recon = dequant(lorenzo_nd_recon(codes), eb).reshape(x.shape)
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=_DIM_META_BITS, eb=eb,
@@ -311,13 +319,15 @@ def compress_lorenzo(x: np.ndarray, eb: float, *, use_zstd: bool = True,
 
 
 def compress_interp(x: np.ndarray, eb: float, *, use_zstd: bool = True,
-                    codebook: huffman.Codebook | None = None) -> SZResult:
+                    codebook: huffman.Codebook | None = None,
+                    entropy_engine: str = "auto") -> SZResult:
     """Global multi-level interpolation (faithful SZ3 'Interp' analogue)."""
     x = np.asarray(x)
     q = prequant(x, eb)
     codes = interp_nd_codes(q)
     payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
-                                          codebook=codebook)
+                                          codebook=codebook,
+                                          engine=entropy_engine)
     recon = dequant(interp_nd_recon(codes), eb).reshape(x.shape)
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=_DIM_META_BITS, eb=eb,
@@ -407,7 +417,8 @@ def _code_cost_bits(codes: np.ndarray, axis) -> np.ndarray:
 def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
                      use_zstd: bool = True,
                      codebook: huffman.Codebook | None = None,
-                     count_entropy: bool = True) -> SZResult:
+                     count_entropy: bool = True,
+                     entropy_engine: str = "auto") -> SZResult:
     """SZ2 "Lor/Reg" analogue: Lorenzo vs. linear regression, chosen
     adaptively — at *brick* granularity.
 
@@ -446,7 +457,8 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
         extras4: dict = {}
         if count_entropy:
             payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
-                                                  codebook=codebook)
+                                                  codebook=codebook,
+                                                  engine=entropy_engine)
             extras4["entropy"] = ent
         recon = np.stack([p.recon for p in parts]).reshape(orig_shape)
         return SZResult(recon=recon, codes=codes, payload_bits=payload,
@@ -488,7 +500,8 @@ def compress_lor_reg(x: np.ndarray, eb: float, *, block: int = 6,
     payload = cb_bits = 0
     if count_entropy:
         payload, cb_bits, ent = entropy_stage(codes, use_zstd=use_zstd,
-                                              codebook=codebook)
+                                              codebook=codebook,
+                                              engine=entropy_engine)
         extras["entropy"] = ent
     return SZResult(recon=recon, codes=codes.ravel(), payload_bits=payload,
                     codebook_bits=cb_bits, meta_bits=meta, eb=eb,

@@ -48,6 +48,7 @@ import threading
 
 import numpy as np
 
+from repro.core import entropy
 from repro.core.amr import AMRDataset
 from repro.core.blocks import extract_subblock
 from repro.core.gsp import gsp_pad
@@ -145,12 +146,15 @@ def _task_to_level(task: dict) -> LevelResult:
                               strategy="gsp", sz_block=head["sz_block"],
                               batched=head["batched"], ratio=head["ratio"],
                               keep_artifacts=True,
-                              lorenzo_engine=head["lorenzo_engine"])
+                              lorenzo_engine=head["lorenzo_engine"],
+                              entropy_engine=head.get("entropy_engine",
+                                                      "auto"))
     if kind == "she":
         enc = she_encode(task["bricks"], head["eb"],
                          block=head["sz_block"], shared=True,
                          batched=head["batched"],
-                         lorenzo_engine=head["lorenzo_engine"])
+                         lorenzo_engine=head["lorenzo_engine"],
+                         entropy_engine=head.get("entropy_engine", "auto"))
         art = LevelArtifacts(mask=mask, orig_shape=tuple(head["orig_shape"]),
                              grid_shape=tuple(head["grid_shape"]),
                              unit=head["unit"], sz_block=head["sz_block"],
@@ -169,7 +173,7 @@ def _task_to_level(task: dict) -> LevelResult:
 
 
 def _part_worker(pi: int, part_path: str, payload_codec: str,
-                 task_q, result_q) -> None:
+                 entropy_engine: str, task_q, result_q) -> None:
     """One part's worker loop (thread or process body).
 
     Streams tasks into this part's own :class:`TACZWriter` until the
@@ -182,7 +186,7 @@ def _part_worker(pi: int, part_path: str, payload_codec: str,
         # background=False: this loop IS the dedicated worker — a second
         # encoder thread per part would only contend for the GIL
         w = TACZWriter(part_path, payload_codec=payload_codec,
-                       background=False)
+                       entropy_engine=entropy_engine, background=False)
         while True:
             task = task_q.get()
             if task is None:
@@ -253,6 +257,10 @@ class ParallelTACZWriter:
         resolved once on the producer so forked workers never probe
         accelerator backends themselves.
     :param payload_codec: v2 lossless byte pass, as in ``TACZWriter``.
+    :param entropy_engine: :mod:`repro.core.entropy` engine for the
+        Huffman encode stage in workers (``"auto"``/``"numpy"``/
+        ``"batched"``/``"pallas"``) — resolved once on the producer,
+        like ``lorenzo_engine``; output bytes are engine-independent.
     :param queue_depth: per-part task queue bound (backpressure).
     :raises ValueError: on bad ``parts``/``mode``/``payload_codec``.
     :raises OSError: if the snapshot directory cannot be created.
@@ -264,12 +272,13 @@ class ParallelTACZWriter:
                  she: bool = True, strategy: str | None = None,
                  sz_block: int = 6, batched: bool = True,
                  lorenzo_engine: str = "auto", payload_codec: str = "auto",
-                 queue_depth: int = 2):
+                 entropy_engine: str = "auto", queue_depth: int = 2):
         if parts < 1:
             raise ValueError("need at least one part")
         if mode not in ("thread", "process"):
             raise ValueError(f"unknown worker mode {mode!r}")
         resolve_payload_codec(payload_codec)   # fail fast on bad names
+        entropy.check_engine_name(entropy_engine)
         self.path = os.fspath(path)
         self.parts = int(parts)
         self.seed = int(seed)
@@ -277,7 +286,8 @@ class ParallelTACZWriter:
         self._payload_codec = payload_codec
         self._defaults = dict(eb=eb, unit=unit, algorithm=algorithm, she=she,
                               strategy=strategy, sz_block=sz_block,
-                              batched=batched, lorenzo_engine=lorenzo_engine)
+                              batched=batched, lorenzo_engine=lorenzo_engine,
+                              entropy_engine=entropy_engine)
         self._part_ids = [mfst.part_stem(i) for i in range(self.parts)]
         self._n_levels = 0
         self._subblocks_per_level: list[int] = []
@@ -286,8 +296,12 @@ class ParallelTACZWriter:
         self._finalized = False
         self._aborted = False
         self._engine: str | None = None   # resolved lorenzo engine
+        self._entropy_eng: str | None = None   # resolved entropy engine
         os.makedirs(self.path, exist_ok=True)
 
+        # resolve once on the producer, before any worker forks: the
+        # workers take the concrete engine name and never probe jax
+        ent_eng = self._resolve_entropy_engine()
         depth = max(1, int(queue_depth))
         if mode == "process":
             # fork is the fast path; once XLA backends are live in this
@@ -301,7 +315,8 @@ class ParallelTACZWriter:
             self._workers = [
                 ctx.Process(target=_part_worker,
                             args=(pi, self._part_path(pi), payload_codec,
-                                  self._task_qs[pi], self._result_q),
+                                  ent_eng, self._task_qs[pi],
+                                  self._result_q),
                             daemon=True)
                 for pi in range(self.parts)]
         else:
@@ -311,8 +326,8 @@ class ParallelTACZWriter:
             self._workers = [
                 threading.Thread(target=_part_worker,
                                  args=(pi, self._part_path(pi),
-                                       payload_codec, self._task_qs[pi],
-                                       self._result_q),
+                                       payload_codec, ent_eng,
+                                       self._task_qs[pi], self._result_q),
                                  daemon=True)
                 for pi in range(self.parts)]
         self._results: dict[int, tuple] = {}
@@ -388,6 +403,21 @@ class ParallelTACZWriter:
             self._engine = eng
         return self._engine
 
+    def _resolve_entropy_engine(self) -> str:
+        if self._entropy_eng is None:
+            eng = self._defaults["entropy_engine"]
+            if eng == "auto":
+                # same fork-safety rule as _resolve_engine: probe the
+                # accelerator only if jax is already imported; the
+                # batched numpy engine is the universal fallback
+                if "jax" in sys.modules:
+                    from repro.core.sz import _tpu_attached
+                    eng = "pallas" if _tpu_attached() else "batched"
+                else:
+                    eng = "batched"
+            self._entropy_eng = eng
+        return self._entropy_eng
+
     def _owners(self, li: int, keys: list[tuple[int, int]],
                 ) -> list[list[int]]:
         """Per part: the sorted global sub-block indices it owns of level
@@ -453,6 +483,7 @@ class ParallelTACZWriter:
                     density=float(density), n_values=int(mask.sum()),
                     batched=bool(d["batched"]),
                     lorenzo_engine=self._resolve_engine(),
+                    entropy_engine=self._resolve_entropy_engine(),
                     mask_packed=(None if mask.all()
                                  else np.packbits(mask.ravel()).tobytes()))
         if strategy == "gsp":
@@ -694,13 +725,17 @@ class MultiPartReader(TACZReader):
     the same value for the directory).
 
     :param src: snapshot directory or its ``manifest.json`` path.
+    :param entropy_engine: :mod:`repro.core.entropy` engine each part
+        reader decodes Huffman payloads with (all engines bit-identical).
     :raises ValueError: on a missing/corrupt manifest, a part whose
         bytes do not match the manifest (stale or torn republish), or
         inconsistent level heads across parts.
     :raises OSError: if the manifest or a part cannot be read.
     """
 
-    def __init__(self, src):
+    def __init__(self, src, *, entropy_engine: str = "auto"):
+        entropy.check_engine_name(entropy_engine)
+        self._entropy_engine = entropy_engine
         src = os.fspath(src)
         self._dir = (os.path.dirname(src)
                      if os.path.basename(src) == mfst.MANIFEST_NAME
@@ -816,7 +851,8 @@ class MultiPartReader(TACZReader):
             rd = self._parts[pi]
             if rd is None:
                 p = self.manifest["parts"][pi]
-                rd = TACZReader(os.path.join(self._dir, p["name"]))
+                rd = TACZReader(os.path.join(self._dir, p["name"]),
+                                entropy_engine=self._entropy_engine)
                 if rd.index_crc != (int(p["index_crc"]) & 0xFFFFFFFF):
                     rd.close()
                     raise ValueError(
@@ -878,6 +914,26 @@ class MultiPartReader(TACZReader):
         part that owns it (see :meth:`TACZReader.subblock_codes`)."""
         pi, lsbi = self._where[(li, int(sbi))]
         return self._part(pi).subblock_codes(li, lsbi, limit)
+
+    def decode_subblocks(self, li: int, sbis, limits=None):
+        """Batched :meth:`subblock_codes` over global indices: the batch
+        is split by owning part, each part decodes its slice in one
+        ``EntropyEngine`` launch, and results return in input order."""
+        sbis = [int(s) for s in sbis]
+        by_part: dict[int, list[int]] = {}
+        for pos, sbi in enumerate(sbis):
+            pi, _ = self._where[(li, sbi)]
+            by_part.setdefault(pi, []).append(pos)
+        out: list = [None] * len(sbis)
+        for pi, positions in by_part.items():
+            local = [self._where[(li, sbis[p])][1] for p in positions]
+            lims = (None if limits is None
+                    else [limits[p] for p in positions])
+            for p, pair in zip(positions,
+                               self._part(pi).decode_subblocks(
+                                   li, local, lims)):
+                out[p] = pair
+        return out
 
     def verify(self) -> bool:
         """Verify every part's sections and payloads (each part's index

@@ -19,7 +19,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import huffman, sz
+from repro.core import entropy, huffman, sz
 from repro.core.blocks import make_block_grid
 from repro.core.compat import HAVE_ZSTD, zstd_decompress
 from repro.core.gsp import gsp_unpad
@@ -78,6 +78,9 @@ class TACZReader:
 
     :param src: file path, raw ``bytes``/``bytearray``, or a seekable
         binary file object (not closed on :meth:`close`).
+    :param entropy_engine: :mod:`repro.core.entropy` engine for payload
+        decode (``"auto"`` picks the batched path; every engine is
+        bit-identical, so this only affects speed).
     :raises ValueError: if the bytes are not a valid TACZ container
         (bad magic, unsupported version, truncation, index CRC mismatch).
     :raises OSError: if a path cannot be opened.
@@ -86,7 +89,9 @@ class TACZReader:
     _SHE_STRATEGIES = (fmt.STRATEGY_OPST, fmt.STRATEGY_AKDTREE,
                        fmt.STRATEGY_NAST)
 
-    def __init__(self, src):
+    def __init__(self, src, *, entropy_engine: str = "auto"):
+        entropy.check_engine_name(entropy_engine)
+        self._entropy_engine = entropy_engine
         if isinstance(src, (bytes, bytearray)):
             self._f = _stdio.BytesIO(bytes(src))
             self._own = True
@@ -211,17 +216,14 @@ class TACZReader:
             return flat + 1
         return sb.n_codes   # interp is global — no partial decode
 
-    def _subblock_codes(self, li: int, sb: fmt.SubBlockEntry,
-                        shape: tuple[int, ...], limit: int | None = None,
-                        ) -> tuple[np.ndarray, np.ndarray | None]:
-        """Entropy-decode one payload → (codes, betas), no prediction replay.
+    def _payload_parts(self, li: int, sb: fmt.SubBlockEntry,
+                       shape: tuple[int, ...],
+                       ) -> tuple[bytes, np.ndarray | None]:
+        """Fetch + CRC-check one payload → (decompressed code bytes, betas).
 
-        The codes array always has ``sb.n_codes`` entries; with ``limit``
-        only the leading ``limit`` are decoded (the rest are zeros and
-        unspecified for reconstruction purposes).  This is the shared
-        payload path of :meth:`_decode_subblock` (serial recon) and the
-        serving-side decode planner (batched recon through
-        ``sz.decode_codes_batched``).
+        This is the I/O half of the payload path; entropy decode happens
+        in :meth:`_decode_payloads` so many payloads can share one
+        batched engine launch.
         """
         e = self.levels[li]
         payload = self._read_at(sb.payload_off, sb.payload_len)
@@ -234,25 +236,82 @@ class TACZReader:
             betas = np.frombuffer(payload, dtype="<f4",
                                   count=int(np.prod(bgrid)) * 4,
                                   offset=0).reshape(bgrid + (4,))
-        n_decode = sb.n_codes if limit is None else min(limit, sb.n_codes)
         code_bytes = _decompress(payload[sb.betas_len:], sb.compressor)
-        if sb.codec == fmt.CODEC_HUFFMAN:
-            codes = huffman.decode(self._codebook(li),
-                                   np.frombuffer(code_bytes, dtype=np.uint8),
-                                   sb.nbits, n_decode)
-        elif sb.codec == fmt.CODEC_RAW_I16:
-            codes = np.frombuffer(code_bytes, dtype="<i2",
-                                  count=n_decode).astype(np.int64)
-        elif sb.codec == fmt.CODEC_RAW_I32:
-            codes = np.frombuffer(code_bytes, dtype="<i4",
-                                  count=n_decode).astype(np.int64)
-        else:
-            raise ValueError(f"unknown payload codec {sb.codec}")
-        if n_decode < sb.n_codes:
-            full = np.zeros(sb.n_codes, dtype=np.int64)
-            full[:n_decode] = codes
-            codes = full
-        return codes, betas
+        return code_bytes, betas
+
+    def _decode_payloads(self, li: int, jobs,
+                         ) -> list[tuple[np.ndarray, np.ndarray | None]]:
+        """(codes, betas) per ``(sub-block entry, shape, limit)`` job.
+
+        All CODEC_HUFFMAN payloads of the batch go through **one**
+        ``EntropyEngine.decode_payloads`` launch (the level's shared
+        codebook covers them all); RAW_I16/I32 payloads decode directly.
+        Each codes array has ``sb.n_codes`` entries; with a ``limit``
+        only the leading ``limit`` are decoded (the rest are zeros and
+        unspecified for reconstruction purposes).
+        """
+        out: list[tuple[np.ndarray, np.ndarray | None] | None] = \
+            [None] * len(jobs)
+        huff: list[tuple[int, tuple[bytes, int, int]]] = []
+        metas: list[tuple[fmt.SubBlockEntry, int, np.ndarray | None]] = []
+        for pos, (sb, shape, limit) in enumerate(jobs):
+            code_bytes, betas = self._payload_parts(li, sb, shape)
+            n_decode = (sb.n_codes if limit is None
+                        else min(int(limit), sb.n_codes))
+            metas.append((sb, n_decode, betas))
+            if sb.codec == fmt.CODEC_HUFFMAN:
+                huff.append((pos, (code_bytes, sb.nbits, n_decode)))
+            elif sb.codec == fmt.CODEC_RAW_I16:
+                out[pos] = (np.frombuffer(code_bytes, dtype="<i2",
+                                          count=n_decode).astype(np.int64),
+                            betas)
+            elif sb.codec == fmt.CODEC_RAW_I32:
+                out[pos] = (np.frombuffer(code_bytes, dtype="<i4",
+                                          count=n_decode).astype(np.int64),
+                            betas)
+            else:
+                raise ValueError(f"unknown payload codec {sb.codec}")
+        if huff:
+            decoded = entropy.get_engine(self._entropy_engine). \
+                decode_payloads(self._codebook(li),
+                                [payload for _, payload in huff])
+            for (pos, _), codes in zip(huff, decoded):
+                out[pos] = (codes, metas[pos][2])
+        for pos, (sb, n_decode, _) in enumerate(metas):
+            codes, betas = out[pos]
+            if n_decode < sb.n_codes:
+                full = np.zeros(sb.n_codes, dtype=np.int64)
+                full[:n_decode] = codes
+                out[pos] = (full, betas)
+        return out
+
+    def _subblock_codes(self, li: int, sb: fmt.SubBlockEntry,
+                        shape: tuple[int, ...], limit: int | None = None,
+                        ) -> tuple[np.ndarray, np.ndarray | None]:
+        """Entropy-decode one payload → (codes, betas), no prediction
+        replay — the single-payload case of :meth:`_decode_payloads`."""
+        return self._decode_payloads(li, [(sb, shape, limit)])[0]
+
+    def decode_subblocks(self, li: int, sbis, limits=None,
+                         ) -> list[tuple[np.ndarray, np.ndarray | None]]:
+        """(codes, betas) for many sub-blocks of one level — the batched
+        form of :meth:`subblock_codes`, and the serving planner's entry
+        point: every Huffman payload of the batch decodes in one
+        ``EntropyEngine`` launch instead of one serial bit-walk each.
+
+        :param li: level index.
+        :param sbis: sub-block indices (any order, duplicates allowed).
+        :param limits: optional per-entry prefix limits (None = full).
+        :returns: one ``(codes, betas)`` pair per entry of ``sbis``, in
+            input order, each identical to ``subblock_codes(li, sbi)``.
+        """
+        e = self.levels[li]
+        jobs = []
+        for pos, sbi in enumerate(sbis):
+            limit = None if limits is None else limits[pos]
+            jobs.append((e.subblocks[sbi], self.subblock_shape(li, sbi),
+                         limit))
+        return self._decode_payloads(li, jobs)
 
     def subblock_shape(self, li: int, sbi: int) -> tuple[int, ...]:
         """Decode shape of one sub-block payload (brick shape for SHE
@@ -290,6 +349,33 @@ class TACZReader:
                                branch=fmt.BRANCH_NAMES[sb.branch],
                                block=e.sz_block, betas=betas)
 
+    def _decode_bricks(self, li: int, jobs) -> list[np.ndarray]:
+        """Reconstructed bricks for many ``(sbi, limit)`` jobs of one
+        SHE level — the fully batched cold path: one entropy-engine
+        launch over every payload, then one ``sz.decode_codes_batched``
+        per (shape, branch) group.  Each brick is bit-identical to
+        ``_decode_subblock`` on the same (sub-block, limit).
+        """
+        e = self.levels[li]
+        sbis = [sbi for sbi, _ in jobs]
+        decoded = self.decode_subblocks(li, sbis,
+                                        [lim for _, lim in jobs])
+        groups: dict[tuple[tuple[int, ...], int], list[int]] = {}
+        for pos, sbi in enumerate(sbis):
+            key = (self.subblock_shape(li, sbi), e.subblocks[sbi].branch)
+            groups.setdefault(key, []).append(pos)
+        out: list[np.ndarray | None] = [None] * len(jobs)
+        for (shape, branch), poss in groups.items():
+            codes = np.stack([decoded[p][0] for p in poss])
+            betas = (np.stack([decoded[p][1] for p in poss])
+                     if branch == fmt.BRANCH_REG else None)
+            recon = sz.decode_codes_batched(
+                codes, shape, e.eb, branch=fmt.BRANCH_NAMES[branch],
+                block=e.sz_block, betas=betas)
+            for p, brick in zip(poss, recon):
+                out[p] = np.ascontiguousarray(brick)
+        return out
+
     def read_level(self, li: int) -> np.ndarray:
         """Full decode of one level.
 
@@ -303,8 +389,9 @@ class TACZReader:
         mask = self._mask(li)
         if e.strategy in self._SHE_STRATEGIES:
             acc = np.zeros(e.grid_shape, dtype=np.float32)
-            for sb in e.subblocks:
-                brick = self._decode_subblock(li, sb, sb.size)
+            bricks = self._decode_bricks(
+                li, [(sbi, None) for sbi in range(len(e.subblocks))])
+            for sb, brick in zip(e.subblocks, bricks):
                 sl = tuple(slice(o, o + s) for o, s in zip(sb.origin, sb.size))
                 acc[sl] = brick
             recon = acc[tuple(slice(0, s) for s in e.shape)]
@@ -453,10 +540,12 @@ class TACZReader:
                         for (lo, hi), s in zip(lbox, e.shape))
         return self.assemble_level_roi(li, clipped,
                                        self._fetch_brick_prefix,
-                                       self.read_level)
+                                       self.read_level,
+                                       fetch_bricks=self._fetch_bricks_prefix)
 
     def assemble_level_roi(self, li: int, lbox: Box, fetch_brick,
-                           fetch_level, tasks=None) -> np.ndarray:
+                           fetch_level, tasks=None,
+                           fetch_bricks=None) -> np.ndarray:
         """Assemble one level's crop from decoded bricks.
 
         ``fetch_brick(li, sbi, local_hi)`` must return sub-block ``sbi``'s
@@ -465,9 +554,12 @@ class TACZReader:
         level reconstruction (gsp/global levels — their single payload is
         not block-local).  ``tasks`` may carry a precomputed
         ``intersecting_subblocks(li, lbox)`` result (the serving planner
-        already ran the scan).  Masking and crop placement are identical
-        for every caller, which is what keeps cached serving bit-identical
-        to :meth:`read_roi`.
+        already ran the scan).  ``fetch_bricks(li, [(sbi, local_hi)])``,
+        when given, replaces the per-brick calls with one batched fetch
+        for the whole SHE task list (the cold ROI path routes this at the
+        batched entropy engine).  Masking and crop placement are
+        identical for every caller, which is what keeps cached serving
+        bit-identical to :meth:`read_roi`.
         """
         e = self.levels[li]
         bshape = tuple(max(hi - lo, 0) for lo, hi in lbox)
@@ -479,11 +571,13 @@ class TACZReader:
             acc = np.zeros(bshape, dtype=np.float32)
             if not tasks:      # nothing decoded → all zeros; masking is a
                 return acc     # no-op, so skip the mask-section read
-            for sbi, isect in tasks:
+            jobs = [(sbi, tuple(hi - o for (_, hi), o
+                                in zip(isect, e.subblocks[sbi].origin)))
+                    for sbi, isect in tasks]
+            bricks = (fetch_bricks(li, jobs) if fetch_bricks is not None
+                      else [fetch_brick(li, sbi, hi) for sbi, hi in jobs])
+            for (sbi, isect), brick in zip(tasks, bricks):
                 sb = e.subblocks[sbi]
-                local_hi = tuple(hi - o for (_, hi), o
-                                 in zip(isect, sb.origin))
-                brick = fetch_brick(li, sbi, local_hi)
                 src = tuple(slice(lo - o, hi - o) for (lo, hi), o
                             in zip(isect, sb.origin))
                 dst = tuple(slice(lo - b0, hi - b0) for (lo, hi), (b0, _)
@@ -507,6 +601,16 @@ class TACZReader:
         limit = self._prefix_limit(sb, sb.size, e.sz_block, local_hi)
         return self._decode_subblock(li, sb, sb.size, limit=limit)
 
+    def _fetch_bricks_prefix(self, li: int, jobs) -> list[np.ndarray]:
+        """Batched :meth:`_fetch_brick_prefix`: same prefix limits, one
+        entropy launch + one batched recon per (shape, branch) group."""
+        e = self.levels[li]
+        return self._decode_bricks(
+            li, [(sbi, self._prefix_limit(e.subblocks[sbi],
+                                          e.subblocks[sbi].size,
+                                          e.sz_block, local_hi))
+                 for sbi, local_hi in jobs])
+
     def read_roi(self, box: Box) -> list[ROILevel]:
         """Decode only the region of interest.
 
@@ -521,9 +625,9 @@ class TACZReader:
         out: list[ROILevel] = []
         for li, e in enumerate(self.levels):
             lbox = self.level_box(li, box)
-            data = self.assemble_level_roi(li, lbox,
-                                           self._fetch_brick_prefix,
-                                           self.read_level)
+            data = self.assemble_level_roi(
+                li, lbox, self._fetch_brick_prefix, self.read_level,
+                fetch_bricks=self._fetch_bricks_prefix)
             out.append(ROILevel(level=li, ratio=max(int(e.ratio), 1),
                                 box=lbox, data=data))
         return out
@@ -579,7 +683,7 @@ def probe_index_crc(path) -> int | None:
     return crc & 0xFFFFFFFF
 
 
-def open_snapshot(src) -> TACZReader:
+def open_snapshot(src, *, entropy_engine: str = "auto") -> TACZReader:
     """Open a snapshot — single-file or multi-part — behind one surface.
 
     A multi-part snapshot directory (or its ``manifest.json``) yields a
@@ -590,6 +694,8 @@ def open_snapshot(src) -> TACZReader:
     which is what lets the serving stack treat them interchangeably.
 
     :param src: snapshot path (file or directory), bytes, or file object.
+    :param entropy_engine: payload-decode engine, forwarded to the reader
+        (see :class:`TACZReader`).
     :returns: an open reader; the caller owns :meth:`TACZReader.close`.
     :raises ValueError: if the snapshot fails validation.
     :raises OSError: if the path cannot be opened.
@@ -597,8 +703,8 @@ def open_snapshot(src) -> TACZReader:
     from . import manifest as _manifest
     if _manifest.is_multipart(src):
         from .parallel import MultiPartReader
-        return MultiPartReader(src)
-    return TACZReader(src)
+        return MultiPartReader(src, entropy_engine=entropy_engine)
+    return TACZReader(src, entropy_engine=entropy_engine)
 
 
 def read(path) -> list[np.ndarray]:

@@ -30,7 +30,7 @@ import zlib
 
 import numpy as np
 
-from repro.core import huffman, she
+from repro.core import entropy, huffman
 from repro.core.amr import AMRDataset
 from repro.core.compat import HAVE_ZSTD, zstd_compress
 from repro.core.hybrid import (AMRCompressionResult, LevelResult,
@@ -102,6 +102,7 @@ def _betas_bytes(r: SZResult) -> bytes:
 
 
 def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
+               entropy_engine: str = "auto",
                ) -> tuple[bytes, fmt.LevelEntry]:
     """Serialize one compressed level into (section blob, index entry).
 
@@ -122,6 +123,10 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
     Artifacts with an *empty* result list (a parallel part writer's stub
     for a level whose every sub-block lives in other parts) serialize to
     a head + mask section only: no codebook, no payloads.
+
+    ``entropy_engine`` selects the :mod:`repro.core.entropy` engine that
+    packs the level's payloads (one batched launch instead of one encode
+    per sub-block); every engine emits byte-identical payloads.
     """
     art = lr.artifacts
     if art is None:
@@ -200,7 +205,9 @@ def pack_level(lr: LevelResult, *, payload_codec: str = "auto",
     if memo is not None:
         payloads = [(memo["packed"], memo["nbits"])]
     else:
-        payloads = she.encode_brick_payloads(
+        # one engine launch packs every sub-block payload of the level
+        # (byte-identical framing to per-payload encode, any engine)
+        payloads = entropy.get_engine(entropy_engine).encode_payloads(
             cb, [np.asarray(r.codes, dtype=np.int64) for r in results])
     for r, (packed, nbits), origin, size in zip(results, payloads,
                                                 origins, sizes):
@@ -341,15 +348,19 @@ class TACZWriter:
                  algorithm: str = "lor_reg", she: bool = True,
                  strategy: str | None = None, sz_block: int = 6,
                  batched: bool = True, lorenzo_engine: str = "auto",
+                 entropy_engine: str = "auto",
                  payload_codec: str = "auto", queue_depth: int = 2,
                  background: bool = True):
         self.path = str(path)
         self._tmp = self.path + ".tmp"
         resolve_payload_codec(payload_codec)   # fail fast on bad names
+        entropy.check_engine_name(entropy_engine)
         self._payload_codec = payload_codec
+        self._entropy_engine = entropy_engine
         self._defaults = dict(eb=eb, unit=unit, algorithm=algorithm, she=she,
                               strategy=strategy, sz_block=sz_block,
-                              batched=batched, lorenzo_engine=lorenzo_engine)
+                              batched=batched, lorenzo_engine=lorenzo_engine,
+                              entropy_engine=entropy_engine)
         self._f = open(self._tmp, "wb")
         self._f.write(fmt.pack_header())
         self._off = fmt.HEADER_SIZE
@@ -509,10 +520,12 @@ class TACZWriter:
                               strategy=d["strategy"], sz_block=d["sz_block"],
                               batched=d["batched"],
                               lorenzo_engine=d["lorenzo_engine"],
+                              entropy_engine=d["entropy_engine"],
                               ratio=ratio, keep_artifacts=True)
 
     def _append_level(self, lr: LevelResult) -> None:
-        blob, entry = pack_level(lr, payload_codec=self._payload_codec)
+        blob, entry = pack_level(lr, payload_codec=self._payload_codec,
+                                 entropy_engine=self._entropy_engine)
         entry.shift_offsets(self._off)
         self._f.write(blob)
         self._off += len(blob)

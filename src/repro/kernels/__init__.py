@@ -3,6 +3,7 @@ interpret=True on CPU; TPU v5e is the target).
 
   lorenzo3d  fused prequant + 3D Lorenzo delta and its inverse (VPU)
   hist       quant-code histogram as one-hot MXU matmul
+  huffdec    batched canonical-Huffman windows + decode walk
   qdq        per-group int8 quant/dequant (grad compression, KV cache)
 
 ops.py — jit'd public wrappers;  ref.py — pure-jnp oracles.

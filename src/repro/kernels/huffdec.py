@@ -1,0 +1,105 @@
+"""Pallas TPU kernel + jitted scan for batched canonical-Huffman decode.
+
+The batched decoder (``repro.core.entropy``) splits into two device
+stages over a stack of payload bitstreams sharing one codebook:
+
+  windows   ``W[a, t]`` = the ``maxlen``-bit window of stream ``a``
+            starting at bit ``t`` — ``maxlen`` shift-or passes over the
+            stacked 0/1 bit matrix (elementwise VPU work, gridded over
+            row tiles);
+  walk      a ``lax.scan`` advancing every stream in lockstep: gather
+            each live stream's current window, one ``searchsorted`` over
+            the left-justified canonical interval uppers yields the code
+            length, then a table gather yields the codebook row index.
+
+Windows are int32, so ``maxlen`` must stay ≤ 30 (the host engine guards
+and falls back to the vectorized-numpy path).  The walk returns codebook
+*row indices*, not symbol values — symbols are int64 and stay on the
+host.  Error flags replicate the serial oracle exactly: 1 = truncated
+(stream ends mid-codeword, or the codeword-free gap is hit with fewer
+than ``maxlen + 1`` bits left), 2 = corrupt (gap hit with enough bits
+left for the oracle's ``l > maxlen`` check to fire).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["windows_kernel", "huffdec_windows", "decode_walk"]
+
+_LANE = 128
+
+
+def windows_kernel(bits_ref, out_ref, *, maxlen: int):
+    b = bits_ref[...]
+    out_w = out_ref.shape[1]
+    w = jnp.zeros(out_ref.shape, jnp.int32)
+    for j in range(maxlen):
+        w = (w << 1) | jax.lax.dynamic_slice_in_dim(b, j, out_w, axis=1)
+    out_ref[...] = w
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("maxlen", "width", "row_tile",
+                                    "interpret"))
+def huffdec_windows(bits: jnp.ndarray, *, maxlen: int, width: int,
+                    row_tile: int = 8, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """All ``maxlen``-bit windows of a stacked 0/1 bit matrix.
+
+    ``bits`` is (A, ≥ width + maxlen - 1) uint8/int32 with zeros past
+    each row's real bits; returns (A, width) int32 windows.
+    """
+    a, _ = bits.shape
+    out_w = -(-width // _LANE) * _LANE
+    in_w = -(-(out_w + maxlen) // _LANE) * _LANE
+    a_pad = -(-a // row_tile) * row_tile
+    b = jnp.zeros((a_pad, in_w), jnp.int32)
+    b = b.at[:a, :bits.shape[1]].set(bits.astype(jnp.int32))
+    out = pl.pallas_call(
+        functools.partial(windows_kernel, maxlen=maxlen),
+        grid=(a_pad // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, in_w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_tile, out_w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((a_pad, out_w), jnp.int32),
+        interpret=interpret,
+    )(b)
+    return out[:a, :width]
+
+
+@functools.partial(jax.jit, static_argnames=("maxlen", "steps"))
+def decode_walk(wm: jnp.ndarray, nbits: jnp.ndarray, ncodes: jnp.ndarray,
+                uppers: jnp.ndarray, lens_tab: jnp.ndarray,
+                fc_tab: jnp.ndarray, fi_tab: jnp.ndarray, *,
+                maxlen: int, steps: int):
+    """Lockstep canonical walk over precomputed windows.
+
+    Returns ``(sidx, err)``: (A, steps) int32 codebook row indices (0 in
+    dead/error lanes) and the (A,) int32 per-stream error kind.
+    """
+    a = wm.shape[0]
+    n_lens = uppers.shape[0]
+
+    def step(carry, k):
+        pos, err = carry
+        act = (k < ncodes) & (err == 0)
+        w = jnp.take_along_axis(wm, pos[:, None], axis=1)[:, 0]
+        ii = jnp.searchsorted(uppers, w, side="right")
+        valid = ii < n_lens
+        l = lens_tab[jnp.minimum(ii, n_lens - 1)]
+        rem = nbits - pos
+        ok = act & valid & (l <= rem)
+        corrupt = act & ~valid & (rem >= maxlen + 1)
+        failed = act & ~ok
+        sidx = fi_tab[l] + (w >> (maxlen - l)) - fc_tab[l]
+        outk = jnp.where(ok, sidx, 0)
+        err = jnp.where(failed, jnp.where(corrupt, 2, 1), err)
+        pos = jnp.where(ok, pos + l, pos)
+        return (pos, err), outk
+
+    init = (jnp.zeros(a, jnp.int32), jnp.zeros(a, jnp.int32))
+    (_, err), outs = jax.lax.scan(step, init, jnp.arange(steps))
+    return outs.T, err

@@ -9,12 +9,14 @@ import jax
 import jax.numpy as jnp
 
 from . import hist as _hist
+from . import huffdec as _huffdec
 from . import lorenzo3d as _lorenzo3d
 from . import qdq as _qdq
 
 __all__ = ["lorenzo3d_codes", "lorenzo3d_recon",
            "lorenzo3d_codes_batched", "lorenzo3d_recon_batched", "hist",
-           "group_quant", "group_dequant", "default_interpret"]
+           "huffdec_windows", "group_quant", "group_dequant",
+           "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -54,6 +56,14 @@ def hist(codes, *, n_bins: int = 1024, chunk: int = 8192,
          interpret: bool | None = None):
     return _hist.hist(
         codes, n_bins=n_bins, chunk=chunk,
+        interpret=default_interpret() if interpret is None else interpret)
+
+
+def huffdec_windows(bits, *, maxlen: int, width: int, row_tile: int = 8,
+                    interpret: bool | None = None):
+    """Stacked maxlen-bit windows for batched canonical-Huffman decode."""
+    return _huffdec.huffdec_windows(
+        bits, maxlen=maxlen, width=width, row_tile=row_tile,
         interpret=default_interpret() if interpret is None else interpret)
 
 

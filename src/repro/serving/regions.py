@@ -300,11 +300,12 @@ class DecodePlanner:
                 groups.setdefault(
                     (li, rd.subblock_shape(li, sbi), sb.branch),
                     []).append(sbi)
-        # SHE sub-blocks: one bit-serial entropy walk per payload, then one
-        # vectorized reconstruction per (level, shape, branch) group
+        # SHE sub-blocks: one batched EntropyEngine launch per group's
+        # payloads, then one vectorized reconstruction per (level, shape,
+        # branch) group — no per-payload serial bit-walk anywhere
         for (li, shape, branch), sbis in groups.items():
             e = rd.levels[li]
-            decoded = [rd.subblock_codes(li, sbi) for sbi in sbis]
+            decoded = rd.decode_subblocks(li, sbis)
             codes = np.stack([c for c, _ in decoded])
             betas = (np.stack([b for _, b in decoded])
                      if branch == fmt.BRANCH_REG else None)
@@ -353,6 +354,11 @@ class RegionServer:
     :param shard_map: an object with ``owner(key) -> shard_id`` (normally
         :class:`repro.serving.sharded.ShardMap`); requires ``shard_id``.
     :param shard_id: this server's shard in ``shard_map``.
+    :param entropy_engine: :mod:`repro.core.entropy` engine the reader
+        decodes Huffman payloads with on cache misses (``"auto"``/
+        ``"numpy"``/``"batched"``/``"pallas"``).  Engines are
+        bit-identical, so served crops never depend on the choice;
+        hot-swapped readers keep the same engine.
     :raises ValueError: if only one of ``shard_map``/``shard_id`` is given,
         or the file fails TACZ validation.
     :raises OSError: if the file cannot be opened.
@@ -360,10 +366,12 @@ class RegionServer:
 
     def __init__(self, path, *, cache_bytes: int = 256 << 20,
                  auto_reload: bool = False, shard_map=None,
-                 shard_id: str | None = None):
+                 shard_id: str | None = None,
+                 entropy_engine: str = "auto"):
         if (shard_map is None) != (shard_id is None):
             raise ValueError("shard_map and shard_id go together")
         self.path = str(path)
+        self.entropy_engine = entropy_engine
         self.auto_reload = bool(auto_reload)
         self.shard_map = shard_map
         self.shard_id = shard_id
@@ -374,7 +382,8 @@ class RegionServer:
         # immediately when idle), so republishing never accumulates fds
         self._inflight: dict[int, int] = {}
         self._retired: dict[int, TACZReader] = {}
-        self._reader = open_snapshot(self.path)
+        self._reader = open_snapshot(self.path,
+                                     entropy_engine=entropy_engine)
         self._owned = self._compute_owned(self._reader)
         self._planner = DecodePlanner(self._reader, self._owned)
 
@@ -439,7 +448,8 @@ class RegionServer:
             if crc == self.snapshot_crc:                  # raced reload
                 return False
             try:
-                reader = open_snapshot(self.path)
+                reader = open_snapshot(self.path,
+                                       entropy_engine=self.entropy_engine)
             except (OSError, ValueError):
                 return False
             # in-flight requests may still hold the old reader — close it

@@ -107,8 +107,18 @@ def test_serving_doc_covers_required_topics(serving_doc):
                    "cache_bytes", "maybe_reload", "ShardMap",
                    "ShardedRegionRouter", "rendezvous", "index_crc",
                    "tacz_format.md", "load_balance", "manifest.json",
-                   "open_snapshot", "ParallelTACZWriter", "open_parts"]:
+                   "open_snapshot", "ParallelTACZWriter", "open_parts",
+                   "entropy_engine", "EntropyEngine", "decode_subblocks",
+                   "repro.core.entropy"]:
         assert needle in serving_doc, f"serving.md lost coverage: {needle}"
+
+
+def test_format_doc_entropy_framing_note(format_doc):
+    """§4's engine-independence note: the batched entropy engines must
+    never be allowed to change the wire format."""
+    assert "repro.core.entropy" in format_doc
+    assert "engine-independent" in format_doc
+    assert "byte-identical payloads" in format_doc
 
 
 def test_docs_reference_live_apis(serving_doc):
@@ -124,8 +134,13 @@ def test_docs_reference_live_apis(serving_doc):
                  "serve"):
         assert hasattr(serving, attr)
     for attr in ("subblock_keys", "level_signature", "read_level_box",
-                 "read_roi"):
+                 "read_roi", "decode_subblocks"):
         assert hasattr(TACZReader, attr)
+    from repro.core import entropy
+    for name in ("auto", "numpy", "batched", "pallas"):
+        assert name in entropy.ENGINE_NAMES
+    assert "entropy_engine" in inspect.signature(
+        serving.RegionServer.__init__).parameters
     for attr in ("open_snapshot", "write_multipart", "ParallelTACZWriter",
                  "MultiPartReader"):
         assert hasattr(repro_io, attr)

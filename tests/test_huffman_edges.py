@@ -53,6 +53,29 @@ def test_multi_symbol_truncation_detected():
         huffman.decode(cb, np.zeros(0, np.uint8), 0, 200)
 
 
+@pytest.mark.parametrize("n_unique", [1, 2, 17, 300])
+def test_encoded_size_bits_matches_encode(n_unique):
+    """Regression for the vectorized ``encoded_size_bits``: both call
+    forms must price exactly what ``encode`` emits, for every alphabet
+    size down to the single-symbol edge."""
+    rng = np.random.default_rng(n_unique)
+    symbols = rng.choice(5000, size=n_unique, replace=False) - 2500
+    data = rng.choice(symbols, size=400)
+    cb = huffman.build_codebook(data)
+    _, nbits = huffman.encode(cb, data)
+    assert huffman.encoded_size_bits(cb, data=data) == nbits
+    s, f = np.unique(data, return_counts=True)
+    assert huffman.encoded_size_bits(cb, symbols=s, freqs=f) == nbits
+
+
+def test_encoded_size_bits_empty():
+    cb = huffman.build_codebook(np.zeros(0, dtype=np.int64))
+    assert huffman.encoded_size_bits(cb,
+                                     data=np.zeros(0, np.int64)) == 0
+    assert huffman.encoded_size_bits(cb, symbols=np.zeros(0, np.int64),
+                                     freqs=np.zeros(0, np.int64)) == 0
+
+
 @pytest.mark.parametrize("n_unique", [0, 1, 2, 17, 300])
 def test_codebook_serialization_roundtrip(n_unique):
     rng = np.random.default_rng(n_unique)
