@@ -8,9 +8,15 @@ Measured: the cold pass (first batch — entropy decode + batched recon),
 the warm pass (same batch again — cache hits only), and the uncached
 ``read_roi`` replay of the same boxes for reference.
 
-Acceptance bar (enforced, like the ROI-decode bench): the warm repeated
-batch must run **≥3× faster** than the cold batch — if the cache stops
-absorbing the bit-serial Huffman walks, serving regressed.
+Acceptance bars (enforced, like the ROI-decode bench):
+
+  * the warm repeated batch must run **≥3× faster** than the cold batch
+    — if the cache stops absorbing the bit-serial Huffman walks, serving
+    regressed;
+  * the fully instrumented warm path (metrics + tracing recording into
+    ``repro.obs``) must stay **≥0.95×** the throughput of the same
+    workload with the registry disabled — observability may not tax the
+    hot path (ISSUE 7).
 """
 from __future__ import annotations
 
@@ -19,11 +25,14 @@ import tempfile
 
 import numpy as np
 
-from repro import io as tacz
+from repro import io as tacz, obs
 from repro.core import hybrid
 from repro.serving.regions import RegionServer
 
-from .common import dataset, eb_for, timed, write_csv
+from .common import dataset, eb_for, record_summary, timed, write_csv
+
+#: instrumented warm throughput / uninstrumented warm throughput
+OBS_OVERHEAD_FLOOR = 0.95
 
 
 def _workload(shape) -> list[tuple]:
@@ -38,10 +47,30 @@ def _workload(shape) -> list[tuple]:
     return boxes
 
 
+def _obs_overhead_ratio(srv, boxes, repeat: int = 10) -> float:
+    """Instrumented / uninstrumented warm throughput on one server.
+
+    Both passes hit the same warm cache; the only difference is whether
+    the ``repro.obs`` registry records.  Ratio > 1 means the instrumented
+    path was faster (noise); the gate only cares about the floor.
+    """
+    was = obs.is_enabled()
+    try:
+        obs.set_enabled(True)
+        srv.get_regions(boxes)                      # make both passes warm
+        _, t_on = timed(srv.get_regions, boxes, repeat=repeat)
+        obs.set_enabled(False)
+        _, t_off = timed(srv.get_regions, boxes, repeat=repeat)
+    finally:
+        obs.set_enabled(was)
+    return t_off / max(t_on, 1e-12)
+
+
 def run(quick: bool = False):
     names = ["run1_z10"] if quick else ["run1_z10", "run2_t4"]
     rows = []
     headline = None
+    overhead = None
     for name in names:
         ds = dataset(name)
         res = hybrid.compress_amr(ds, eb=eb_for(ds, 1e-3))
@@ -59,25 +88,42 @@ def run(quick: bool = False):
                 _, t_cold = timed(srv.get_regions, boxes)
                 _, t_warm = timed(srv.get_regions, boxes, repeat=3)
                 s = srv.cache.stats()
+                ratio = _obs_overhead_ratio(srv, boxes)
             speedup = t_cold / max(t_warm, 1e-12)
             rows.append((name, len(boxes), round(level_bytes / 1e3, 1),
                          round(budget / 1e3, 1),
                          round(t_serial * 1e3, 2), round(t_cold * 1e3, 2),
                          round(t_warm * 1e3, 3), round(speedup, 2),
-                         s["hits"], s["misses"], s["evictions"]))
+                         s["hits"], s["misses"], s["evictions"],
+                         round(ratio, 3)))
             if name == names[0]:
                 headline = speedup
+                overhead = ratio
     path = write_csv("region_serving",
                      ["dataset", "n_boxes", "level_kb", "budget_kb",
                       "roi_serial_ms", "cold_ms", "warm_ms",
-                      "warm_speedup", "hits", "misses", "evictions"],
+                      "warm_speedup", "hits", "misses", "evictions",
+                      "obs_overhead_ratio"],
                      rows)
+    record_summary("region_serving/warm_over_cold",
+                   metric="warm_speedup", value=round(headline or 0.0, 2),
+                   threshold=3.0)
+    record_summary("region_serving/obs_overhead",
+                   metric="instrumented_over_uninstrumented",
+                   value=round(overhead or 0.0, 3),
+                   threshold=OBS_OVERHEAD_FLOOR)
     if headline is not None and headline < 3.0:
         raise AssertionError(
             f"region-serving acceptance regressed: warm repeated ROI batch "
             f"only {headline:.1f}x faster than cold at a 25%-of-level "
             f"cache budget (need >=3x)")
-    return {"csv": path, "warm_over_cold": round(headline or 0.0, 1)}
+    if overhead is not None and overhead < OBS_OVERHEAD_FLOOR:
+        raise AssertionError(
+            f"observability overhead regressed: instrumented warm serving "
+            f"runs at {overhead:.2f}x the uninstrumented baseline "
+            f"(floor {OBS_OVERHEAD_FLOOR}x)")
+    return {"csv": path, "warm_over_cold": round(headline or 0.0, 1),
+            "obs_overhead_ratio": round(overhead or 0.0, 3)}
 
 
 if __name__ == "__main__":

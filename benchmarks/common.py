@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: dataset cache, timing, CSV output."""
+"""Shared benchmark utilities: dataset cache, timing, CSV output, and
+the machine-readable pass/fail summary (``bench_summary.json``)."""
 from __future__ import annotations
 
+import json
 import os
 import time
 from functools import lru_cache
@@ -10,6 +12,11 @@ import numpy as np
 from repro.core import amr
 
 RESULTS_DIR = os.environ.get("BENCH_RESULTS", "results/bench")
+
+#: One JSON file per bench run: ``[{name, metric, value, threshold,
+#: higher_is_better, passed}, ...]`` — the artifact CI uploads so the
+#: performance trajectory is diffable without parsing per-bench CSVs.
+SUMMARY_NAME = "bench_summary.json"
 
 
 @lru_cache(maxsize=None)
@@ -38,4 +45,47 @@ def write_csv(name: str, header: list[str], rows: list[tuple]):
         f.write(",".join(header) + "\n")
         for r in rows:
             f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def record_summary(name: str, *, metric: str, value,
+                   threshold: float | None = None,
+                   higher_is_better: bool = True,
+                   passed: bool | None = None) -> str:
+    """Merge one benchmark verdict into ``bench_summary.json``.
+
+    Entries are keyed by ``name`` (re-running a benchmark overwrites its
+    row, so the file always reflects the latest run) and kept sorted.
+    When ``passed`` is not given it is derived from ``threshold``:
+    ``value >= threshold`` (or ``<=`` with ``higher_is_better=False``);
+    with neither, the benchmark ran to completion and counts as passed.
+
+    :returns: the summary file's path.
+    """
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, SUMMARY_NAME)
+    entries: dict[str, dict] = {}
+    if os.path.exists(path):
+        try:
+            with open(path, encoding="utf-8") as f:
+                entries = {e["name"]: e for e in json.load(f)}
+        except (json.JSONDecodeError, KeyError, TypeError):
+            entries = {}   # a corrupt summary never blocks a bench run
+    if passed is None:
+        if threshold is None or value is None:
+            passed = True
+        elif higher_is_better:
+            passed = float(value) >= float(threshold)
+        else:
+            passed = float(value) <= float(threshold)
+    entries[name] = {"name": name, "metric": metric, "value": value,
+                     "threshold": threshold,
+                     "higher_is_better": higher_is_better,
+                     "passed": bool(passed)}
+    tmp = path + ".tmp"
+    with open(tmp, "w", encoding="utf-8") as f:
+        json.dump(sorted(entries.values(), key=lambda e: e["name"]),
+                  f, indent=2)
+        f.write("\n")
+    os.replace(tmp, path)
     return path

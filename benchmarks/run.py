@@ -16,6 +16,7 @@ from . import (bench_density_sweep, bench_distributed, bench_entropy,
                bench_power_spectrum, bench_rate_distortion,
                bench_region_serving, bench_roi_decode,
                bench_sharded_serving, bench_she, bench_throughput)
+from .common import record_summary
 
 BENCHES = [
     ("rate_distortion (Figs 20-27)", bench_rate_distortion),
@@ -48,9 +49,21 @@ def main() -> None:
         if args.only and args.only not in name:
             continue
         t0 = time.perf_counter()
-        out = mod.run(quick=args.quick)
+        try:
+            out = mod.run(quick=args.quick)
+        except Exception as exc:
+            record_summary(name, metric="error", value=str(exc)[:200],
+                           passed=False)
+            raise
         dt = time.perf_counter() - t0
         headline = {k: v for k, v in out.items() if k != "csv"}
+        # one verdict row per benchmark: first headline metric + the
+        # gate threshold when the module reports one (a raising gate is
+        # recorded as failed above)
+        key = next(iter(headline), None)
+        record_summary(name, metric=key or "seconds",
+                       value=headline.get(key, round(dt, 2)),
+                       threshold=out.get("threshold"), passed=True)
         print(f"{name},{dt:.1f},\"{json.dumps(headline)[:160]}\"", flush=True)
 
 

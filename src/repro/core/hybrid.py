@@ -20,10 +20,13 @@ Level reconstructions are scattered back; empty regions are exact zeros.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from .. import obs
+from ..obs import metrics as obsm
 from . import huffman
 from .akdtree import akdtree_partition
 from .amr import AMRDataset
@@ -192,6 +195,28 @@ def compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
                    ratio: int = 1, keep_artifacts: bool = True,
                    lorenzo_engine: str = "auto",
                    entropy_engine: str = "auto") -> LevelResult:
+    """One level end to end; records per-strategy wall time into
+    ``tacz_compress_level_seconds`` (stage timings — prequant,
+    branch_score, entropy — are recorded inside sz/she)."""
+    with obs.trace("compress_level"):
+        t0 = time.perf_counter()
+        res = _compress_level(
+            data, mask, eb=eb, unit=unit, algorithm=algorithm, she=she,
+            strategy=strategy, sz_block=sz_block, batched=batched,
+            ratio=ratio, keep_artifacts=keep_artifacts,
+            lorenzo_engine=lorenzo_engine, entropy_engine=entropy_engine)
+        obsm.COMPRESS_LEVEL_SECONDS.labels(res.strategy).observe(
+            time.perf_counter() - t0)
+        return res
+
+
+def _compress_level(data: np.ndarray, mask: np.ndarray, *, eb: float,
+                    unit: int = 8, algorithm: str = "lor_reg",
+                    she: bool = True, strategy: str | None = None,
+                    sz_block: int = 6, batched: bool = True,
+                    ratio: int = 1, keep_artifacts: bool = True,
+                    lorenzo_engine: str = "auto",
+                    entropy_engine: str = "auto") -> LevelResult:
     grid, strategy, density, subblocks = partition_level(
         data, mask, unit=unit, algorithm=algorithm, she=she,
         strategy=strategy)

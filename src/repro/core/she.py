@@ -38,6 +38,7 @@ import numpy as np
 from . import entropy, huffman
 from .compat import HAVE_ZSTD, zstd_size_bits
 from .sz import SZResult, compress_lor_reg, compress_lor_reg_batched
+from ..obs import metrics as obsm
 
 __all__ = ["SHEResult", "she_encode", "aggregate_histogram",
            "encode_brick_payloads", "decode_brick_payloads"]
@@ -104,27 +105,30 @@ def _shared_entropy_stage(results: list[SZResult], *, use_zstd: bool,
     lengths (``sum == encode(...)[1]``); the packed bitstream is only
     materialized when a zstd pass will actually consume it.
     """
-    all_codes = (np.concatenate([r.codes for r in results])
-                 if results else np.zeros(0, dtype=np.int64))
-    symbols, freqs = aggregate_histogram(all_codes, engine=engine)
-    cb = huffman.build_codebook(symbols=symbols, freqs=freqs)
-    # one symbol-index pass prices the stream AND feeds the encoder
-    idx = (huffman.symbol_indices(cb, all_codes.astype(np.int64))
-           if all_codes.size else np.zeros(0, np.int64))
-    lengths = cb.lengths[idx]
-    payload = int(lengths.sum())
-    if use_zstd and HAVE_ZSTD and payload:
-        (blob, _), = entropy.get_engine(entropy_engine).encode_payloads(
-            cb, [all_codes])
-        zbits = zstd_size_bits(blob)
-        if zbits is not None:
-            payload = min(payload, zbits)
-    # per-brick payloads (diagnostics only; totals use the shared stream) —
-    # priced via the same vectorized lookup, split at brick boundaries
-    splits = np.cumsum([r.codes.size for r in results])[:-1]
-    for r, chunk in zip(results, np.split(lengths, splits)):
-        r.payload_bits = int(chunk.sum())
-    return int(payload), huffman.codebook_size_bits(cb), cb
+    with obsm.timed(obsm.COMPRESS_STAGE_SECONDS.labels("entropy"),
+                    "entropy"):
+        all_codes = (np.concatenate([r.codes for r in results])
+                     if results else np.zeros(0, dtype=np.int64))
+        symbols, freqs = aggregate_histogram(all_codes, engine=engine)
+        cb = huffman.build_codebook(symbols=symbols, freqs=freqs)
+        # one symbol-index pass prices the stream AND feeds the encoder
+        idx = (huffman.symbol_indices(cb, all_codes.astype(np.int64))
+               if all_codes.size else np.zeros(0, np.int64))
+        lengths = cb.lengths[idx]
+        payload = int(lengths.sum())
+        if use_zstd and HAVE_ZSTD and payload:
+            (blob, _), = entropy.get_engine(entropy_engine).encode_payloads(
+                cb, [all_codes])
+            zbits = zstd_size_bits(blob)
+            if zbits is not None:
+                payload = min(payload, zbits)
+        # per-brick payloads (diagnostics only; totals use the shared
+        # stream) — priced via the same vectorized lookup, split at brick
+        # boundaries
+        splits = np.cumsum([r.codes.size for r in results])[:-1]
+        for r, chunk in zip(results, np.split(lengths, splits)):
+            r.payload_bits = int(chunk.sum())
+        return int(payload), huffman.codebook_size_bits(cb), cb
 
 
 def encode_brick_payloads(cb: huffman.Codebook,

@@ -44,6 +44,7 @@ import numpy as np
 
 from . import huffman
 from .compat import zstd_size_bits
+from ..obs import metrics as obsm
 
 __all__ = [
     "SZResult",
@@ -707,30 +708,34 @@ def compress_lor_reg_batched(x: np.ndarray, eb: float, *, block: int = 6,
     b, _ = reg_block_grid(bshape, block)
 
     # --- Lorenzo branch: zero-halo dual-quant Lorenzo per brick ------------
-    if engine == "auto":
-        engine = "pallas" if _tpu_attached() else "numpy"
-    codes_lor = None
-    if engine == "pallas":
-        codes_lor = _lorenzo_codes_batched_pallas(x, eb)
+    with obsm.timed(obsm.COMPRESS_STAGE_SECONDS.labels("prequant"),
+                    "prequant"):
+        if engine == "auto":
+            engine = "pallas" if _tpu_attached() else "numpy"
+        codes_lor = None
+        if engine == "pallas":
+            codes_lor = _lorenzo_codes_batched_pallas(x, eb)
+            if codes_lor is None:
+                engine = "numpy"
         if codes_lor is None:
-            engine = "numpy"
-    if codes_lor is None:
-        codes_lor = lorenzo_nd_codes(prequant(x, eb), axes=(1, 2, 3))
-    cost_lor = _code_cost_bits_rows(codes_lor)
+            codes_lor = lorenzo_nd_codes(prequant(x, eb), axes=(1, 2, 3))
 
-    # --- Regression branch: per-block plane fits ---------------------------
+    # --- Regression branch: per-block plane fits + branch scoring ----------
     # Degenerate b == 1 (zero coordinate variance → NaN betas) can never
     # beat Lorenzo; skip the fit, matching the sequential path.
-    n_blocks = 0
-    if b >= 2:
-        xb, bgrid = _block_view_batched(x, b)
-        betas, fit = _regression_fit(xb, b)
-        codes_reg = np.rint((xb - fit) / (2.0 * eb)).astype(np.int64)
-        n_blocks = int(np.prod(bgrid))
-        cost_reg = _code_cost_bits_rows(codes_reg) + n_blocks * 4 * 32
-        use_reg = cost_reg < cost_lor
-    else:
-        use_reg = np.zeros(n, dtype=bool)
+    with obsm.timed(obsm.COMPRESS_STAGE_SECONDS.labels("branch_score"),
+                    "branch_score"):
+        cost_lor = _code_cost_bits_rows(codes_lor)
+        n_blocks = 0
+        if b >= 2:
+            xb, bgrid = _block_view_batched(x, b)
+            betas, fit = _regression_fit(xb, b)
+            codes_reg = np.rint((xb - fit) / (2.0 * eb)).astype(np.int64)
+            n_blocks = int(np.prod(bgrid))
+            cost_reg = _code_cost_bits_rows(codes_reg) + n_blocks * 4 * 32
+            use_reg = cost_reg < cost_lor
+        else:
+            use_reg = np.zeros(n, dtype=bool)
 
     # --- per-brick branch choice: reconstruct only the winning branch ------
     recon = np.empty(x.shape, dtype=np.float32)

@@ -55,6 +55,7 @@ from repro.core.gsp import gsp_pad
 from repro.core.hybrid import (AMRCompressionResult, LevelArtifacts,
                                LevelResult, compress_level, partition_level)
 from repro.core.she import she_encode
+from repro.obs import metrics as obsm
 
 from . import manifest as mfst
 from . import placement
@@ -193,7 +194,7 @@ def _part_worker(pi: int, part_path: str, payload_codec: str,
                 break
             if isinstance(task, str) and task == _ABORT:
                 w.abort()
-                result_q.put(("aborted", pi, None, None))
+                result_q.put(("aborted", pi, None, None, None))
                 return
             w.add_compressed(_task_to_level(task))
         # two-phase commit, phase 1: finalize + fsync the tmp but do NOT
@@ -201,7 +202,10 @@ def _part_worker(pi: int, part_path: str, payload_codec: str,
         # reported, so a failing sibling never leaves a previously
         # published snapshot half-replaced
         tmp = w.close(publish=False)
-        result_q.put(("ok", pi, w.index_crc, os.path.getsize(tmp)))
+        # the obs summary rides the ok tuple: a forked worker's registry
+        # dies with the process, so its stage totals go home this way
+        result_q.put(("ok", pi, w.index_crc, os.path.getsize(tmp),
+                      w.obs_summary()))
     except BaseException as exc:  # report, never hang the producer
         if w is not None:
             try:
@@ -209,7 +213,8 @@ def _part_worker(pi: int, part_path: str, payload_codec: str,
             except Exception:   # pragma: no cover - secondary failure
                 pass
         try:
-            result_q.put(("err", pi, f"{type(exc).__name__}: {exc}", None))
+            result_q.put(("err", pi, f"{type(exc).__name__}: {exc}",
+                          None, None))
         except Exception:       # pragma: no cover - broken pipe on crash
             pass
 
@@ -331,6 +336,10 @@ class ParallelTACZWriter:
                                  daemon=True)
                 for pi in range(self.parts)]
         self._results: dict[int, tuple] = {}
+        #: per-part writer obs summaries, filled in by :meth:`close`
+        #: (``{part_index: {levels, encode_seconds, pack_seconds,
+        #: publish_seconds, bytes}}``)
+        self.worker_obs: dict[int, dict] = {}
         for w in self._workers:
             w.start()
 
@@ -579,10 +588,23 @@ class ParallelTACZWriter:
             os.replace(final + ".tmp", final)
         parts = []
         for pi in range(self.parts):
-            _, _, index_crc, size = self._results[pi]
+            _, _, index_crc, size, obs_sum = self._results[pi]
             parts.append({"name": mfst.part_name(pi), "size": int(size),
                           "index_crc": int(index_crc) & 0xFFFFFFFF,
                           "levels": self._part_levels[pi]})
+            self.worker_obs[pi] = obs_sum or {}
+            if self.mode == "process" and obs_sum:
+                # thread-mode workers already recorded into this process's
+                # registry; forked workers recorded into their own, so
+                # fold the reported totals in here (one observation per
+                # part and stage — totals are exact, bucket shapes are
+                # per-part aggregates)
+                for stage in ("encode", "pack", "publish"):
+                    sec = obs_sum.get(f"{stage}_seconds", 0.0)
+                    if sec:
+                        obsm.WRITER_LEVEL_SECONDS.labels(stage).observe(sec)
+                obsm.WRITER_LEVELS.inc(obs_sum.get("levels", 0))
+                obsm.WRITER_BYTES.inc(obs_sum.get("bytes", 0))
         body = {"magic": mfst.MANIFEST_MAGIC,
                 "version": mfst.MANIFEST_VERSION,
                 "n_levels": self._n_levels,

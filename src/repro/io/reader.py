@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import entropy, huffman, sz
 from repro.core.blocks import make_block_grid
 from repro.core.compat import HAVE_ZSTD, zstd_decompress
+from repro.obs import metrics as obsm
 from repro.core.gsp import gsp_unpad
 
 from . import format as fmt
@@ -272,9 +273,11 @@ class TACZReader:
             else:
                 raise ValueError(f"unknown payload codec {sb.codec}")
         if huff:
-            decoded = entropy.get_engine(self._entropy_engine). \
-                decode_payloads(self._codebook(li),
-                                [payload for _, payload in huff])
+            with obsm.timed(obsm.ENTROPY_DECODE_SECONDS.labels(),
+                            "entropy_decode"):
+                decoded = entropy.get_engine(self._entropy_engine). \
+                    decode_payloads(self._codebook(li),
+                                    [payload for _, payload in huff])
             for (pos, _), codes in zip(huff, decoded):
                 out[pos] = (codes, metas[pos][2])
         for pos, (sb, n_decode, _) in enumerate(metas):

@@ -25,12 +25,14 @@ from __future__ import annotations
 import os
 import queue
 import threading
+import time
 import weakref
 import zlib
 
 import numpy as np
 
 from repro.core import entropy, huffman
+from repro.obs import metrics as obsm
 from repro.core.amr import AMRDataset
 from repro.core.compat import HAVE_ZSTD, zstd_compress
 from repro.core.hybrid import (AMRCompressionResult, LevelResult,
@@ -369,6 +371,12 @@ class TACZWriter:
         #: same value ``probe_index_crc`` reads back from the footer)
         self.index_crc: int | None = None
         self._err: BaseException | None = None
+        # plain per-writer stage totals (no registry round-trip): the
+        # process-mode parallel writer ships these back over the result
+        # queue so the producer can merge them into its own registry
+        self._obs = {"levels": 0, "encode_seconds": 0.0,
+                     "pack_seconds": 0.0, "publish_seconds": 0.0,
+                     "bytes": 0}
         self._background = bool(background)
         self._finalized = False          # close() published the file
         self._aborted = False            # tmp dropped; writer unusable
@@ -445,16 +453,20 @@ class TACZWriter:
         try:
             if self._err is not None:
                 raise self._err
-            index = fmt.pack_index(self._entries)
-            self._f.write(index)
-            self.index_crc = fmt.index_crc(index)
-            self._f.write(fmt.pack_footer(self._off, len(index),
-                                          self.index_crc))
-            self._f.flush()
-            os.fsync(self._f.fileno())
-            self._f.close()
-            if publish:
-                os.replace(self._tmp, self.path)
+            with obsm.timed(obsm.WRITER_LEVEL_SECONDS.labels("publish"),
+                            "publish"):
+                t0 = time.perf_counter()
+                index = fmt.pack_index(self._entries)
+                self._f.write(index)
+                self.index_crc = fmt.index_crc(index)
+                self._f.write(fmt.pack_footer(self._off, len(index),
+                                              self.index_crc))
+                self._f.flush()
+                os.fsync(self._f.fileno())
+                self._f.close()
+                if publish:
+                    os.replace(self._tmp, self.path)
+                self._obs["publish_seconds"] += time.perf_counter() - t0
         except BaseException:
             self.abort()
             raise
@@ -515,21 +527,42 @@ class TACZWriter:
             return item[1]
         _, data, mask, eb, ratio, unit = item
         d = self._defaults
-        return compress_level(data, mask, eb=eb, unit=unit,
-                              algorithm=d["algorithm"], she=d["she"],
-                              strategy=d["strategy"], sz_block=d["sz_block"],
-                              batched=d["batched"],
-                              lorenzo_engine=d["lorenzo_engine"],
-                              entropy_engine=d["entropy_engine"],
-                              ratio=ratio, keep_artifacts=True)
+        with obsm.timed(obsm.WRITER_LEVEL_SECONDS.labels("encode"),
+                        "encode"):
+            t0 = time.perf_counter()
+            lr = compress_level(data, mask, eb=eb, unit=unit,
+                                algorithm=d["algorithm"], she=d["she"],
+                                strategy=d["strategy"],
+                                sz_block=d["sz_block"],
+                                batched=d["batched"],
+                                lorenzo_engine=d["lorenzo_engine"],
+                                entropy_engine=d["entropy_engine"],
+                                ratio=ratio, keep_artifacts=True)
+            self._obs["encode_seconds"] += time.perf_counter() - t0
+            return lr
 
     def _append_level(self, lr: LevelResult) -> None:
-        blob, entry = pack_level(lr, payload_codec=self._payload_codec,
-                                 entropy_engine=self._entropy_engine)
-        entry.shift_offsets(self._off)
-        self._f.write(blob)
-        self._off += len(blob)
-        self._entries.append(entry)
+        with obsm.timed(obsm.WRITER_LEVEL_SECONDS.labels("pack"), "pack"):
+            t0 = time.perf_counter()
+            blob, entry = pack_level(lr, payload_codec=self._payload_codec,
+                                     entropy_engine=self._entropy_engine)
+            entry.shift_offsets(self._off)
+            self._f.write(blob)
+            self._off += len(blob)
+            self._entries.append(entry)
+            self._obs["pack_seconds"] += time.perf_counter() - t0
+            self._obs["levels"] += 1
+            self._obs["bytes"] += len(blob)
+        obsm.WRITER_LEVELS.inc()
+        obsm.WRITER_BYTES.inc(len(blob))
+
+    def obs_summary(self) -> dict:
+        """Plain-dict stage totals for this writer (levels appended,
+        encode/pack/publish seconds, payload bytes).  Process-mode part
+        workers return this through the result queue so the producer can
+        fold worker time into its own registry — worker processes have
+        their own (unscraped) ``repro.obs`` registry."""
+        return dict(self._obs)
 
 
 def write(path: str, obj, *, eb: float | list[float] | None = None,

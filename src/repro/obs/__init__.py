@@ -1,0 +1,30 @@
+"""``repro.obs`` — dependency-free observability for the TACZ pipeline.
+
+Three pieces, all stdlib-only:
+
+  * :mod:`repro.obs.registry` — a thread-safe ``MetricsRegistry`` with
+    counters, gauges, and fixed-bucket histograms, rendering Prometheus
+    text exposition and estimating quantiles from the buckets.
+  * :mod:`repro.obs.trace` — a ``Span``/``trace()`` context-manager API
+    for nested per-stage timings, plus request IDs and the
+    ``X-Repro-Request-Id`` header name.
+  * :mod:`repro.obs.metrics` — the process-wide default ``REGISTRY``
+    and the metric catalog every instrumented component records into.
+
+See ``docs/observability.md`` for the full catalog and the tracing
+model.
+"""
+from . import metrics
+from .metrics import REGISTRY, is_enabled, set_enabled, timed
+from .registry import (DEFAULT_TIME_BUCKETS, Counter, Gauge, Histogram,
+                       MetricsRegistry)
+from .trace import (REQUEST_ID_HEADER, Span, current_span, new_request_id,
+                    root_span, trace)
+
+__all__ = [
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "DEFAULT_TIME_BUCKETS",
+    "Span", "trace", "root_span", "current_span",
+    "new_request_id", "REQUEST_ID_HEADER",
+    "REGISTRY", "metrics", "set_enabled", "is_enabled", "timed",
+]

@@ -18,11 +18,41 @@ import urllib.request
 
 import numpy as np
 
+from repro import obs
 from repro.io.reader import ROILevel
 
 from .http_api import format_box, parse_box
 
-__all__ = ["RegionClient"]
+__all__ = ["RegionClient", "RegionAPIError"]
+
+
+class RegionAPIError(urllib.error.HTTPError):
+    """An HTTP error response from a region endpoint, with context.
+
+    Subclasses ``urllib.error.HTTPError`` (existing ``except`` clauses
+    keep working) but the message carries everything a fleet operator
+    needs to attribute the failure: the URL, the HTTP status + reason,
+    an excerpt of the response body (the server's JSON ``error``
+    message), and the server's request ID — greppable in the shard's
+    access log via ``rid=<id>``.
+    """
+
+    def __init__(self, url: str, status: int, reason: str,
+                 headers, body: bytes):
+        super().__init__(url, status, reason, headers, io.BytesIO(body))
+        self.request_id = (headers.get(obs.REQUEST_ID_HEADER, "")
+                           if headers else "") or ""
+        try:
+            excerpt = body[:200].decode("utf-8", "replace")
+        except Exception:   # pragma: no cover - bytes always decode here
+            excerpt = repr(body[:200])
+        self.body_excerpt = excerpt
+
+    def __str__(self) -> str:
+        rid = f" request_id={self.request_id}" if self.request_id else ""
+        body = f": {self.body_excerpt}" if self.body_excerpt else ""
+        return (f"HTTP {self.code} {self.reason} from {self.url}"
+                f"{rid}{body}")
 
 
 class RegionClient:
@@ -50,18 +80,35 @@ class RegionClient:
         self._local = threading.local()   # one keep-alive conn per thread
 
     def _get(self, path: str):
-        return urllib.request.urlopen(self.base_url + path,
-                                      timeout=self.timeout)
+        """``GET`` with contextual errors: a 4xx/5xx response raises
+        :class:`RegionAPIError` (status + body excerpt + the server's
+        request ID) instead of a bare ``HTTPError``."""
+        try:
+            return urllib.request.urlopen(self.base_url + path,
+                                          timeout=self.timeout)
+        except urllib.error.HTTPError as exc:
+            body = b""
+            try:
+                body = exc.read()
+            except Exception:   # pragma: no cover - unreadable error body
+                pass
+            raise RegionAPIError(self.base_url + path, exc.code,
+                                 exc.reason, exc.headers, body) from exc
 
-    def _post(self, path: str, body: bytes) -> tuple[dict, bytes]:
+    def _post(self, path: str, body: bytes,
+              headers: dict | None = None) -> tuple[dict, bytes]:
         """``POST`` over a per-thread persistent HTTP/1.1 connection.
 
         The batched-regions route is the hot path of the sharded router
         (several POSTs per batch per shard); reusing the connection avoids
         a TCP handshake per request.  A dropped/stale connection is
         retried once on a fresh one; HTTP errors surface as
-        ``urllib.error.HTTPError`` (same contract as the GET routes).
+        :class:`RegionAPIError` (an ``urllib.error.HTTPError`` subclass,
+        same contract as the GET routes).
         """
+        send_headers = {"Content-Type": "application/json"}
+        if headers:
+            send_headers.update(headers)
         for attempt in (0, 1):
             conn = getattr(self._local, "conn", None)
             try:
@@ -70,7 +117,7 @@ class RegionClient:
                                           timeout=self.timeout)
                     self._local.conn = conn
                 conn.request("POST", self._prefix + path, body=body,
-                             headers={"Content-Type": "application/json"})
+                             headers=send_headers)
                 resp = conn.getresponse()
                 data = resp.read()
             except (http.client.HTTPException, OSError) as exc:
@@ -83,9 +130,8 @@ class RegionClient:
             if resp.status >= 400:
                 self._local.conn = None
                 conn.close()
-                raise urllib.error.HTTPError(
-                    self.base_url + path, resp.status, resp.reason,
-                    resp.headers, io.BytesIO(data))
+                raise RegionAPIError(self.base_url + path, resp.status,
+                                     resp.reason, resp.headers, data)
             if resp.will_close:
                 self._local.conn = None
                 conn.close()
@@ -146,7 +192,7 @@ class RegionClient:
         """
         return self.regions_meta(boxes, levels)[1]
 
-    def regions_meta(self, boxes, levels=None,
+    def regions_meta(self, boxes, levels=None, *, request_id=None,
                      ) -> tuple[int, list[list[ROILevel]]]:
         """Batched fetch that also returns the serving snapshot identity.
 
@@ -157,14 +203,36 @@ class RegionClient:
 
         :returns: ``(snapshot_crc, results)`` with ``results`` as in
             :meth:`regions`.
-        :raises urllib.error.HTTPError: on a 4xx/5xx response.
+        :raises RegionAPIError: on a 4xx/5xx response.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
+        header, out = self.regions_ex(boxes, levels,
+                                      request_id=request_id)
+        return int(header["snapshot_crc"]), out
+
+    def regions_ex(self, boxes, levels=None, *, request_id=None,
+                   ) -> tuple[dict, list[list[ROILevel]]]:
+        """Batched fetch returning the full response header.
+
+        The header carries ``snapshot_crc``, the server's ``request_id``
+        (equal to ``request_id`` when one was sent — the fleet-tracing
+        contract), and ``trace`` — the server's span-tree summary for
+        this batch (stage timings in milliseconds).
+
+        :param request_id: optional caller-minted ID propagated via the
+            ``X-Repro-Request-Id`` header (the sharded router stamps one
+            per batch so every shard logs the same ID).
+        :returns: ``(response_header_dict, results)``.
+        :raises RegionAPIError: on a 4xx/5xx response.
         :raises urllib.error.URLError: if the endpoint is unreachable.
         """
         req = {"boxes": [[list(r) for r in box] for box in boxes]}
         if levels is not None:
             req["levels"] = [int(li) for li in levels]
         body = json.dumps(req).encode()
-        _, blob = self._post("/v1/regions", body)
+        extra = ({obs.REQUEST_ID_HEADER: str(request_id)}
+                 if request_id else None)
+        _, blob = self._post("/v1/regions", body, extra)
         (hdr_len,) = struct.unpack_from("<I", blob, 0)
         header = json.loads(blob[4:4 + hdr_len])
         payload = blob[4 + hdr_len:]
@@ -181,4 +249,14 @@ class RegionClient:
                     level=r["level"], ratio=r["ratio"],
                     box=tuple(tuple(v) for v in r["box"]), data=data))
             out.append(per_box)
-        return int(header["snapshot_crc"]), out
+        return header, out
+
+    def metrics(self) -> str:
+        """The endpoint's Prometheus text exposition
+        (``GET /v1/metrics``).
+
+        :returns: the scrape body as text.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
+        with self._get("/v1/metrics") as resp:
+            return resp.read().decode("utf-8")

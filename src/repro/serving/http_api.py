@@ -6,7 +6,9 @@ framework, no third-party deps (``http.server`` + ``ThreadingHTTPServer``).
 Routes::
 
     GET  /v1/meta                 snapshot + level metadata + cache stats
-    GET  /v1/stats                cache counters only
+    GET  /v1/stats                cache counters + latency quantiles
+    GET  /v1/metrics              Prometheus text exposition of the
+                                  process-wide repro.obs registry
     GET  /v1/region?level=L&box=x0:x1,y0:y1,z0:z1
                                   one level's crop; body = C-order <f4 bytes,
                                   shape/box/ratio travel in X-TACZ-* headers
@@ -14,28 +16,52 @@ Routes::
                                   [...]?} in; u32 header length + JSON header
                                   + concatenated <f4 payloads out
 
-The batched response header is ``{"snapshot_crc", "results"}`` where
-``results[b][l]`` holds ``{level, ratio, box, shape, offset, nbytes}`` and
-``offset`` indexes into the payload section that follows the header.
+The batched response header is ``{"snapshot_crc", "request_id", "trace",
+"results"}`` where ``results[b][l]`` holds ``{level, ratio, box, shape,
+offset, nbytes}`` and ``offset`` indexes into the payload section that
+follows the header; ``trace`` is the request's span-tree summary and
+``request_id`` echoes the caller's ``X-Repro-Request-Id`` header (minted
+here when absent) — the ID the sharded router stamps on a batch so one
+slow request is greppable across every shard's access log.
 Every request first runs the server's footer-CRC hot-swap check (when the
 server was built with ``auto_reload=True``), so an atomically republished
 snapshot is picked up without restarting the endpoint.
+
+Access logging: one structured record per request (method, path, status,
+duration_ms, request_id) through the ``repro.serving.http`` logger at
+DEBUG — quiet by default, and ``serve(..., verbose=True)`` raises it to
+INFO.  The old behavior (unconditional stderr spam from
+``BaseHTTPRequestHandler``) is gone either way.
 """
 from __future__ import annotations
 
 import json
+import logging
 import struct
+import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
+from repro import obs
 from repro.io import format as fmt
+from repro.obs import metrics as obsm
 
 from .regions import RegionServer
 
 __all__ = ["RegionHTTPServer", "RegionRequestHandler", "serve",
            "format_box", "parse_box"]
+
+#: Structured access/error log for every region endpoint in the process.
+#: Quiet by default: records go out at DEBUG (INFO with ``verbose=True``)
+#: and propagate to whatever handlers the host application configured.
+access_log = logging.getLogger("repro.serving.http")
+
+# bounded route-label set for the HTTP metrics (an arbitrary 404 path
+# must not mint an unbounded number of label values)
+_KNOWN_ROUTES = ("/v1/meta", "/v1/stats", "/v1/metrics", "/v1/region",
+                 "/v1/regions")
 
 
 def format_box(box) -> str:
@@ -61,10 +87,18 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
     server_version = "taczserve/1"
     protocol_version = "HTTP/1.1"
 
-    # quiet by default — the serving loop should not spam stderr per request
-    def log_message(self, *args) -> None:  # pragma: no cover - logging only
-        if getattr(self.server, "verbose", False):
-            super().log_message(*args)
+    #: set per request by :meth:`_handle`; echoed on every response
+    _request_id: str = ""
+    _status: int = 0
+
+    def log_message(self, format: str, *args) -> None:
+        """Base-class messages (errors, malformed requests) go through the
+        structured logger instead of raw stderr — quiet by default."""
+        access_log.debug("%s " + format, self.address_string(), *args)
+
+    def log_request(self, code="-", size="-") -> None:
+        """Suppressed: :meth:`_handle` emits one structured record per
+        request with duration and request ID instead."""
 
     @property
     def rs(self) -> RegionServer:
@@ -72,6 +106,13 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         return self.server.region_server
 
     # ------------------------------ plumbing -------------------------------
+
+    def send_response(self, code: int, message: str | None = None) -> None:
+        """Every response carries the request's ID back to the caller."""
+        super().send_response(code, message)
+        self._status = int(code)
+        if self._request_id:
+            self.send_header(obs.REQUEST_ID_HEADER, self._request_id)
 
     def _send_json(self, obj, status: int = 200) -> None:
         body = json.dumps(obj).encode()
@@ -106,9 +147,41 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
 
     # ------------------------------- routes --------------------------------
 
-    def do_GET(self) -> None:
-        """Dispatch ``/v1/meta``, ``/v1/stats``, ``/v1/region``."""
+    def _handle(self, method: str) -> None:
+        """Per-request envelope: request-ID adoption, HTTP metrics, and
+        one structured access-log record (method, path, status,
+        duration_ms, request_id)."""
         url = urlparse(self.path)
+        rid = self.headers.get(obs.REQUEST_ID_HEADER, "").strip()
+        self._request_id = rid or obs.new_request_id()
+        self._status = 0
+        route = url.path if url.path in _KNOWN_ROUTES else "other"
+        t0 = time.perf_counter()
+        try:
+            if method == "GET":
+                self._route_get(url)
+            else:
+                self._route_post(url)
+        finally:
+            dt = time.perf_counter() - t0
+            obsm.HTTP_REQUESTS.labels(route, str(self._status or 500)).inc()
+            obsm.HTTP_REQUEST_SECONDS.labels(route).observe(dt)
+            level = (logging.INFO if getattr(self.server, "verbose", False)
+                     else logging.DEBUG)
+            access_log.log(
+                level, "%s %s %d %.2fms rid=%s", method, self.path,
+                self._status or 500, dt * 1000.0, self._request_id)
+
+    def do_GET(self) -> None:
+        """Dispatch ``/v1/meta``, ``/v1/stats``, ``/v1/metrics``,
+        ``/v1/region``."""
+        self._handle("GET")
+
+    def do_POST(self) -> None:
+        """Dispatch ``/v1/regions`` (batched fetch)."""
+        self._handle("POST")
+
+    def _route_get(self, url) -> None:
         if url.path == "/v1/meta":
             # data routes hot-swap inside get_regions (auto_reload);
             # metadata routes run the footer check themselves
@@ -119,6 +192,19 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             if self.rs.auto_reload:
                 self.rs.maybe_reload()
             return self._send_json(self.rs.stats())
+        if url.path == "/v1/metrics":
+            # scrape surface: the process-wide registry covers this
+            # server's cache/planner/latency series and, when a router or
+            # sibling shard servers share the process, theirs too
+            obsm.refresh_cache_gauges(self.rs.cache.stats())
+            body = obs.REGISTRY.render().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+            return
         if url.path == "/v1/region":
             return self._get_region(parse_qs(url.query))
         return self._fail(404, f"unknown path {url.path!r}")
@@ -153,9 +239,7 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         self.end_headers()
         self.wfile.write(body)
 
-    def do_POST(self) -> None:
-        """Dispatch ``/v1/regions`` (batched fetch)."""
-        url = urlparse(self.path)
+    def _route_post(self, url) -> None:
         if url.path != "/v1/regions":
             return self._fail(404, f"unknown path {url.path!r}")
         try:
@@ -178,15 +262,20 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         try:
             # the CRC must name the snapshot that *served this batch* —
             # a hot-swap racing the decode must not stamp the new
-            # generation on old data (the sharded router trusts this)
-            crc, results = self.rs.get_regions_with_crc(boxes,
-                                                        levels=levels)
+            # generation on old data (the sharded router trusts this).
+            # The root span makes every trace() below it (plan, fetch,
+            # decode) collect into one tree this response carries back.
+            with obs.root_span("regions") as span:
+                crc, results = self.rs.get_regions_with_crc(boxes,
+                                                            levels=levels)
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad regions request: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
             return self._fail(500, f"region decode failed: {exc}")
         payload = bytearray()
-        header: dict = {"snapshot_crc": crc, "results": []}
+        header: dict = {"snapshot_crc": crc,
+                        "request_id": self._request_id,
+                        "trace": span.summary(), "results": []}
         for per_box in results:
             rows = []
             for roi in per_box:
@@ -236,6 +325,8 @@ def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
         with ``shard_id``, the endpoint serves (and caches) only the
         sub-blocks that shard owns (path form only).
     :param shard_id: this endpoint's shard in ``shard_map``.
+    :param verbose: emit the structured access log at INFO instead of
+        DEBUG (the ``repro.serving.http`` logger; quiet by default).
     :returns: the (not yet running) HTTP server; call ``serve_forever()``
         (typically on a thread) and ``shutdown()`` to stop.
     :raises ValueError: if only one of ``shard_map``/``shard_id`` is

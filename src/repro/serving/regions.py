@@ -30,15 +30,18 @@ endpoint lives in ``repro.serving.http_api``; the matching client in
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 
 import numpy as np
 
+from repro import obs
 from repro.core import sz
 from repro.io import format as fmt
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
                              open_snapshot, probe_index_crc)
+from repro.obs import metrics as obsm
 
 __all__ = ["CacheKey", "SubBlockCache", "DecodePlanner", "PlannedLevel",
            "RegionServer", "WHOLE_LEVEL"]
@@ -288,34 +291,43 @@ class DecodePlanner:
                     missing_set.add(key)
                 else:
                     out[key] = arr
-        # gsp/global levels: single global payload each — decode serially
-        groups: dict[tuple[int, tuple[int, ...], int], list[int]] = {}
-        for li, sbi in missing:
-            if sbi == WHOLE_LEVEL:
-                full = rd.read_level(li)
-                cache.put((gen, li, sbi), full)
-                out[(li, sbi)] = full
-            else:
-                sb = rd.levels[li].subblocks[sbi]
-                groups.setdefault(
-                    (li, rd.subblock_shape(li, sbi), sb.branch),
-                    []).append(sbi)
-        # SHE sub-blocks: one batched EntropyEngine launch per group's
-        # payloads, then one vectorized reconstruction per (level, shape,
-        # branch) group — no per-payload serial bit-walk anywhere
-        for (li, shape, branch), sbis in groups.items():
-            e = rd.levels[li]
-            decoded = rd.decode_subblocks(li, sbis)
-            codes = np.stack([c for c, _ in decoded])
-            betas = (np.stack([b for _, b in decoded])
-                     if branch == fmt.BRANCH_REG else None)
-            recon = sz.decode_codes_batched(
-                codes, shape, e.eb, branch=fmt.BRANCH_NAMES[branch],
-                block=e.sz_block, betas=betas)
-            for sbi, brick in zip(sbis, recon):
-                brick = brick.copy()   # detach from the stacked batch
-                cache.put((gen, li, sbi), brick)
-                out[(li, sbi)] = brick
+        obsm.PLANNER_SUBBLOCKS.labels("cached").inc(len(out))
+        obsm.PLANNER_SUBBLOCKS.labels("decoded").inc(len(missing))
+        decoded_bytes = 0
+        with obsm.timed(obsm.PLANNER_DECODE_SECONDS.labels(), "decode"):
+            # gsp/global levels: single global payload each — decode
+            # serially
+            groups: dict[tuple[int, tuple[int, ...], int], list[int]] = {}
+            for li, sbi in missing:
+                if sbi == WHOLE_LEVEL:
+                    full = rd.read_level(li)
+                    cache.put((gen, li, sbi), full)
+                    out[(li, sbi)] = full
+                    decoded_bytes += full.nbytes
+                else:
+                    sb = rd.levels[li].subblocks[sbi]
+                    groups.setdefault(
+                        (li, rd.subblock_shape(li, sbi), sb.branch),
+                        []).append(sbi)
+            # SHE sub-blocks: one batched EntropyEngine launch per group's
+            # payloads, then one vectorized reconstruction per (level,
+            # shape, branch) group — no per-payload serial bit-walk
+            # anywhere
+            for (li, shape, branch), sbis in groups.items():
+                e = rd.levels[li]
+                decoded = rd.decode_subblocks(li, sbis)
+                codes = np.stack([c for c, _ in decoded])
+                betas = (np.stack([b for _, b in decoded])
+                         if branch == fmt.BRANCH_REG else None)
+                recon = sz.decode_codes_batched(
+                    codes, shape, e.eb, branch=fmt.BRANCH_NAMES[branch],
+                    block=e.sz_block, betas=betas)
+                for sbi, brick in zip(sbis, recon):
+                    brick = brick.copy()   # detach from the stacked batch
+                    cache.put((gen, li, sbi), brick)
+                    out[(li, sbi)] = brick
+                    decoded_bytes += brick.nbytes
+        obsm.PLANNER_DECODED_BYTES.inc(decoded_bytes)
         return out
 
 
@@ -508,7 +520,11 @@ class RegionServer:
         with self._lock:
             rd, planner = self._reader, self._planner
             self._inflight[id(rd)] = self._inflight.get(id(rd), 0) + 1
+        span = obs.trace("get_regions")
+        span.__enter__()
+        t0 = time.perf_counter()
         try:
+            obsm.SERVER_REGIONS.inc(len(boxes))
             lis = list(range(rd.n_levels)) if levels is None else \
                 [int(li) for li in levels]
             for li in lis:
@@ -516,7 +532,8 @@ class RegionServer:
                     raise ValueError(f"level {li} out of range "
                                      f"(0..{rd.n_levels - 1})")
             queries = [(li, box) for box in boxes for li in lis]
-            plans = planner.plan(queries)
+            with obs.trace("plan"):
+                plans = planner.plan(queries)
             bricks = planner.fetch(plans, self.cache)
 
             def fetch_brick(li, sbi, _local_hi):
@@ -548,6 +565,9 @@ class RegionServer:
                 out.append(per_box)
             return rd.index_crc, out
         finally:
+            span.__exit__(None, None, None)
+            obsm.SERVER_REQUEST_SECONDS.labels().observe(
+                time.perf_counter() - t0)
             with self._lock:
                 n = self._inflight.get(id(rd), 1) - 1
                 if n:
@@ -581,13 +601,27 @@ class RegionServer:
         """Cache counters plus snapshot identity (and shard info when
         shard-filtered).
 
+        Also refreshes the ``tacz_cache_*`` gauges of the default obs
+        registry and reports ``latency`` — request-count plus
+        p50/p90/p99 estimates (milliseconds) derived from the
+        ``tacz_server_request_seconds`` histogram's buckets.  The
+        histogram is process-wide and lifetime (it survives hot swaps,
+        like the cache counters).
+
         :returns: dict with ``hits/misses/evictions/entries/bytes/
-            budget_bytes/snapshot_crc/n_levels`` and, on a shard, ``shard``
-            = ``{shard_id, n_shards, owned_keys}``.
+            budget_bytes/snapshot_crc/n_levels/latency`` and, on a shard,
+            ``shard`` = ``{shard_id, n_shards, owned_keys}``.
         """
         s = self.cache.stats()
+        obsm.refresh_cache_gauges(s)
         s["snapshot_crc"] = self.snapshot_crc
         s["n_levels"] = self.n_levels
+        hist = obsm.SERVER_REQUEST_SECONDS.labels()
+        lat = {"count": hist.count}
+        for q, key in ((0.5, "p50_ms"), (0.9, "p90_ms"), (0.99, "p99_ms")):
+            est = hist.quantile(q)
+            lat[key] = None if est is None else round(est * 1000.0, 3)
+        s["latency"] = lat
         if self.shard_map is not None:
             s["shard"] = {"shard_id": self.shard_id,
                           "n_shards": len(self.shard_map),

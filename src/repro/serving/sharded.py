@@ -40,11 +40,14 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor, wait
 
 import numpy as np
 
+from repro import obs
 from repro.io import placement
+from repro.obs import metrics as obsm
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
                              open_snapshot, probe_index_crc)
 
@@ -277,7 +280,8 @@ class ShardedRegionRouter:
         self._inflight: dict[int, int] = {}
         self._retired: dict[int, TACZReader] = {}
         self.counters = {"batches": 0, "shard_requests": 0,
-                         "endpoint_failures": 0, "local_fallbacks": 0}
+                         "endpoint_failures": 0, "local_fallbacks": 0,
+                         "retries": 0, "demotions": 0}
 
     # ------------------------------ lifecycle ------------------------------
 
@@ -341,9 +345,21 @@ class ShardedRegionRouter:
                     url, timeout=self.timeout)
             return cli
 
+    # router counters mirror into the process-wide obs registry so one
+    # /v1/metrics scrape covers the fan-out series too
+    _COUNTER_METRICS = {
+        "batches": obsm.ROUTER_BATCHES,
+        "shard_requests": obsm.ROUTER_SHARD_REQUESTS,
+        "endpoint_failures": obsm.ROUTER_ENDPOINT_FAILURES,
+        "local_fallbacks": obsm.ROUTER_LOCAL_FALLBACKS,
+        "retries": obsm.ROUTER_RETRIES,
+        "demotions": obsm.ROUTER_DEMOTIONS,
+    }
+
     def _count(self, counter: str) -> None:
         with self._lock:   # += from pool threads is not atomic
             self.counters[counter] += 1
+        self._COUNTER_METRICS[counter].inc()
 
     def _endpoint_order(self, shard: str) -> list[str]:
         """The order this request group walks the shard's endpoints.
@@ -366,34 +382,61 @@ class ShardedRegionRouter:
                 + [u for u in rotated if u in unhealthy])
 
     def _mark_endpoint(self, url: str, healthy: bool) -> None:
+        demoted = False
         with self._lock:
             if healthy:
                 self._unhealthy.discard(url)
             else:
+                demoted = url not in self._unhealthy
                 self._unhealthy.add(url)
+        if demoted:   # count transitions, not repeated failures
+            self._count("demotions")
 
     def _fetch_group(self, rd: TACZReader, shard: str, li: int,
-                     parts: list[_Part]) -> list[np.ndarray]:
-        """Crops for one (shard, level) group, in ``parts`` order.
+                     parts: list[_Part], request_id: str = "",
+                     ) -> tuple[list[np.ndarray], dict]:
+        """Crops for one (shard, level) group, in ``parts`` order, plus a
+        fan-out summary for the batch's response metadata.
 
         Tries the shard's endpoints (see :meth:`_endpoint_order`); every
         failure mode — unreachable, HTTP error, stale snapshot
         generation, mis-shaped response — moves on, and the local reader
-        is the last resort.
+        is the last resort.  Attempts beyond the first count as retries;
+        the group's wall time lands in
+        ``tacz_router_shard_seconds{shard=...}``.
+
+        The summary dict carries ``shard``, ``level``, ``ms``, the
+        ``endpoint`` that served (``"local"`` on fallback), and — when
+        the shard returned one — its ``trace`` span summary, so the
+        router can aggregate per-shard stage timings for the whole batch.
 
         :raises RuntimeError: when every endpoint failed and
             ``local_fallback`` is off.
         """
+        t0 = time.perf_counter()
         r = max(int(rd.levels[li].ratio), 1)
         boxes_f = [tuple((lo * r, hi * r) for lo, hi in p.isect)
                    for p in parts]
         want_crc = rd.index_crc
         errors: list[str] = []
-        for url in self._endpoint_order(shard):
+
+        def _summary(endpoint: str, remote: dict | None) -> dict:
+            dt = time.perf_counter() - t0
+            obsm.ROUTER_SHARD_SECONDS.labels(shard).observe(dt)
+            info = {"shard": shard, "level": li, "endpoint": endpoint,
+                    "ms": round(dt * 1000.0, 3)}
+            if remote:
+                info["trace"] = remote
+            return info
+
+        for attempt, url in enumerate(self._endpoint_order(shard)):
             try:
                 self._count("shard_requests")
-                crc, results = self._client(url).regions_meta(
-                    boxes_f, levels=[li])
+                if attempt:
+                    self._count("retries")
+                header, results = self._client(url).regions_ex(
+                    boxes_f, levels=[li], request_id=request_id or None)
+                crc = int(header["snapshot_crc"])
                 if (crc & 0xFFFFFFFF) != want_crc:
                     raise ValueError(
                         f"snapshot mismatch: shard serves {crc:#x}, "
@@ -407,7 +450,7 @@ class ShardedRegionRouter:
                             f"wanted {part.isect}")
                     crops.append(roi.data)
                 self._mark_endpoint(url, healthy=True)
-                return crops
+                return crops, _summary(url, header.get("trace"))
             except Exception as exc:   # noqa: BLE001 — isolate per endpoint
                 self._count("endpoint_failures")
                 self._mark_endpoint(url, healthy=False)
@@ -417,7 +460,8 @@ class ShardedRegionRouter:
                 f"shard {shard!r} unreachable for level {li} and local "
                 f"fallback is disabled: {'; '.join(errors) or 'no endpoints'}")
         self._count("local_fallbacks")
-        return [rd.read_level_box(li, p.isect) for p in parts]
+        crops = [rd.read_level_box(li, p.isect) for p in parts]
+        return crops, _summary("local", None)
 
     # ------------------------------- queries -------------------------------
 
@@ -438,6 +482,26 @@ class ShardedRegionRouter:
         :raises RuntimeError: if a shard is unreachable and
             ``local_fallback`` is disabled.
         """
+        return self.get_regions_meta(boxes, levels)[0]
+
+    def get_regions_meta(self, boxes: list[Box],
+                         levels: list[int] | None = None,
+                         ) -> tuple[list[list[ROILevel]], dict]:
+        """:meth:`get_regions` plus the batch's fan-out metadata.
+
+        The router mints one request ID per batch and stamps it on every
+        shard request (``X-Repro-Request-Id``), so the same ``rid=`` is
+        greppable in every shard's access log.  The metadata aggregates
+        each (shard, level) group's outcome — endpoint served, wall
+        milliseconds, and the shard's own span summary when it returned
+        one.
+
+        :returns: ``(out, meta)`` where ``meta`` has ``request_id``,
+            ``ms`` (whole-batch wall time), and ``shards`` — one summary
+            dict per fan-out group, slowest first.
+        """
+        rid = obs.new_request_id()
+        t_batch = time.perf_counter()
         if self.auto_reload:
             self.maybe_reload()
         with self._lock:
@@ -467,7 +531,7 @@ class ShardedRegionRouter:
                             _Part(pi, isect))
 
             futures = {gk: self._pool.submit(self._fetch_group, rd,
-                                             gk[0], gk[1], parts)
+                                             gk[0], gk[1], parts, rid)
                        for gk, parts in groups.items()}
             # settle every group before consuming any result: a raising
             # group must not leave siblings still decoding from a reader
@@ -481,8 +545,10 @@ class ShardedRegionRouter:
                 acc[pi] = np.zeros(tuple(max(hi - lo, 0)
                                          for lo, hi in p.lbox),
                                    dtype=np.float32)
+            shard_infos: list[dict] = []
             for gk, fut in futures.items():
-                crops = fut.result()
+                crops, info = fut.result()
+                shard_infos.append(info)
                 for part, crop in zip(groups[gk], crops):
                     dst = tuple(slice(lo - b0, hi - b0)
                                 for (lo, hi), (b0, _)
@@ -501,7 +567,11 @@ class ShardedRegionRouter:
                         ratio=max(int(rd.levels[p.level].ratio), 1),
                         box=p.lbox, data=acc[pi]))
                 out.append(per_box)
-            return out
+            shard_infos.sort(key=lambda i: i["ms"], reverse=True)
+            meta = {"request_id": rid,
+                    "ms": round((time.perf_counter() - t_batch) * 1000.0, 3),
+                    "shards": shard_infos}
+            return out, meta
         finally:
             with self._lock:
                 n = self._inflight.get(id(rd), 1) - 1

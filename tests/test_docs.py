@@ -30,10 +30,16 @@ def serving_doc() -> str:
     return _read("docs/serving.md")
 
 
+@pytest.fixture(scope="module")
+def obs_doc() -> str:
+    return _read("docs/observability.md")
+
+
 def test_readme_links_both_docs():
     readme = _read("README.md")
     assert "docs/tacz_format.md" in readme
     assert "docs/serving.md" in readme
+    assert "docs/observability.md" in readme
 
 
 def test_format_doc_enum_tables_match_constants(format_doc):
@@ -119,6 +125,55 @@ def test_format_doc_entropy_framing_note(format_doc):
     assert "repro.core.entropy" in format_doc
     assert "engine-independent" in format_doc
     assert "byte-identical payloads" in format_doc
+
+
+def test_obs_doc_metric_catalog_matches_registry(obs_doc):
+    """The catalog table must name every family in the default registry
+    with its exact type, and name nothing the registry does not have."""
+    from repro.obs import metrics as obsm
+    families = {f.name: f for f in obsm.REGISTRY.families()}
+    rows = dict(re.findall(r"^\| `(tacz_[a-z_]+)` \| (\w+) \|",
+                           obs_doc, flags=re.MULTILINE))
+    for name, fam in families.items():
+        assert rows.get(name) == fam.kind, \
+            f"catalog row for {name} missing or stale (kind={fam.kind})"
+    for name in rows:
+        assert name in families, f"doc names unknown metric {name}"
+
+
+def test_obs_doc_covers_required_topics(obs_doc):
+    for needle in ["GET /v1/metrics", "text/plain; version=0.0.4",
+                   "X-Repro-Request-Id", "root_span", "set_enabled",
+                   "repro.serving.http", "RegionAPIError", "regions_ex",
+                   "obs_summary", "0.95", "p50_ms", "quantile",
+                   "DEFAULT_TIME_BUCKETS", "get_regions_meta"]:
+        assert needle in obs_doc, f"observability.md lost coverage: {needle}"
+
+
+def test_serving_doc_covers_observability_surface(serving_doc):
+    for needle in ["GET /v1/metrics", "request_id", "trace",
+                   "X-Repro-Request-Id", "observability.md",
+                   "RegionAPIError"]:
+        assert needle in serving_doc, f"serving.md lost coverage: {needle}"
+
+
+def test_obs_doc_references_live_apis():
+    import inspect
+
+    from repro import obs, serving
+    from repro.serving.client import RegionAPIError  # noqa: F401
+    from repro.serving.sharded import ShardedRegionRouter
+
+    for attr in ("REGISTRY", "set_enabled", "is_enabled", "trace",
+                 "root_span", "new_request_id", "REQUEST_ID_HEADER",
+                 "MetricsRegistry", "DEFAULT_TIME_BUCKETS"):
+        assert hasattr(obs, attr)
+    for attr in ("regions_ex", "metrics"):
+        assert hasattr(serving.RegionClient, attr)
+    assert hasattr(ShardedRegionRouter, "get_regions_meta")
+    assert "verbose" in inspect.signature(serving.serve).parameters
+    from repro.io.writer import TACZWriter
+    assert hasattr(TACZWriter, "obs_summary")
 
 
 def test_docs_reference_live_apis(serving_doc):

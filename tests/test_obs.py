@@ -1,0 +1,438 @@
+"""Observability layer (ISSUE 7): metrics registry semantics, trace
+spans, the Prometheus scrape surface, request-ID propagation through the
+sharded fleet, and the no-behavior-change guarantee (served regions are
+bit-identical with metrics enabled vs disabled).
+"""
+import logging
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import metrics as obsm
+from repro.obs.registry import MetricsRegistry
+from repro.serving import (RegionClient, RegionServer, ShardMap,
+                           ShardedRegionRouter, serve)
+from repro.serving.client import RegionAPIError
+
+BOXES = [((0, 8), (0, 8), (0, 8)),
+         ((5, 23), (11, 30), (2, 9)),
+         ((24, 32), (16, 32), (0, 32))]
+
+
+@pytest.fixture(scope="module")
+def snapshot(make_amr_snapshot):
+    snap = make_amr_snapshot(densities=[0.35, 0.65], seed=5, name="obs")
+    return snap.path, snap.res
+
+
+@pytest.fixture()
+def registry():
+    return MetricsRegistry()
+
+
+@pytest.fixture()
+def metrics_enabled():
+    """Leave the process-wide registry the way we found it."""
+    was = obs.is_enabled()
+    obs.set_enabled(True)
+    yield
+    obs.set_enabled(was)
+
+
+# ------------------------------ registry -------------------------------
+
+
+def test_counter_concurrent_increments_exact(registry):
+    """8 threads x 10k increments == exactly 80k — the registry's locking
+    contract, not a statistical one."""
+    c = registry.counter("t_total", "t").labels()
+    n_threads, per_thread = 8, 10_000
+
+    def worker():
+        for _ in range(per_thread):
+            c.inc()
+
+    threads = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == n_threads * per_thread
+
+
+def test_histogram_concurrent_observe_exact(registry):
+    h = registry.histogram("t_seconds", "t", buckets=(1.0, 2.0)).labels()
+
+    def worker():
+        for _ in range(5_000):
+            h.observe(0.5)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == 40_000
+    assert h.sum == pytest.approx(20_000.0)
+
+
+def test_histogram_bucket_boundaries(registry):
+    """Prometheus `le` semantics: a sample equal to an upper bound counts
+    in that bucket; above every bound goes to +Inf only."""
+    h = registry.histogram("b_seconds", "t", buckets=(0.1, 1.0)).labels()
+    for v in (0.05, 0.1, 0.5, 1.0, 2.0):
+        h.observe(v)
+    counts, total, n = h.snapshot()
+    assert counts == [2, 2, 1]          # le=0.1, le=1.0, +Inf
+    assert n == 5 and total == pytest.approx(3.65)
+
+
+def test_histogram_quantiles(registry):
+    h = registry.histogram("q_seconds", "t",
+                           buckets=(0.001, 0.01, 0.1)).labels()
+    assert h.quantile(0.5) is None      # no samples yet
+    for _ in range(90):
+        h.observe(0.005)
+    for _ in range(10):
+        h.observe(0.05)
+    # p50 interpolates inside (0.001, 0.01]; p99 inside (0.01, 0.1]
+    assert 0.001 < h.quantile(0.5) <= 0.01
+    assert 0.01 < h.quantile(0.99) <= 0.1
+    # the overflow bucket clamps to the largest finite bound
+    h2 = registry.histogram("q2_seconds", "t", buckets=(0.1,)).labels()
+    h2.observe(5.0)
+    assert h2.quantile(0.99) == 0.1
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_prometheus_exposition_golden(registry):
+    """Full text exposition, byte for byte — the scrape format is a wire
+    contract (text/plain; version=0.0.4)."""
+    registry.counter("req_total", "Requests.", labels=("route",)) \
+        .labels("/v1/meta").inc(3)
+    registry.gauge("occupancy_bytes", "Cache bytes.").set(1.5)
+    h = registry.histogram("lat_seconds", "Latency.", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(2.0)
+    assert registry.render() == (
+        '# HELP req_total Requests.\n'
+        '# TYPE req_total counter\n'
+        'req_total{route="/v1/meta"} 3\n'
+        '# HELP occupancy_bytes Cache bytes.\n'
+        '# TYPE occupancy_bytes gauge\n'
+        'occupancy_bytes 1.5\n'
+        '# HELP lat_seconds Latency.\n'
+        '# TYPE lat_seconds histogram\n'
+        'lat_seconds_bucket{le="0.1"} 1\n'
+        'lat_seconds_bucket{le="1"} 2\n'
+        'lat_seconds_bucket{le="+Inf"} 3\n'
+        'lat_seconds_sum 2.55\n'
+        'lat_seconds_count 3\n')
+
+
+def test_exposition_escapes_label_values(registry):
+    registry.counter("esc_total", "t", labels=("p",)) \
+        .labels('a"b\\c\nd').inc()
+    assert 'esc_total{p="a\\"b\\\\c\\nd"} 1' in registry.render()
+
+
+def test_family_get_or_create_and_mismatch(registry):
+    a = registry.counter("same_total", "t", labels=("x",))
+    assert registry.counter("same_total", "t", labels=("x",)) is a
+    with pytest.raises(ValueError):
+        registry.gauge("same_total", "t", labels=("x",))
+    with pytest.raises(ValueError):
+        registry.counter("same_total", "t", labels=("y",))
+    with pytest.raises(ValueError):
+        registry.counter("bad name", "t")
+    with pytest.raises(ValueError):
+        registry.histogram("bad_buckets", "t", buckets=(2.0, 1.0))
+    with pytest.raises(ValueError):
+        a.labels()              # family declares one label
+    with pytest.raises(ValueError):
+        a.labels("x").inc(-1)   # counters only go up
+
+
+def test_disabled_registry_mutations_are_noops(registry):
+    c = registry.counter("off_total", "t").labels()
+    g = registry.gauge("off_bytes", "t").labels()
+    h = registry.histogram("off_seconds", "t").labels()
+    registry.enabled = False
+    c.inc()
+    g.set(5)
+    h.observe(1.0)
+    assert (c.value, g.value, h.count) == (0.0, 0.0, 0)
+    registry.enabled = True
+    c.inc()
+    assert c.value == 1.0
+
+
+def test_registry_snapshot_shape(registry):
+    registry.counter("s_total", "t", labels=("k",)).labels("a").inc(2)
+    registry.histogram("s_seconds", "t", buckets=(1.0,)).observe(0.5)
+    snap = registry.snapshot()
+    assert snap["s_total"]["series"]["k=a"] == 2.0
+    hs = snap["s_seconds"]["series"]["_"]
+    assert hs["count"] == 1 and hs["buckets"] == [1, 0]
+
+
+# ------------------------------- tracing -------------------------------
+
+
+def test_trace_noop_outside_root():
+    """Without an active root span, trace() hands back the shared no-op —
+    instrumented code never pays for tree building."""
+    s1, s2 = obs.trace("a"), obs.trace("b")
+    assert s1 is s2
+    with s1:
+        pass                    # context manager still works
+
+
+def test_root_span_collects_nested_stages():
+    with obs.root_span("batch") as root:
+        with obs.trace("plan"):
+            pass
+        with obs.trace("fetch"):
+            with obs.trace("decode"):
+                pass
+    summary = root.summary()
+    assert summary["name"] == "batch" and summary["ms"] >= 0
+    names = [s["name"] for s in summary["stages"]]
+    assert names == ["plan", "fetch"]
+    assert summary["stages"][1]["stages"][0]["name"] == "decode"
+    # the root is torn down: tracing is a no-op again
+    assert obs.current_span() is None
+
+
+def test_new_request_id_format():
+    rid = obs.new_request_id()
+    assert len(rid) == 16 and int(rid, 16) >= 0
+    assert rid != obs.new_request_id()
+
+
+# --------------------- no behavior change under metrics ----------------
+
+
+def test_served_regions_bit_identical_enabled_vs_disabled(snapshot):
+    """The whole point of obs being observe-only: byte-for-byte equal
+    crops whether the registry records or not."""
+    path, _ = snapshot
+    was = obs.is_enabled()
+    try:
+        obs.set_enabled(True)
+        with RegionServer(path, cache_bytes=4 << 20) as rs:
+            ref = rs.get_regions(BOXES)
+        obs.set_enabled(False)
+        with RegionServer(path, cache_bytes=4 << 20) as rs:
+            got = rs.get_regions(BOXES)
+    finally:
+        obs.set_enabled(was)
+    for per_ref, per_got in zip(ref, got):
+        for r, g in zip(per_ref, per_got):
+            assert (r.level, r.ratio, r.box) == (g.level, g.ratio, g.box)
+            np.testing.assert_array_equal(r.data, g.data)
+
+
+# -------------------- scrape surface: single server --------------------
+
+
+def test_single_server_scrape_and_stats(snapshot, metrics_enabled):
+    path, _ = snapshot
+    httpd = serve(path, port=0, cache_bytes=4 << 20)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    try:
+        client = RegionClient(url)
+        client.regions(BOXES)
+        client.regions(BOXES)       # warm pass exercises the cache
+        text = client.metrics()
+        # the required coverage: cache, planner, server latency
+        for needle in ("tacz_cache_hits", "tacz_cache_misses",
+                       "tacz_cache_bytes", "tacz_cache_budget_bytes",
+                       "tacz_planner_subblocks_total",
+                       'outcome="cached"', 'outcome="decoded"',
+                       "tacz_server_request_seconds_bucket",
+                       "tacz_server_request_seconds_count",
+                       "tacz_server_regions_total",
+                       "tacz_http_requests_total",
+                       'route="/v1/regions"'):
+            assert needle in text, f"scrape missing {needle}"
+        # exposition well-formedness: every non-comment line is
+        # "name{labels} value"
+        for line in text.splitlines():
+            if line.startswith("#") or not line:
+                continue
+            name_part, _, value = line.rpartition(" ")
+            assert name_part and value
+            float(value.replace("+Inf", "inf"))
+        # /v1/stats carries bucket-estimated latency quantiles
+        stats = client.stats()
+        lat = stats["latency"]
+        assert lat["count"] >= 2
+        assert 0 <= lat["p50_ms"] <= lat["p90_ms"] <= lat["p99_ms"]
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+def test_request_id_echoed_and_minted(snapshot, metrics_enabled):
+    path, _ = snapshot
+    httpd = serve(path, port=0, cache_bytes=4 << 20)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    try:
+        client = RegionClient(url)
+        hdr, _ = client.regions_ex(BOXES[:1], request_id="deadbeef01234567")
+        assert hdr["request_id"] == "deadbeef01234567"
+        assert hdr["trace"]["name"] == "regions"
+        assert [s["name"] for s in hdr["trace"]["stages"]] \
+            == ["get_regions"]
+        hdr2, _ = client.regions_ex(BOXES[:1])   # server mints one
+        assert len(hdr2["request_id"]) == 16
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+def test_client_error_carries_status_body_and_request_id(snapshot):
+    path, _ = snapshot
+    httpd = serve(path, port=0, cache_bytes=4 << 20)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    try:
+        client = RegionClient(url)
+        with pytest.raises(RegionAPIError) as ei:
+            client.regions([((0, 8), (0, 8))])      # 2D box -> 400
+        err = ei.value
+        assert err.code == 400
+        assert "each box needs three" in err.body_excerpt
+        assert len(err.request_id) == 16
+        assert "request_id=" in str(err) and "HTTP 400" in str(err)
+        # GET errors go through the same path
+        with pytest.raises(RegionAPIError) as ei:
+            client.region(99, BOXES[0])
+        assert ei.value.code == 400
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+# --------------------- scrape surface: 2-shard fleet -------------------
+
+
+def test_two_shard_fleet_metrics_and_request_id_in_access_logs(
+        snapshot, metrics_enabled):
+    """The acceptance scenario: a 2-shard fleet where the router's
+    per-batch request ID shows up in every shard's structured access log,
+    and the scrape covers the router fan-out series."""
+    path, _ = snapshot
+    records: list[logging.LogRecord] = []
+
+    class _Capture(logging.Handler):
+        def emit(self, record):
+            records.append(record)
+
+    handler = _Capture(level=logging.DEBUG)
+    logger = logging.getLogger("repro.serving.http")
+    old_level = logger.level
+    logger.addHandler(handler)
+    logger.setLevel(logging.DEBUG)
+
+    m = ShardMap(["s0", "s1"], seed=7)
+    servers, urls = {}, {}
+    try:
+        for sid in m.shards:
+            httpd = serve(path, port=0, cache_bytes=4 << 20,
+                          shard_map=m, shard_id=sid)
+            threading.Thread(target=httpd.serve_forever,
+                             daemon=True).start()
+            servers[sid] = httpd
+            urls[sid] = f"http://127.0.0.1:{httpd.server_address[1]}"
+        with ShardedRegionRouter(path, m,
+                                 {k: [v] for k, v in urls.items()}) \
+                as router:
+            out, meta = router.get_regions_meta(BOXES)
+            rid = meta["request_id"]
+            assert len(rid) == 16 and meta["ms"] > 0
+            # every fan-out group reports shard, endpoint, timing, and
+            # the shard's own span summary
+            shards_hit = {info["shard"] for info in meta["shards"]}
+            assert shards_hit == {"s0", "s1"}
+            for info in meta["shards"]:
+                assert info["endpoint"].startswith("http://")
+                assert info["ms"] >= 0
+                assert info["trace"]["name"] == "regions"
+            # the handler logs after the response is read back — poll
+            deadline = time.monotonic() + 5.0
+            want = len(meta["shards"])
+            while time.monotonic() < deadline:
+                got = [r.getMessage() for r in records
+                       if f"rid={rid}" in r.getMessage()]
+                if len(got) >= want:
+                    break
+                time.sleep(0.01)
+            assert len(got) >= want, got
+            assert all("POST /v1/regions 200" in msg for msg in got)
+            # scrape (via a shard endpoint — one process, one registry)
+            # covers the router fan-out series
+            text = RegionClient(urls["s0"]).metrics()
+            for needle in ("tacz_router_batches_total",
+                           "tacz_router_shard_requests_total",
+                           'tacz_router_shard_seconds_count{shard="s0"}',
+                           'tacz_router_shard_seconds_count{shard="s1"}',
+                           "tacz_server_request_seconds_bucket",
+                           "tacz_planner_subblocks_total",
+                           "tacz_cache_hits"):
+                assert needle in text, f"scrape missing {needle}"
+            # plain get_regions keeps its signature
+            plain = router.get_regions(BOXES[:1], levels=[0])
+            np.testing.assert_array_equal(plain[0][0].data,
+                                          out[0][0].data)
+            stats = router.stats()
+            for key in ("retries", "demotions"):
+                assert key in stats
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(old_level)
+        for httpd in servers.values():
+            httpd.shutdown()
+            httpd.server_close()
+            httpd.region_server.close()
+
+
+# ------------------------- pipeline coverage ---------------------------
+
+
+def test_compress_and_writer_series_populate(snapshot, metrics_enabled,
+                                             tmp_path):
+    """The compress->write leg records stage timings and byte counters
+    into the process registry."""
+    from repro.core import amr
+    from repro.io.writer import TACZWriter
+
+    before = obsm.WRITER_BYTES.value
+    ds = amr.synthetic_amr((16, 16, 16), densities=[1.0], seed=1)
+    path = str(tmp_path / "obs.tacz")
+    with TACZWriter(path, eb=1e-2) as w:
+        for lv in ds.levels:
+            w.add_level(lv.data, lv.mask, ratio=max(int(lv.ratio), 1))
+    summary = w.obs_summary()
+    assert summary["levels"] == len(ds.levels)
+    assert summary["bytes"] > 0
+    assert summary["encode_seconds"] >= 0
+    assert obsm.WRITER_BYTES.value > before
+    text = obs.REGISTRY.render()
+    for needle in ('tacz_compress_stage_seconds_count{stage="prequant"}',
+                   'tacz_compress_stage_seconds_count{stage="entropy"}',
+                   "tacz_compress_level_seconds_count",
+                   'tacz_writer_level_seconds_count{stage="encode"}',
+                   "tacz_writer_bytes_total"):
+        assert needle in text, f"missing {needle}"
