@@ -1,0 +1,155 @@
+"""Zipf load harness over a live 2-shard fleet, gated by pinned SLOs
+(ISSUE 8).
+
+This is the closed-loop proof that the fleet observability plane works
+end to end: a 2-shard fleet (+ a mounted router endpoint) serves
+open-loop Zipf traffic from :class:`repro.serving.loadgen.
+LoadGenerator` while a :class:`repro.obs.collect.FleetCollector`
+scrapes all three endpoints, and an :class:`repro.obs.slo.SLOEngine`
+renders the verdict against a **pinned** SLO set:
+
+  * ``errors`` — windowed non-2xx share of ``tacz_http_requests_total``
+    must stay below 0.1 % (in practice: zero — the load run also counts
+    client-side errors and requires none);
+  * ``tail_spread`` — windowed p99/p50 of ``tacz_server_request_seconds``
+    stays bounded (a fleet whose tail detaches from its median by 150×
+    on warm traffic is broken, whatever the absolute numbers on a noisy
+    CI runner);
+  * ``fleet_up`` — every endpoint up (scrape success + ``/v1/health``).
+
+Bit-identity is enforced through the load generator itself: a sampled
+fraction of responses is compared ``np.array_equal`` against a local
+reader, and any mismatch fails the bench — a fleet that got fast by
+corrupting crops cannot pass.
+
+Artifacts: one CSV row per run configuration, the SLO verdict merged
+into ``bench_summary.json`` (via the driver), and the collector's fleet
+JSON snapshot (``loadgen_fleet.json``) — per-endpoint health + metrics
+plus the fleet aggregate — which CI uploads next to the CSVs.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+
+from repro import io as tacz
+from repro import obs
+from repro.core import hybrid
+from repro.obs import FleetCollector, SLOEngine, SLORule
+from repro.serving import (LoadGenerator, RegionClient,
+                           ShardedRegionRouter, ShardMap, ZipfWorkload,
+                           client_fetch, serve)
+
+from .common import RESULTS_DIR, dataset, eb_for, write_csv
+
+#: the pinned SLO set — loosen only with a written justification, this
+#: is the bench's acceptance bar
+SLO_RULES = [
+    SLORule("errors", "error_rate", "<", 0.001,
+            params={"metric": "tacz_http_requests_total"}),
+    SLORule("tail_spread", "quantile_ratio", "<=", 150.0,
+            params={"metric": "tacz_server_request_seconds",
+                    "q_hi": 0.99, "q_lo": 0.50}),
+    SLORule("fleet_up", "up", ">=", 1.0),
+]
+
+
+def run(quick: bool = False):
+    obs.set_enabled(True)
+    name = "run1_z10"
+    ds = dataset(name)
+    res = hybrid.compress_amr(ds, eb=eb_for(ds, 1e-3))
+    rate = 50.0 if quick else 100.0
+    n_requests = 80 if quick else 250
+    population = 16 if quick else 32
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, name + ".tacz")
+        tacz.write(path, res)
+        m = ShardMap(["s0", "s1"], seed=7)
+        servers = []
+
+        def endpoint(**kw):
+            httpd = serve(path, port=0, cache_bytes=64 << 20, **kw)
+            threading.Thread(target=httpd.serve_forever,
+                             daemon=True).start()
+            servers.append(httpd)
+            return f"http://127.0.0.1:{httpd.server_address[1]}"
+
+        urls = {sid: endpoint(shard_map=m, shard_id=sid)
+                for sid in m.shards}
+        router = ShardedRegionRouter(path, m,
+                                     {k: [v] for k, v in urls.items()})
+        try:
+            urls["router"] = endpoint_url = \
+                f"http://127.0.0.1:{serve_router(router, servers)}"
+            client = RegionClient(endpoint_url)
+            wl = ZipfWorkload(ds.finest_shape, levels=(0,),
+                              population=population, seed=11)
+            for q in wl.queries:          # warm pass: the SLO window
+                client.regions([q.box], levels=list(q.levels))
+
+            col = FleetCollector(urls, window=64)
+            eng = SLOEngine(col, SLO_RULES)
+            col.poll()                    # baseline scrape, post-warm-up
+            with tacz.TACZReader(path) as rd:
+                gen = LoadGenerator(
+                    client_fetch(client), wl, rate=rate, concurrency=4,
+                    verify_reader=rd, verify_fraction=0.2, seed=1)
+                report = gen.run(n_requests)
+            col.poll()
+            eng.evaluate()
+            verdict = eng.verdict()
+            fleet_json = os.path.join(RESULTS_DIR, "loadgen_fleet.json")
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            col.dump_json(fleet_json)
+            print(eng.report())
+        finally:
+            router.close()
+            for httpd in servers:
+                httpd.shutdown()
+                httpd.server_close()
+                httpd.region_server.close()
+
+    d = report.to_dict()
+    rows.append((name, len(urls), d["offered_rate"], d["achieved_rate"],
+                 d["requests"], d["errors"], d["verified"],
+                 d["mismatches"], d["p50_ms"], d["p90_ms"], d["p99_ms"],
+                 d["max_lag_ms"], d["saturated"], verdict["passed"]))
+    csv = write_csv("loadgen",
+                    ["dataset", "n_endpoints", "offered_rate",
+                     "achieved_rate", "requests", "errors", "verified",
+                     "mismatches", "p50_ms", "p90_ms", "p99_ms",
+                     "max_lag_ms", "saturated", "slo_passed"],
+                    rows)
+
+    if report.errors:
+        raise AssertionError(
+            f"loadgen acceptance failed: {report.errors} request "
+            f"error(s) under Zipf load: {report.error_messages[:3]}")
+    if report.verified == 0 or report.mismatches:
+        raise AssertionError(
+            f"loadgen bit-identity failed: verified={report.verified} "
+            f"mismatches={report.mismatches}")
+    if not verdict["passed"]:
+        failing = {n: r for n, r in verdict["rules"].items()
+                   if r["satisfied"] is False or r["state"] in
+                   ("pending", "firing")}
+        raise AssertionError(
+            f"pinned SLO set failed under load: {failing}")
+    return {"csv": csv, "slo_passed": verdict["passed"],
+            "p99_ms": d["p99_ms"], "achieved_rate": d["achieved_rate"]}
+
+
+def serve_router(router, servers) -> int:
+    """Mount a router endpoint; returns its bound port."""
+    httpd = serve(router, port=0)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    servers.append(httpd)
+    return httpd.server_address[1]
+
+
+if __name__ == "__main__":
+    print(run(quick=True))

@@ -12,10 +12,11 @@ import time
 
 from . import (bench_density_sweep, bench_distributed, bench_entropy,
                bench_grad_compress, bench_halo, bench_kernels,
-               bench_nast_opst, bench_parallel_write, bench_partition_time,
-               bench_power_spectrum, bench_rate_distortion,
-               bench_region_serving, bench_roi_decode,
-               bench_sharded_serving, bench_she, bench_throughput)
+               bench_loadgen, bench_nast_opst, bench_parallel_write,
+               bench_partition_time, bench_power_spectrum,
+               bench_rate_distortion, bench_region_serving,
+               bench_roi_decode, bench_sharded_serving, bench_she,
+               bench_throughput)
 from .common import record_summary
 
 BENCHES = [
@@ -35,6 +36,7 @@ BENCHES = [
     ("sharded_serving (TACZ serving)", bench_sharded_serving),
     ("parallel_write (TACZ multi-part)", bench_parallel_write),
     ("entropy (batched Huffman engines)", bench_entropy),
+    ("loadgen (fleet SLO harness)", bench_loadgen),
 ]
 
 

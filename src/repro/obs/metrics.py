@@ -35,8 +35,9 @@ __all__ = [
     "CACHE_ENTRIES", "CACHE_BYTES", "CACHE_BUDGET_BYTES",
     "ROUTER_SHARD_SECONDS", "ROUTER_BATCHES", "ROUTER_SHARD_REQUESTS",
     "ROUTER_ENDPOINT_FAILURES", "ROUTER_LOCAL_FALLBACKS",
-    "ROUTER_RETRIES", "ROUTER_DEMOTIONS",
+    "ROUTER_RETRIES", "ROUTER_DEMOTIONS", "ROUTER_BATCH_SECONDS",
     "HTTP_REQUESTS", "HTTP_REQUEST_SECONDS",
+    "SLO_FIRING", "SLO_STATE", "SLO_VALUE",
 ]
 
 #: The process-wide default registry.  Components import this; tests
@@ -208,6 +209,11 @@ ROUTER_DEMOTIONS = REGISTRY.counter(
     "tacz_router_endpoint_demotions_total",
     "healthy-to-unhealthy endpoint transitions recorded by the router.")
 
+ROUTER_BATCH_SECONDS = REGISTRY.histogram(
+    "tacz_router_batch_seconds",
+    "End-to-end ShardedRegionRouter.get_regions latency per batch "
+    "(scatter + gather + paste).")
+
 # -------------------------------- http -----------------------------------
 
 HTTP_REQUESTS = REGISTRY.counter(
@@ -219,3 +225,23 @@ HTTP_REQUEST_SECONDS = REGISTRY.histogram(
     "tacz_http_request_seconds",
     "HTTP request handling wall time, by route.",
     labels=("route",))
+
+# --------------------------------- slo ------------------------------------
+# The SLO engine (repro.obs.slo) exports its alert state back into the
+# registry, so the alert plane is itself scrapable.
+
+SLO_FIRING = REGISTRY.gauge(
+    "tacz_slo_firing",
+    "1 while the named SLO rule is firing, else 0.",
+    labels=("rule",))
+
+SLO_STATE = REGISTRY.gauge(
+    "tacz_slo_state",
+    "Alert state of the named SLO rule "
+    "(0=ok 1=pending 2=firing 3=resolved).",
+    labels=("rule",))
+
+SLO_VALUE = REGISTRY.gauge(
+    "tacz_slo_value",
+    "Last evaluated value of the named SLO rule's expression.",
+    labels=("rule",))

@@ -34,7 +34,7 @@ import math
 import threading
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "DEFAULT_TIME_BUCKETS"]
+           "DEFAULT_TIME_BUCKETS", "quantile_from_buckets"]
 
 #: Default latency buckets (seconds): 100 µs … 10 s, roughly 1-2.5-5 per
 #: decade — wide enough for a cold multi-level decode, fine enough to
@@ -57,6 +57,45 @@ def _escape(value: str) -> str:
     """Escape one label value for the text exposition format."""
     return (str(value).replace("\\", "\\\\").replace("\n", "\\n")
             .replace('"', '\\"'))
+
+
+def _escape_help(text: str) -> str:
+    """Escape a ``# HELP`` line's text (backslash and newline only —
+    quotes are legal in help text, per the exposition spec)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def quantile_from_buckets(bounds, counts, q: float) -> float | None:
+    """Estimate the ``q``-quantile of a fixed-bucket histogram.
+
+    The shared estimator behind :meth:`Histogram.quantile` and the
+    windowed fleet quantiles in :mod:`repro.obs.collect`: linear
+    interpolation inside the bucket the rank falls into, with the
+    overflow (+Inf) bucket clamped to the largest finite bound.
+
+    :param bounds: finite ascending bucket upper bounds.
+    :param counts: **non-cumulative** per-bucket counts; one longer than
+        ``bounds`` (the last entry is the +Inf overflow bucket).
+    :param q: quantile in ``[0, 1]``.
+    :returns: the estimate, or None when the histogram holds no samples.
+    :raises ValueError: if ``q`` is outside ``[0, 1]``.
+    """
+    if not 0.0 <= q <= 1.0:
+        raise ValueError("quantile must be in [0, 1]")
+    total = sum(counts)
+    if total <= 0:
+        return None
+    rank = q * total
+    cum = 0.0
+    lo = 0.0
+    for i, c in enumerate(counts[:-1]):
+        hi = bounds[i]
+        if cum + c >= rank and c > 0:
+            frac = (rank - cum) / c
+            return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
+        cum += c
+        lo = hi
+    return bounds[-1] if len(bounds) else 0.0
 
 
 def _fmt(v: float) -> str:
@@ -201,22 +240,17 @@ class Histogram(_Child):
         overflow (+Inf) bucket clamps to the largest finite bound — the
         estimate is bucket-resolution coarse, by construction.
         """
-        if not 0.0 <= q <= 1.0:
-            raise ValueError("quantile must be in [0, 1]")
-        counts, _, total = self.snapshot()
-        if total == 0:
-            return None
-        rank = q * total
-        cum = 0.0
-        lo = 0.0
-        for i, c in enumerate(counts[:-1]):
-            hi = self._bounds[i]
-            if cum + c >= rank and c > 0:
-                frac = (rank - cum) / c
-                return lo + (hi - lo) * min(max(frac, 0.0), 1.0)
-            cum += c
-            lo = hi
-        return self._bounds[-1] if self._bounds else 0.0
+        counts, _, _ = self.snapshot()
+        return quantile_from_buckets(self._bounds, counts, q)
+
+    def mean(self) -> float | None:
+        """Mean of all observations, or None with no samples (never NaN
+        — a just-started endpoint's stats surface must serve clean
+        nulls, not ``0/0``)."""
+        with self._lock:
+            if self._count == 0:
+                return None
+            return self._sum / self._count
 
 
 class _Family:
@@ -291,10 +325,13 @@ class _Family:
     def quantile(self, q: float):
         return self.labels().quantile(q)
 
+    def mean(self):
+        return self.labels().mean()
+
     # ----------------------------- rendering ------------------------------
 
     def render(self, out: list[str]) -> None:
-        out.append(f"# HELP {self.name} {self.help}")
+        out.append(f"# HELP {self.name} {_escape_help(self.help)}")
         out.append(f"# TYPE {self.name} {self.kind}")
         for key, child in sorted(self.children().items()):
             if self.kind == "histogram":

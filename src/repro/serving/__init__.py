@@ -21,6 +21,10 @@ Two independent subsystems live here:
     :class:`~repro.serving.sharded.ShardedRegionRouter` — consistent-hash
     placement of sub-blocks over N shard endpoints and the scatter-gather
     router that reassembles full crops (replica retry + local fallback).
+  * :class:`~repro.serving.loadgen.LoadGenerator` /
+    :class:`~repro.serving.loadgen.ZipfWorkload` — open-loop Zipf
+    mixed-ROI traffic generation with exact client-side p50/p99,
+    saturation detection, and sampled bit-identity verification.
 
 See ``docs/serving.md`` for the architecture guide and ``docs/
 tacz_format.md`` for the container byte layout.
@@ -32,9 +36,11 @@ hosts without an accelerator stack.
 """
 from .client import RegionClient
 from .http_api import RegionHTTPServer, serve
+from .loadgen import LoadGenerator, LoadReport, ZipfWorkload, client_fetch
 from .regions import DecodePlanner, RegionServer, SubBlockCache
 from .sharded import ShardedRegionRouter, ShardMap
 
-__all__ = ["DecodePlanner", "RegionClient", "RegionHTTPServer",
-           "RegionServer", "ShardMap", "ShardedRegionRouter",
-           "SubBlockCache", "serve"]
+__all__ = ["DecodePlanner", "LoadGenerator", "LoadReport", "RegionClient",
+           "RegionHTTPServer", "RegionServer", "ShardMap",
+           "ShardedRegionRouter", "SubBlockCache", "ZipfWorkload",
+           "client_fetch", "serve"]

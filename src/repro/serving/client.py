@@ -251,8 +251,23 @@ class RegionClient:
             out.append(per_box)
         return header, out
 
-    def metrics(self) -> str:
-        """The endpoint's Prometheus text exposition
+    def metrics(self) -> dict:
+        """The endpoint's metrics, scraped and parsed
+        (``GET /v1/metrics`` through :func:`repro.obs.expo.parse`).
+
+        :returns: ``{family_name:`` :class:`repro.obs.expo.ParsedFamily`
+            ``}`` — counters/gauges as floats, histograms as
+            :class:`~repro.obs.expo.ParsedHistogram` with bucket bounds
+            and quantile estimation.  Use :meth:`metrics_text` for the
+            raw exposition body.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        :raises ValueError: if the scrape body is malformed.
+        """
+        from repro.obs import expo
+        return expo.parse(self.metrics_text())
+
+    def metrics_text(self) -> str:
+        """The endpoint's raw Prometheus text exposition
         (``GET /v1/metrics``).
 
         :returns: the scrape body as text.
@@ -260,3 +275,25 @@ class RegionClient:
         """
         with self._get("/v1/metrics") as resp:
             return resp.read().decode("utf-8")
+
+    def health(self) -> dict:
+        """The endpoint's liveness/readiness report
+        (``GET /v1/health``).
+
+        :returns: the health dict — ``status`` (``"ok"`` | ``"degraded"``
+            | ``"down"``), ``snapshot_crc``, ``checks`` — from
+            :meth:`RegionServer.health` or the router's fleet view.  A
+            503 (readiness failure) still returns the body rather than
+            raising, so callers can read *why* the endpoint is not ready.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
+        try:
+            with self._get("/v1/health") as resp:
+                return json.loads(resp.read())
+        except RegionAPIError as exc:
+            if exc.code == 503:
+                try:
+                    return json.loads(exc.read())
+                except ValueError:
+                    pass
+            raise

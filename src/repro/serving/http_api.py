@@ -9,6 +9,9 @@ Routes::
     GET  /v1/stats                cache counters + latency quantiles
     GET  /v1/metrics              Prometheus text exposition of the
                                   process-wide repro.obs registry
+    GET  /v1/health               liveness/readiness: snapshot CRC, cache
+                                  headroom, shard reachability (router);
+                                  200 ok/degraded, 503 down (with body)
     GET  /v1/region?level=L&box=x0:x1,y0:y1,z0:z1
                                   one level's crop; body = C-order <f4 bytes,
                                   shape/box/ratio travel in X-TACZ-* headers
@@ -60,8 +63,8 @@ access_log = logging.getLogger("repro.serving.http")
 
 # bounded route-label set for the HTTP metrics (an arbitrary 404 path
 # must not mint an unbounded number of label values)
-_KNOWN_ROUTES = ("/v1/meta", "/v1/stats", "/v1/metrics", "/v1/region",
-                 "/v1/regions")
+_KNOWN_ROUTES = ("/v1/meta", "/v1/stats", "/v1/metrics", "/v1/health",
+                 "/v1/region", "/v1/regions")
 
 
 def format_box(box) -> str:
@@ -137,12 +140,17 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                 "n_subblocks": len(e.subblocks),
             })
         meta = {"snapshot_crc": self.rs.snapshot_crc,
-                "version": rd.version, "levels": levels,
-                "cache": self.rs.cache.stats()}
+                "version": rd.version, "levels": levels}
+        cache = getattr(self.rs, "cache", None)
+        if cache is not None:     # a mounted router has no decode cache
+            meta["cache"] = cache.stats()
         if self.rs.shard_map is not None:
-            meta["shard"] = {"shard_id": self.rs.shard_id,
-                             "n_shards": len(self.rs.shard_map),
-                             "shard_map": self.rs.shard_map.to_dict()}
+            shard = {"n_shards": len(self.rs.shard_map),
+                     "shard_map": self.rs.shard_map.to_dict()}
+            sid = getattr(self.rs, "shard_id", None)
+            if sid is not None:
+                shard["shard_id"] = sid
+            meta["shard"] = shard
         return meta
 
     # ------------------------------- routes --------------------------------
@@ -168,9 +176,16 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             obsm.HTTP_REQUEST_SECONDS.labels(route).observe(dt)
             level = (logging.INFO if getattr(self.server, "verbose", False)
                      else logging.DEBUG)
-            access_log.log(
-                level, "%s %s %d %.2fms rid=%s", method, self.path,
-                self._status or 500, dt * 1000.0, self._request_id)
+            if getattr(self.server, "log_json", False):
+                access_log.log(level, "%s", json.dumps(
+                    {"method": method, "path": self.path,
+                     "status": self._status or 500,
+                     "duration_ms": round(dt * 1000.0, 3),
+                     "request_id": self._request_id}, sort_keys=True))
+            else:
+                access_log.log(
+                    level, "%s %s %d %.2fms rid=%s", method, self.path,
+                    self._status or 500, dt * 1000.0, self._request_id)
 
     def do_GET(self) -> None:
         """Dispatch ``/v1/meta``, ``/v1/stats``, ``/v1/metrics``,
@@ -192,11 +207,21 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             if self.rs.auto_reload:
                 self.rs.maybe_reload()
             return self._send_json(self.rs.stats())
+        if url.path == "/v1/health":
+            if self.rs.auto_reload:
+                self.rs.maybe_reload()
+            h = self.rs.health()
+            # liveness (process answers) is the 200; readiness failure is
+            # a 503 *with* the body, so probes can read why
+            return self._send_json(
+                h, status=503 if h.get("status") == "down" else 200)
         if url.path == "/v1/metrics":
             # scrape surface: the process-wide registry covers this
             # server's cache/planner/latency series and, when a router or
             # sibling shard servers share the process, theirs too
-            obsm.refresh_cache_gauges(self.rs.cache.stats())
+            cache = getattr(self.rs, "cache", None)
+            if cache is not None:
+                obsm.refresh_cache_gauges(cache.stats())
             body = obs.REGISTRY.render().encode()
             self.send_response(200)
             self.send_header("Content-Type",
@@ -296,25 +321,33 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
 
 
 class RegionHTTPServer(ThreadingHTTPServer):
-    """ThreadingHTTPServer bound to one :class:`RegionServer`."""
+    """ThreadingHTTPServer bound to one :class:`RegionServer` (or a
+    router exposing the same serving surface)."""
 
     daemon_threads = True
 
     def __init__(self, addr, region_server: RegionServer, *,
-                 verbose: bool = False):
+                 verbose: bool = False, log_json: bool = False):
         super().__init__(addr, RegionRequestHandler)
         self.region_server = region_server
         self.verbose = verbose
+        self.log_json = log_json
 
 
 def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
           cache_bytes: int = 256 << 20, auto_reload: bool = True,
           shard_map=None, shard_id: str | None = None,
-          verbose: bool = False) -> RegionHTTPServer:
-    """Build a region endpoint from a ``.tacz`` path or a RegionServer.
+          verbose: bool = False, log_json: bool = False,
+          ) -> RegionHTTPServer:
+    """Build a region endpoint from a ``.tacz`` path, a RegionServer, or
+    a sharded router.
 
     :param src: a ``.tacz`` path (a :class:`RegionServer` is built for
-        it) or an already-configured :class:`RegionServer`.
+        it), an already-configured :class:`RegionServer`, or a
+        :class:`repro.serving.sharded.ShardedRegionRouter` — a mounted
+        router serves the same routes (``/v1/meta|stats|metrics|health|
+        region|regions``), so a fleet's front door speaks the identical
+        wire protocol as its shards.
     :param host: bind address.
     :param port: bind port; ``0`` binds an ephemeral port — read it back
         from ``server_address``.
@@ -327,13 +360,19 @@ def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
     :param shard_id: this endpoint's shard in ``shard_map``.
     :param verbose: emit the structured access log at INFO instead of
         DEBUG (the ``repro.serving.http`` logger; quiet by default).
+    :param log_json: emit each access-log record as one JSON object
+        (``method``, ``path``, ``status``, ``duration_ms``,
+        ``request_id``) instead of the plain-text line — machine-parsable
+        fleet logs; the plain-text format is the unchanged default.
     :returns: the (not yet running) HTTP server; call ``serve_forever()``
         (typically on a thread) and ``shutdown()`` to stop.
     :raises ValueError: if only one of ``shard_map``/``shard_id`` is
         given, or the file fails TACZ validation.
     """
-    if not isinstance(src, RegionServer):
+    if not isinstance(src, RegionServer) and \
+            not hasattr(src, "get_regions_with_crc"):
         src = RegionServer(src, cache_bytes=cache_bytes,
                            auto_reload=auto_reload, shard_map=shard_map,
                            shard_id=shard_id)
-    return RegionHTTPServer((host, port), src, verbose=verbose)
+    return RegionHTTPServer((host, port), src, verbose=verbose,
+                            log_json=log_json)

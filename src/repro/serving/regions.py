@@ -387,6 +387,11 @@ class RegionServer:
         self.auto_reload = bool(auto_reload)
         self.shard_map = shard_map
         self.shard_id = shard_id
+        #: optional zero-arg callable invoked at the top of every batch —
+        #: a fault-injection point for tests/benchmarks (e.g. a
+        #: ``time.sleep`` that makes an SLO latency rule fire on demand).
+        #: Exceptions it raises surface as request failures.
+        self.fault_hook = None
         self.cache = SubBlockCache(cache_bytes)
         self._lock = threading.Lock()
         # readers displaced by a hot swap, with in-flight request counts:
@@ -524,6 +529,9 @@ class RegionServer:
         span.__enter__()
         t0 = time.perf_counter()
         try:
+            hook = self.fault_hook
+            if hook is not None:
+                hook()
             obsm.SERVER_REGIONS.inc(len(boxes))
             lis = list(range(rd.n_levels)) if levels is None else \
                 [int(li) for li in levels]
@@ -621,9 +629,63 @@ class RegionServer:
         for q, key in ((0.5, "p50_ms"), (0.9, "p90_ms"), (0.99, "p99_ms")):
             est = hist.quantile(q)
             lat[key] = None if est is None else round(est * 1000.0, 3)
+        mean = hist.mean()
+        lat["mean_ms"] = None if mean is None else round(mean * 1000.0, 3)
         s["latency"] = lat
         if self.shard_map is not None:
             s["shard"] = {"shard_id": self.shard_id,
                           "n_shards": len(self.shard_map),
                           "owned_keys": len(self._owned or ())}
         return s
+
+    def health(self) -> dict:
+        """Liveness/readiness report (the body of ``GET /v1/health``).
+
+        Three checks:
+
+        * ``snapshot`` — the published file's footer CRC is readable
+          (probe failure ⇒ ``down``: the server could not adopt a
+          republish and a restart would not come back), and matches the
+          serving snapshot (mismatch ⇒ ``degraded``: an atomic republish
+          landed but has not been adopted yet — with ``auto_reload`` the
+          next request heals it).
+        * ``cache`` — byte-budget headroom (informational: a full cache
+          evicting is normal steady state, never unhealthy by itself).
+        * ``shard`` — present on a shard-filtered server: this shard's
+          identity and owned-key count, so a fleet collector can see a
+          shard serving zero keys after a resharding bug.
+
+        :returns: dict with ``status`` (``"ok"`` | ``"degraded"`` |
+            ``"down"``), ``snapshot_crc``, and per-check detail under
+            ``checks``.  Never raises — a broken server must still be
+            able to say *how* it is broken.
+        """
+        checks: dict = {}
+        status = "ok"
+        try:
+            probe = probe_index_crc(self.path)
+        except Exception:   # unreadable path: treat like a failed probe
+            probe = None
+        if probe is None:
+            status = "down"
+        elif probe != self.snapshot_crc:
+            status = "degraded"
+        checks["snapshot"] = {"ok": probe is not None,
+                              "serving_crc": self.snapshot_crc,
+                              "file_crc": probe,
+                              "stale": (None if probe is None
+                                        else probe != self.snapshot_crc)}
+        cs = self.cache.stats()
+        headroom = 1.0 - cs["bytes"] / cs["budget_bytes"]
+        checks["cache"] = {"ok": True,
+                           "budget_bytes": cs["budget_bytes"],
+                           "bytes": cs["bytes"],
+                           "headroom": round(headroom, 4)}
+        if self.shard_map is not None:
+            owned = len(self._owned or ())
+            checks["shard"] = {"ok": owned > 0,
+                               "shard_id": self.shard_id,
+                               "n_shards": len(self.shard_map),
+                               "owned_keys": owned}
+        return {"status": status, "role": "server",
+                "snapshot_crc": self.snapshot_crc, "checks": checks}

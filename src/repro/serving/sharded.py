@@ -306,6 +306,18 @@ class ShardedRegionRouter:
         """Index CRC of the snapshot the router currently plans against."""
         return self._reader.index_crc
 
+    @property
+    def reader(self) -> TACZReader:
+        """The local reader the router plans (and falls back) against —
+        the same property :class:`~repro.serving.regions.RegionServer`
+        exposes, so ``http_api.serve`` can mount a router unchanged."""
+        return self._reader
+
+    @property
+    def n_levels(self) -> int:
+        """Level count of the planning snapshot."""
+        return self._reader.n_levels
+
     def maybe_reload(self) -> bool:
         """Adopt a republished local snapshot; True when a swap happened.
 
@@ -497,6 +509,7 @@ class ShardedRegionRouter:
         one.
 
         :returns: ``(out, meta)`` where ``meta`` has ``request_id``,
+            ``snapshot_crc`` (the generation that served the batch),
             ``ms`` (whole-batch wall time), and ``shards`` — one summary
             dict per fan-out group, slowest first.
         """
@@ -568,8 +581,11 @@ class ShardedRegionRouter:
                         box=p.lbox, data=acc[pi]))
                 out.append(per_box)
             shard_infos.sort(key=lambda i: i["ms"], reverse=True)
+            dt = time.perf_counter() - t_batch
+            obsm.ROUTER_BATCH_SECONDS.labels().observe(dt)
             meta = {"request_id": rid,
-                    "ms": round((time.perf_counter() - t_batch) * 1000.0, 3),
+                    "snapshot_crc": rd.index_crc,
+                    "ms": round(dt * 1000.0, 3),
                     "shards": shard_infos}
             return out, meta
         finally:
@@ -601,19 +617,102 @@ class ShardedRegionRouter:
         """
         return self.get_regions([box])[0]
 
+    def get_regions_with_crc(self, boxes: list[Box],
+                             levels: list[int] | None = None,
+                             ) -> tuple[int, list[list[ROILevel]]]:
+        """:meth:`get_regions` plus the serving snapshot's identity —
+        the same contract :meth:`RegionServer.get_regions_with_crc` has,
+        so ``http_api`` can serve a router behind the identical routes.
+
+        :returns: ``(index_crc_of_serving_snapshot, results)``.
+        """
+        out, meta = self.get_regions_meta(boxes, levels)
+        return int(meta["snapshot_crc"]), out
+
     def stats(self) -> dict:
         """Router counters plus the planning snapshot's identity.
 
+        Reports ``latency`` — batch count plus p50/p90/p99/mean
+        estimates (milliseconds) from ``tacz_router_batch_seconds`` —
+        with clean nulls (never NaN) before the first batch.
+
         :returns: dict with ``batches``, ``shard_requests``,
             ``endpoint_failures``, ``local_fallbacks``, ``snapshot_crc``,
-            the shard-map config, and — when read load-balancing is on —
-            the currently demoted endpoints.
+            ``latency``, the shard-map config, and — when read
+            load-balancing is on — the currently demoted endpoints.
         """
         s = dict(self.counters)
         s["snapshot_crc"] = self.snapshot_crc
         s["shard_map"] = self.shard_map.to_dict()
         s["load_balance"] = self.load_balance
+        hist = obsm.ROUTER_BATCH_SECONDS.labels()
+        lat = {"count": hist.count}
+        for q, key in ((0.5, "p50_ms"), (0.9, "p90_ms"), (0.99, "p99_ms")):
+            est = hist.quantile(q)
+            lat[key] = None if est is None else round(est * 1000.0, 3)
+        mean = hist.mean()
+        lat["mean_ms"] = None if mean is None else round(mean * 1000.0, 3)
+        s["latency"] = lat
         if self.load_balance:
             with self._lock:
                 s["unhealthy_endpoints"] = sorted(self._unhealthy)
         return s
+
+    def health(self) -> dict:
+        """Liveness/readiness report (the body of ``GET /v1/health``).
+
+        Checks the local planning snapshot (footer CRC, like
+        :meth:`RegionServer.health`) and **shard reachability**: one
+        ``GET /v1/health`` probe per configured endpoint.  A shard is
+        reachable when at least one of its endpoints answers with a
+        non-``down`` status.  Status is ``ok`` when the snapshot is
+        current and every shard is reachable; ``degraded`` when the
+        snapshot is stale or some shard is unreachable but
+        ``local_fallback`` can cover it; ``down`` when a shard is
+        unreachable and there is no fallback, or the snapshot probe
+        fails.  Never raises.
+
+        :returns: dict with ``status``, ``snapshot_crc``, and per-check
+            detail under ``checks`` (``checks["shards"]`` maps shard id
+            → ``{reachable, endpoints: {url: status}}``).
+        """
+        checks: dict = {}
+        status = "ok"
+        try:
+            probe = probe_index_crc(self.path)
+        except Exception:
+            probe = None
+        if probe is None:
+            status = "down"
+        elif probe != self.snapshot_crc:
+            status = "degraded"
+        checks["snapshot"] = {"ok": probe is not None,
+                              "serving_crc": self.snapshot_crc,
+                              "file_crc": probe,
+                              "stale": (None if probe is None
+                                        else probe != self.snapshot_crc)}
+        shards: dict[str, dict] = {}
+        unreachable = 0
+        for sid in self.shard_map.shards:
+            statuses: dict[str, str] = {}
+            reachable = False
+            for url in self.endpoints.get(sid, ()):
+                try:
+                    h = self._client(url).health()
+                    statuses[url] = str(h.get("status", "ok"))
+                except Exception as exc:   # noqa: BLE001 — per endpoint
+                    statuses[url] = f"unreachable: {exc}"
+                    continue
+                if statuses[url] != "down":
+                    reachable = True
+            if not reachable:
+                unreachable += 1
+            shards[sid] = {"reachable": reachable, "endpoints": statuses}
+        checks["shards"] = shards
+        if unreachable:
+            if self.local_fallback and status != "down":
+                status = "degraded"
+            else:
+                status = "down"
+        return {"status": status, "role": "router",
+                "snapshot_crc": self.snapshot_crc, "checks": checks}

@@ -146,8 +146,59 @@ def test_obs_doc_covers_required_topics(obs_doc):
                    "X-Repro-Request-Id", "root_span", "set_enabled",
                    "repro.serving.http", "RegionAPIError", "regions_ex",
                    "obs_summary", "0.95", "p50_ms", "quantile",
-                   "DEFAULT_TIME_BUCKETS", "get_regions_meta"]:
+                   "DEFAULT_TIME_BUCKETS", "get_regions_meta",
+                   # ISSUE 8: the fleet observability plane
+                   "GET /v1/health", "FleetCollector", "SLOEngine",
+                   "SLORule", "for_seconds", "log_json", "metrics_text",
+                   "ZipfWorkload", "LoadGenerator", "open-loop",
+                   "counter-reset", "fleet_families", "dump_json",
+                   "verify_reader", "bench_loadgen", "local_fallback",
+                   "up_fraction"]:
         assert needle in obs_doc, f"observability.md lost coverage: {needle}"
+
+
+def test_obs_doc_slo_rule_table_matches_rule_types(obs_doc):
+    """The SLO rule table must name every rule kind the engine knows
+    with its exact contract line, and nothing the engine does not."""
+    from repro.obs import slo
+    assert "## SLO rules" in obs_doc
+    section = obs_doc.split("## SLO rules", 1)[1].split("\n## ", 1)[0]
+    rows = {}
+    for kind, contract in re.findall(r"^\| `([a-z_]+)` \| (.+) \|$",
+                                     section, flags=re.MULTILINE):
+        rows[kind] = contract.replace("\\|", "|")
+    for kind, doc in slo.RULE_TYPES.items():
+        assert rows.get(kind) == doc, \
+            f"rule table row for {kind!r} missing or stale\n" \
+            f"  doc:    {rows.get(kind)!r}\n  engine: {doc!r}"
+    for kind in rows:
+        assert kind in slo.RULE_TYPES, \
+            f"doc names unknown SLO rule kind {kind!r}"
+
+
+def test_obs_doc_references_fleet_apis():
+    import inspect
+
+    from repro import obs, serving
+
+    for attr in ("FleetCollector", "Scrape", "SLOEngine", "SLORule",
+                 "RULE_TYPES", "ParsedFamily", "ParsedHistogram",
+                 "quantile_from_buckets", "expo"):
+        assert hasattr(obs, attr)
+    for attr in ("LoadGenerator", "LoadReport", "ZipfWorkload",
+                 "client_fetch"):
+        assert hasattr(serving, attr)
+    for attr in ("health", "metrics_text", "metrics"):
+        assert hasattr(serving.RegionClient, attr)
+    assert hasattr(serving.RegionServer, "health")
+    assert hasattr(serving.ShardedRegionRouter, "health")
+    assert "log_json" in inspect.signature(serving.serve).parameters
+    for method in ("poll", "counter_delta", "counter_rate", "quantile",
+                   "gauge", "fleet_families", "snapshot", "dump_json",
+                   "up_fraction"):
+        assert hasattr(obs.FleetCollector, method)
+    for method in ("evaluate", "firing", "passed", "verdict", "report"):
+        assert hasattr(obs.SLOEngine, method)
 
 
 def test_serving_doc_covers_observability_surface(serving_doc):

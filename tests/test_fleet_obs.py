@@ -1,0 +1,655 @@
+"""Fleet observability plane (ISSUE 8): FleetCollector ring-buffer
+series, SLO rule engine state transitions, /v1/health, the JSON access
+log, and the Zipf load generator — unit-level with injected fetch/clock,
+plus the live 2-shard acceptance scenario:
+
+  * a ``FleetCollector`` scraping a real 2-shard fleet under loadgen
+    traffic produces fleet-aggregated counter totals equal to the sum of
+    the per-endpoint ``snapshot()`` values;
+  * an SLO latency rule demonstrably walks pending → firing → resolved,
+    with the latency injected through ``RegionServer.fault_hook``.
+"""
+import json
+import logging
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.io import TACZReader
+from repro.obs import expo
+from repro.obs.collect import FleetCollector
+from repro.obs.metrics import REGISTRY
+from repro.obs.registry import MetricsRegistry
+from repro.obs.slo import RULE_TYPES, SLOEngine, SLORule
+from repro.serving import (LoadGenerator, RegionClient, ShardedRegionRouter,
+                           ShardMap, ZipfWorkload, client_fetch, serve)
+
+BOXES = [((0, 12), (0, 12), (0, 12)), ((8, 24), (4, 20), (10, 26)),
+         ((20, 32), (20, 32), (20, 32))]
+
+
+@pytest.fixture(scope="module")
+def snapshot(make_amr_snapshot):
+    snap = make_amr_snapshot(densities=[0.35, 0.65], seed=5, name="fleet")
+    return snap.path, snap
+
+
+@pytest.fixture()
+def metrics_enabled():
+    was = obs.is_enabled()
+    obs.set_enabled(True)
+    yield
+    obs.set_enabled(was)
+
+
+# --------------------------- collector (fake fetch) ------------------------
+
+
+class FakeFleet:
+    """Injectable fetch/clock: each endpoint serves the render of a
+    fresh ``MetricsRegistry`` built by a mutable builder function."""
+
+    def __init__(self, names=("a", "b")):
+        self.builders = {n: (lambda reg: None) for n in names}
+        self.health = {n: {"status": "ok"} for n in names}
+        self.raising = set()
+        self.now = 0.0
+
+    def clock(self):
+        return self.now
+
+    def fetch(self, url, timeout):
+        name = url.rsplit("/", 1)[-1]
+        if name in self.raising:
+            raise ConnectionError("injected outage")
+        reg = MetricsRegistry()
+        self.builders[name](reg)
+        return reg.render(), self.health.get(name)
+
+    def collector(self, **kw) -> FleetCollector:
+        return FleetCollector(
+            {n: f"fake://{n}" for n in self.builders},
+            fetch=self.fetch, clock=self.clock, **kw)
+
+
+def test_counter_delta_rate_and_reset():
+    fleet = FakeFleet(names=("a", "b"))
+    col = fleet.collector()
+    vals = {"a": 10.0, "b": 100.0}
+    for n in vals:
+        fleet.builders[n] = (
+            lambda reg, n=n: reg.counter("x_total", "X").inc(vals[n]))
+    col.poll()
+    assert col.counter_delta("x_total") is None     # one scrape: no delta
+    fleet.now = 10.0
+    vals["a"], vals["b"] = 25.0, 140.0
+    col.poll()
+    assert col.counter_delta("x_total") == pytest.approx(15.0 + 40.0)
+    assert col.counter_delta("x_total", endpoint="a") == pytest.approx(15)
+    assert col.counter_rate("x_total") == pytest.approx(55.0 / 10.0)
+    # counter reset (endpoint restarted): post-reset value IS the delta
+    fleet.now = 20.0
+    vals["a"], vals["b"] = 3.0, 150.0
+    col.poll()
+    assert col.counter_delta("x_total", window=11.0) \
+        == pytest.approx(3.0 + 10.0)
+    # a metric nobody serves
+    assert col.counter_delta("nope_total") is None
+
+
+def test_windowed_histogram_quantile_recovers():
+    """The property the SLO engine rides: a slow burst ages out of the
+    window, so the windowed p99 recovers while the lifetime one cannot."""
+    fleet = FakeFleet(names=("a",))
+    col = fleet.collector()
+    observed = []
+
+    def build(reg):
+        h = reg.histogram("lat_seconds", "L", buckets=(0.01, 0.05, 0.1))
+        for v in observed:
+            h.observe(v)
+
+    fleet.builders["a"] = build
+    col.poll()                                   # t=0 baseline: empty
+    observed += [0.002] * 10
+    fleet.now = 10.0
+    col.poll()
+    fast = col.quantile("lat_seconds", 0.99, window=30.0)
+    assert fast is not None and fast <= 0.01
+    observed += [0.09] * 10                      # slow burst
+    fleet.now = 20.0
+    col.poll()
+    slow = col.quantile("lat_seconds", 0.99, window=30.0)
+    assert slow is not None and slow > 0.05
+    observed += [0.002] * 20                     # fast again
+    fleet.now = 40.0
+    col.poll()
+    fleet.now = 50.0
+    col.poll()
+    # window [20, 50]: the burst is inside the t=20 baseline, gone from
+    # the delta — the windowed p99 recovered
+    recovered = col.quantile("lat_seconds", 0.99, window=30.0)
+    assert recovered is not None and recovered <= 0.01
+    # lifetime histogram never forgets (counts keep the burst)
+    lifetime = col.histogram_delta("lat_seconds", window=None)
+    assert lifetime.count == 40
+
+
+def test_gauge_aggregations_and_fleet_families():
+    fleet = FakeFleet(names=("a", "b"))
+    fleet.builders["a"] = lambda reg: (
+        reg.gauge("occ", "O").set(5), reg.counter("c_total", "C").inc(7))
+    fleet.builders["b"] = lambda reg: (
+        reg.gauge("occ", "O").set(11), reg.counter("c_total", "C").inc(9))
+    col = fleet.collector()
+    col.poll()
+    assert col.gauge("occ", agg="max") == 11
+    assert col.gauge("occ", agg="min") == 5
+    assert col.gauge("occ", agg="sum") == 16
+    with pytest.raises(ValueError):
+        col.gauge("occ", agg="avg")
+    fam = col.fleet_families()
+    assert fam["c_total"]["series"]["_"] == 16.0          # counters sum
+    assert fam["occ"]["series"]["_"] == {"max": 11.0, "min": 5.0}
+
+
+def test_up_down_and_snapshot_dump(tmp_path):
+    fleet = FakeFleet(names=("a", "b", "c"))
+    fleet.builders["a"] = lambda reg: reg.counter("c_total", "C").inc(1)
+    fleet.builders["b"] = lambda reg: reg.counter("c_total", "C").inc(2)
+    fleet.builders["c"] = lambda reg: reg.counter("c_total", "C").inc(4)
+    fleet.raising.add("b")                       # scrape failure
+    fleet.health["c"] = {"status": "down"}       # health-reported down
+    col = fleet.collector()
+    col.poll()
+    assert col.up("a") and not col.up("b") and not col.up("c")
+    assert col.up_fraction() == pytest.approx(1 / 3)
+    # down endpoints are excluded from fleet aggregation
+    assert col.fleet_families()["c_total"]["series"]["_"] == 1.0
+    snap = col.snapshot()
+    assert snap["endpoints"]["b"]["up"] is False
+    assert "injected outage" in snap["endpoints"]["b"]["error"]
+    assert snap["endpoints"]["c"]["health"] == {"status": "down"}
+    path = col.dump_json(str(tmp_path / "fleet.json"))
+    loaded = json.loads(open(path).read())
+    assert loaded["fleet"]["c_total"]["series"]["_"] == 1.0
+    assert loaded["polls"] == 1
+
+
+def test_background_polling_thread():
+    fleet = FakeFleet(names=("a",))
+    fleet.builders["a"] = lambda reg: reg.counter("c_total", "C").inc(1)
+    col = fleet.collector()
+    col.start(interval=0.01)
+    deadline = time.monotonic() + 5.0
+    while col.polls < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    col.stop()
+    assert col.polls >= 3
+    polls = col.polls
+    time.sleep(0.05)
+    assert col.polls == polls                    # really stopped
+
+
+# ------------------------------- SLO engine --------------------------------
+
+
+def test_slo_rule_validation():
+    with pytest.raises(ValueError):
+        SLORule("r", "nope", "<", 1.0)
+    with pytest.raises(ValueError):
+        SLORule("r", "gauge", "!=", 1.0)
+    with pytest.raises(ValueError):              # duplicate names
+        fleet = FakeFleet(names=("a",))
+        SLOEngine(fleet.collector(),
+                  [SLORule("r", "up", ">=", 1.0),
+                   SLORule("r", "up", ">=", 0.5)])
+    assert set(RULE_TYPES) >= {"quantile", "quantile_ratio", "rate",
+                               "ratio", "error_rate", "gauge", "up"}
+
+
+def test_slo_gauge_rule_full_state_machine(metrics_enabled):
+    """ok → pending → firing → resolved → ok, with `for`-duration and
+    no-data hold, against an injected gauge."""
+    fleet = FakeFleet(names=("a",))
+    value = [5.0]
+    present = [True]
+
+    def build(reg):
+        if present[0]:
+            reg.gauge("queue_depth", "Q").set(value[0])
+
+    fleet.builders["a"] = build
+    col = fleet.collector()
+    rule = SLORule("queue", "gauge", "<", 10.0, for_seconds=5.0,
+                   params={"metric": "queue_depth"})
+    eng = SLOEngine(col, [rule], clock=fleet.clock)
+    st = eng.states["queue"]
+
+    col.poll()
+    eng.evaluate()
+    assert st.state == "ok" and st.value == 5.0
+    # a blip shorter than for_seconds never fires
+    value[0] = 50.0
+    fleet.now = 10.0
+    col.poll()
+    eng.evaluate()
+    assert st.state == "pending"
+    value[0] = 5.0
+    fleet.now = 12.0
+    col.poll()
+    eng.evaluate()
+    assert st.state == "ok" and not st.ever_fired
+    # sustained violation escalates after for_seconds
+    value[0] = 50.0
+    fleet.now = 20.0
+    col.poll()
+    eng.evaluate()
+    assert st.state == "pending"
+    fleet.now = 26.0
+    col.poll()
+    eng.evaluate()
+    assert st.state == "firing" and st.ever_fired
+    assert eng.firing() == ["queue"] and not eng.passed()
+    # firing state is exported back into the scrapable registry
+    from repro.obs import metrics as obsm
+    assert obsm.SLO_FIRING.labels("queue").value == 1.0
+    assert obsm.SLO_STATE.labels("queue").value == 2.0
+    assert obsm.SLO_VALUE.labels("queue").value == 50.0
+    # no data → no transition (still firing)
+    present[0] = False
+    fleet.now = 30.0
+    col.poll()
+    eng.evaluate()
+    assert st.state == "firing"
+    # healthy again: resolved for exactly one evaluation, then ok
+    present[0] = True
+    value[0] = 3.0
+    fleet.now = 40.0
+    col.poll()
+    eng.evaluate()
+    assert st.state == "resolved"
+    assert obsm.SLO_STATE.labels("queue").value == 3.0
+    eng.evaluate()
+    assert st.state == "ok" and eng.passed()
+    report = eng.report()
+    assert "queue" in report and "overall: PASS" in report
+    verdict = eng.verdict()
+    assert verdict["passed"] is True
+    assert verdict["rules"]["queue"]["ever_fired"] is True
+
+
+def test_slo_error_rate_ratio_and_up_rules():
+    fleet = FakeFleet(names=("a",))
+    http = {"200": 0.0, "500": 0.0}
+    cache = {"hits": 0.0, "misses": 0.0}
+
+    def build(reg):
+        fam = reg.counter("tacz_http_requests_total", "H",
+                          labels=("route", "status"))
+        for status, v in http.items():
+            fam.labels("/v1/regions", status).inc(v)
+        reg.gauge("tacz_cache_hits", "h").set(cache["hits"])
+        reg.gauge("tacz_cache_misses", "m").set(cache["misses"])
+
+    fleet.builders["a"] = build
+    col = fleet.collector()
+    rules = [
+        SLORule("errors", "error_rate", "<", 0.001,
+                params={"metric": "tacz_http_requests_total"}),
+        SLORule("cache_hit_ratio", "ratio", ">", 0.8,
+                params={"metric_a": "tacz_cache_hits",
+                        "metric_b": "tacz_cache_misses"}),
+        SLORule("fleet_up", "up", ">=", 1.0),
+        SLORule("throughput", "rate", ">", 1.0,
+                params={"metric": "tacz_http_requests_total"}),
+    ]
+    eng = SLOEngine(col, rules, clock=fleet.clock, export=False)
+    col.poll()
+    http.update({"200": 900.0, "500": 0.0})
+    cache.update({"hits": 90.0, "misses": 5.0})
+    fleet.now = 10.0
+    col.poll()
+    eng.evaluate()
+    assert eng.states["errors"].value == 0.0
+    assert eng.states["cache_hit_ratio"].value \
+        == pytest.approx(90.0 / 95.0)
+    assert eng.states["fleet_up"].value == 1.0
+    assert eng.states["throughput"].value == pytest.approx(90.0)
+    assert eng.passed()
+    # a non-2xx burst trips the error-rate rule
+    http["500"] += 100.0
+    fleet.now = 20.0
+    col.poll()
+    eng.evaluate()
+    err = eng.states["errors"]
+    assert err.value == pytest.approx(100.0 / 1000.0)
+    assert err.state == "pending" or err.state == "firing"
+    assert not eng.passed()
+
+
+# ----------------------- health / access log satellites --------------------
+
+
+def test_health_endpoint_ok_and_down(snapshot, tmp_path):
+    path, snap = snapshot
+    httpd = serve(path, port=0, cache_bytes=4 << 20)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    try:
+        client = RegionClient(url)
+        h = client.health()
+        assert h["status"] == "ok" and h["role"] == "server"
+        assert h["snapshot_crc"] == httpd.region_server.snapshot_crc
+        assert h["checks"]["snapshot"]["stale"] is False
+        assert 0.0 <= h["checks"]["cache"]["headroom"] <= 1.0
+        # break the published file: readiness fails but the body says why
+        hidden = str(tmp_path / "hidden.tacz")
+        os.rename(path, hidden)
+        try:
+            h = client.health()                  # 503 path returns body
+            assert h["status"] == "down"
+            assert h["checks"]["snapshot"]["ok"] is False
+        finally:
+            os.rename(hidden, path)
+        assert client.health()["status"] == "ok"
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+def test_json_access_log_option(snapshot, metrics_enabled):
+    path, _ = snapshot
+    records: list[logging.LogRecord] = []
+
+    class _Capture(logging.Handler):
+        def emit(self, record):
+            records.append(record)
+
+    handler = _Capture(level=logging.DEBUG)
+    logger = logging.getLogger("repro.serving.http")
+    old_level = logger.level
+    logger.addHandler(handler)
+    logger.setLevel(logging.DEBUG)
+    httpd = serve(path, port=0, cache_bytes=4 << 20, log_json=True)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    try:
+        client = RegionClient(url)
+        client.regions(BOXES[:1])
+        client.health()
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline and len(records) < 2:
+            time.sleep(0.01)
+        parsed = [json.loads(r.getMessage()) for r in records]
+        assert len(parsed) >= 2
+        for rec in parsed:
+            assert set(rec) == {"method", "path", "status",
+                                "duration_ms", "request_id"}
+            assert rec["status"] == 200
+            assert rec["duration_ms"] >= 0
+            assert len(rec["request_id"]) == 16
+        assert {r["path"] for r in parsed} >= {"/v1/regions",
+                                               "/v1/health"}
+    finally:
+        logger.removeHandler(handler)
+        logger.setLevel(old_level)
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+def test_router_stats_latency_null_safe(snapshot, monkeypatch):
+    """Router stats() before any batch: clean nulls, never NaN."""
+    path, _ = snapshot
+    from repro.obs import metrics as obsm
+    fresh = MetricsRegistry().histogram(
+        "tacz_router_batch_seconds", "fresh", buckets=(0.1,))
+    monkeypatch.setattr(obsm, "ROUTER_BATCH_SECONDS", fresh)
+    import repro.serving.sharded as sharded
+    monkeypatch.setattr(sharded.obsm, "ROUTER_BATCH_SECONDS", fresh)
+    m = ShardMap(["s0"], seed=1)
+    with ShardedRegionRouter(path, m, {}) as router:
+        lat = router.stats()["latency"]
+        assert lat == {"count": 0, "p50_ms": None, "p90_ms": None,
+                       "p99_ms": None, "mean_ms": None}
+        router.get_regions(BOXES[:1], levels=[0])   # local fallback
+        lat = router.stats()["latency"]
+        assert lat["count"] == 1 and lat["p50_ms"] >= 0
+
+
+def test_server_stats_latency_null_safe(snapshot, monkeypatch):
+    """A just-started shard scraped before first traffic serves nulls."""
+    path, _ = snapshot
+    from repro.obs import metrics as obsm
+    import repro.serving.regions as regions
+    fresh = MetricsRegistry().histogram(
+        "tacz_server_request_seconds", "fresh", buckets=(0.1,))
+    monkeypatch.setattr(obsm, "SERVER_REQUEST_SECONDS", fresh)
+    monkeypatch.setattr(regions.obsm, "SERVER_REQUEST_SECONDS", fresh)
+    from repro.serving import RegionServer
+    with RegionServer(path, cache_bytes=4 << 20) as rs:
+        lat = rs.stats()["latency"]
+        assert lat == {"count": 0, "p50_ms": None, "p90_ms": None,
+                       "p99_ms": None, "mean_ms": None}
+        json.dumps(rs.stats())                   # JSON-clean (no NaN)
+
+
+# ------------------------------- loadgen -----------------------------------
+
+
+def test_zipf_workload_shape_and_determinism():
+    wl1 = ZipfWorkload((32, 32, 32), population=30, seed=7)
+    wl2 = ZipfWorkload((32, 32, 32), population=30, seed=7)
+    assert [q.box for q in wl1.queries] == [q.box for q in wl2.queries]
+    assert wl1.sequence(50) == wl2.sequence(50)
+    sizes = set()
+    for q in wl1.queries:
+        for (lo, hi), dim in zip(q.box, (32, 32, 32)):
+            assert 0 <= lo < hi <= dim
+            sizes.add(hi - lo)
+    assert {4, 8, 16} <= sizes                   # the three size classes
+    # popularity is Zipf-skewed: rank 0 dominates a long sequence
+    seq = wl1.sequence(500)
+    counts = {}
+    for q in seq:
+        counts[q.rank] = counts.get(q.rank, 0) + 1
+    assert counts.get(0, 0) > counts.get(9, 0)
+
+
+def test_loadgen_open_loop_against_local_server(snapshot):
+    """Loadgen against an in-process fetch: error isolation, exact
+    percentiles, and saturation detection."""
+    path, _ = snapshot
+    calls = []
+
+    def fetch(query):
+        calls.append(query)
+        if len(calls) == 5:
+            raise RuntimeError("injected failure")
+        time.sleep(0.001)
+        return []
+
+    wl = ZipfWorkload((32, 32, 32), population=8, seed=3)
+    gen = LoadGenerator(fetch, wl, rate=500.0, concurrency=4)
+    report = gen.run(40)
+    assert report.requests == 40 and len(calls) == 40
+    assert report.errors == 1
+    assert "injected failure" in report.error_messages[0]
+    assert report.p50_s <= report.p99_s <= report.max_s
+    assert report.verified == 0                  # no reader given
+    d = report.to_dict()
+    assert d["errors"] == 1 and d["p99_ms"] >= d["p50_ms"]
+    # a rate far above capacity reports saturation honestly
+    def slow_fetch(query):
+        time.sleep(0.01)
+        return []
+    slow = LoadGenerator(slow_fetch, wl, rate=10_000.0, concurrency=2)
+    rep = slow.run(30)
+    assert rep.achieved_rate < rep.offered_rate
+    assert rep.saturated
+
+
+# --------------------- live 2-shard fleet acceptance -----------------------
+
+
+@pytest.fixture()
+def fleet(snapshot):
+    """2 shard endpoints + a mounted router endpoint, one process."""
+    path, snap = snapshot
+    m = ShardMap(["s0", "s1"], seed=7)
+    servers, urls = {}, {}
+    for sid in m.shards:
+        httpd = serve(path, port=0, cache_bytes=8 << 20,
+                      shard_map=m, shard_id=sid)
+        threading.Thread(target=httpd.serve_forever, daemon=True).start()
+        servers[sid] = httpd
+        urls[sid] = f"http://127.0.0.1:{httpd.server_address[1]}"
+    router = ShardedRegionRouter(path, m,
+                                 {k: [v] for k, v in urls.items()})
+    rhttpd = serve(router, port=0)
+    threading.Thread(target=rhttpd.serve_forever, daemon=True).start()
+    urls["router"] = f"http://127.0.0.1:{rhttpd.server_address[1]}"
+    yield path, snap, urls, servers, router
+    rhttpd.shutdown()
+    rhttpd.server_close()
+    router.close()
+    for httpd in servers.values():
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+def test_fleet_collector_acceptance_under_load(fleet, metrics_enabled):
+    """The ISSUE 8 acceptance scenario: collector over a live 2-shard
+    fleet under Zipf loadgen traffic; fleet-aggregated counter totals
+    equal the sum of per-endpoint snapshot()s; bit-identity sampling
+    against the local reader passes."""
+    path, snap, urls, servers, router = fleet
+    col = FleetCollector(urls, window=16)
+    col.poll()
+    assert col.up_fraction() == 1.0
+
+    wl = ZipfWorkload((32, 32, 32), levels=(0, 1), population=24, seed=11)
+    with TACZReader(path) as rd:
+        gen = LoadGenerator(
+            client_fetch(RegionClient(urls["router"])), wl,
+            rate=100.0, concurrency=4,
+            verify_reader=rd, verify_fraction=0.5, seed=1)
+        report = gen.run(30)
+    assert report.errors == 0, report.error_messages
+    assert report.verified > 0 and report.mismatches == 0
+    assert report.p99_s is not None and report.achieved_rate > 0
+
+    col.poll()
+    # traffic moved the fleet counters between the two polls
+    assert col.counter_delta("tacz_router_batches_total",
+                             endpoint="router") >= 30
+    assert col.quantile("tacz_router_batch_seconds", 0.5) is not None
+
+    # acceptance: fleet totals == sum of per-endpoint snapshot()s.  All
+    # endpoints share one process registry, so each per-endpoint scrape
+    # equals REGISTRY.snapshot() and the fleet sum is N× that value.
+    fam = col.fleet_families()
+    reg_snap = REGISTRY.snapshot()
+    for metric in ("tacz_server_regions_total",
+                   "tacz_router_batches_total",
+                   "tacz_router_shard_requests_total"):
+        per_endpoint = []
+        for name in urls:
+            parsed = expo.to_snapshot(col.latest(name).families)
+            per_endpoint.append(parsed[metric]["series"]["_"])
+        assert fam[metric]["series"]["_"] == pytest.approx(
+            sum(per_endpoint))
+        assert per_endpoint == [pytest.approx(
+            reg_snap[metric]["series"]["_"])] * len(urls)
+
+    # histogram buckets fleet-sum too
+    hist = fam["tacz_server_request_seconds"]["series"]["_"]
+    want = reg_snap["tacz_server_request_seconds"]["series"]["_"]
+    assert hist["count"] == want["count"] * len(urls)
+    assert hist["buckets"] == [c * len(urls) for c in want["buckets"]]
+
+    # the mounted router serves the same wire surface as its shards
+    rc = RegionClient(urls["router"])
+    meta = rc.meta()
+    assert "cache" not in meta and meta["shard"]["n_shards"] == 2
+    h = rc.health()
+    assert h["status"] == "ok" and h["role"] == "router"
+    assert all(s["reachable"]
+               for s in h["checks"]["shards"].values())
+    # a shard going down degrades (local fallback still covers it)
+    servers["s0"].shutdown()
+    servers["s0"].server_close()
+    h = rc.health()
+    assert h["status"] == "degraded"
+    assert h["checks"]["shards"]["s0"]["reachable"] is False
+    col.poll()
+    assert col.up("router") and col.up("s1") and not col.up("s0")
+
+
+def test_slo_latency_rule_fires_and_resolves_on_live_endpoint(
+        snapshot, metrics_enabled):
+    """At least one SLO rule demonstrably transitions pending → firing →
+    resolved, latency injected via the slow-decode fault hook."""
+    path, _ = snapshot
+    httpd = serve(path, port=0, cache_bytes=8 << 20)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    url = f"http://127.0.0.1:{httpd.server_address[1]}"
+    fake = [0.0]
+    try:
+        client = RegionClient(url)
+        col = FleetCollector({"s0": url}, window=32,
+                             clock=lambda: fake[0])
+        rule = SLORule(
+            "latency_p99", "quantile", "<", 0.05, for_seconds=5.0,
+            params={"metric": "tacz_server_request_seconds",
+                    "q": 0.99, "window": 25.0})
+        eng = SLOEngine(col, [rule], clock=lambda: fake[0])
+        st = eng.states["latency_p99"]
+
+        client.regions(BOXES[:1])                # warm the cache
+        col.poll()                               # t=0 baseline
+        for _ in range(5):
+            client.regions(BOXES[:1])            # fast traffic
+        fake[0] = 10.0
+        col.poll()
+        eng.evaluate()
+        assert st.state == "ok" and st.value < 0.05
+        # inject latency through the fault hook: p99 blows past 50 ms
+        httpd.region_server.fault_hook = lambda: time.sleep(0.08)
+        for _ in range(6):
+            client.regions(BOXES[:1])
+        fake[0] = 20.0
+        col.poll()
+        eng.evaluate()
+        assert st.state == "pending" and st.value > 0.05
+        fake[0] = 26.0                           # past for_seconds
+        eng.evaluate()
+        assert st.state == "firing"
+        from repro.obs import metrics as obsm
+        assert obsm.SLO_FIRING.labels("latency_p99").value == 1.0
+        # clear the fault; recent traffic is fast again, and the
+        # windowed quantile lets the rule walk back down
+        httpd.region_server.fault_hook = None
+        for _ in range(12):
+            client.regions(BOXES[:1])
+        fake[0] = 40.0
+        col.poll()
+        fake[0] = 45.0
+        col.poll()                  # window [20, 45]: burst in baseline
+        eng.evaluate()
+        assert st.state == "resolved", (st.state, st.value)
+        eng.evaluate()
+        assert st.state == "ok"
+        assert st.ever_fired
+        assert obsm.SLO_FIRING.labels("latency_p99").value == 0.0
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()

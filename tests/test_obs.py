@@ -250,7 +250,7 @@ def test_single_server_scrape_and_stats(snapshot, metrics_enabled):
         client = RegionClient(url)
         client.regions(BOXES)
         client.regions(BOXES)       # warm pass exercises the cache
-        text = client.metrics()
+        text = client.metrics_text()
         # the required coverage: cache, planner, server latency
         for needle in ("tacz_cache_hits", "tacz_cache_misses",
                        "tacz_cache_bytes", "tacz_cache_budget_bytes",
@@ -383,7 +383,7 @@ def test_two_shard_fleet_metrics_and_request_id_in_access_logs(
             assert all("POST /v1/regions 200" in msg for msg in got)
             # scrape (via a shard endpoint — one process, one registry)
             # covers the router fan-out series
-            text = RegionClient(urls["s0"]).metrics()
+            text = RegionClient(urls["s0"]).metrics_text()
             for needle in ("tacz_router_batches_total",
                            "tacz_router_shard_requests_total",
                            'tacz_router_shard_seconds_count{shard="s0"}',
