@@ -10,7 +10,8 @@ import argparse
 import json
 import time
 
-from . import (bench_density_sweep, bench_distributed, bench_entropy,
+from . import (bench_autotune, bench_density_sweep, bench_distributed,
+               bench_entropy,
                bench_grad_compress, bench_halo, bench_kernels,
                bench_loadgen, bench_nast_opst, bench_parallel_write,
                bench_partition_time, bench_power_spectrum,
@@ -37,6 +38,7 @@ BENCHES = [
     ("parallel_write (TACZ multi-part)", bench_parallel_write),
     ("entropy (batched Huffman engines)", bench_entropy),
     ("loadgen (fleet SLO harness)", bench_loadgen),
+    ("autotune (TAC+ §IV-F eb tuning)", bench_autotune),
 ]
 
 

@@ -30,6 +30,12 @@ test); an independent reader can be written from it alone.
     :mod:`repro.io.placement` — the same hashing the serving-side shard
     maps use, so shards can align 1:1 with parts.
 
+  * :mod:`repro.io.frontier` / :mod:`repro.io.variants` — rate–
+    distortion frontiers (the optional ``TACF`` section / manifest key
+    the autotuner records) and multi-variant snapshot sets under one
+    ``variants.json`` catalog; distortion-target grammar and selection
+    live here too.  See ``docs/tuning.md``.
+
 Serving-side consumers (sub-block cache, batched decode planner, HTTP
 region endpoint, consistent-hash sharding) live in :mod:`repro.serving`
 — see ``docs/serving.md``.
@@ -45,12 +51,17 @@ Quick start::
     crops = tacz.read_roi("snap.tacz", ((0, 16), (0, 16), (0, 16)))
 """
 from .format import TACZ_MAGIC, TACZ_VERSION
+from .frontier import (Frontier, FrontierPoint, Target,
+                       TargetUnsatisfiable, parse_target)
 from .parallel import MultiPartReader, ParallelTACZWriter, write_multipart
 from .reader import (ROILevel, TACZReader, WHOLE_LEVEL, open_snapshot,
                      read, read_roi)
+from .variants import is_variant_set, load_catalog, select_variant
 from .writer import TACZWriter, write
 
-__all__ = ["TACZ_MAGIC", "TACZ_VERSION", "MultiPartReader",
-           "ParallelTACZWriter", "ROILevel", "TACZReader", "TACZWriter",
-           "WHOLE_LEVEL", "open_snapshot", "read", "read_roi", "write",
-           "write_multipart"]
+__all__ = ["TACZ_MAGIC", "TACZ_VERSION", "Frontier", "FrontierPoint",
+           "MultiPartReader", "ParallelTACZWriter", "ROILevel",
+           "TACZReader", "TACZWriter", "Target", "TargetUnsatisfiable",
+           "WHOLE_LEVEL", "is_variant_set", "load_catalog",
+           "open_snapshot", "parse_target", "read", "read_roi",
+           "select_variant", "write", "write_multipart"]

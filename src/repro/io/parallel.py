@@ -57,6 +57,7 @@ from repro.core.hybrid import (AMRCompressionResult, LevelArtifacts,
 from repro.core.she import she_encode
 from repro.obs import metrics as obsm
 
+from . import frontier as frt
 from . import manifest as mfst
 from . import placement
 from .reader import WHOLE_LEVEL, TACZReader
@@ -294,6 +295,7 @@ class ParallelTACZWriter:
                               batched=batched, lorenzo_engine=lorenzo_engine,
                               entropy_engine=entropy_engine)
         self._part_ids = [mfst.part_stem(i) for i in range(self.parts)]
+        self._frontier: frt.Frontier | None = None
         self._n_levels = 0
         self._subblocks_per_level: list[int] = []
         self._part_levels: list[list[list[int]]] = [[] for _ in
@@ -548,6 +550,14 @@ class ParallelTACZWriter:
                                 "lr": _slice_level(lr, by_part[pi])})
         self._record_level(n, by_part)
 
+    def set_frontier(self, frontier: frt.Frontier | None) -> None:
+        """Attach a rate–distortion frontier to the snapshot.  It is
+        recorded under the manifest's optional ``"frontier"`` key (the
+        manifest CRC covers it) — the multi-part mirror of
+        :meth:`TACZWriter.set_frontier`."""
+        self._check_live()
+        self._frontier = frontier
+
     # ------------------------------ lifecycle ------------------------------
 
     def close(self) -> str:
@@ -613,6 +623,8 @@ class ParallelTACZWriter:
                               "seed": self.seed,
                               "shards": list(self._part_ids)},
                 "parts": parts}
+        if self._frontier is not None:
+            body["frontier"] = self._frontier.to_dict()
         mfst.write_atomic(self.path, body)
         self._clean_stale({p["name"] for p in parts})
         self._finalized = True
@@ -691,13 +703,15 @@ def _slice_level(lr: LevelResult, idxs: list[int]) -> LevelResult:
 
 
 def write_multipart(path, obj, *, parts: int = 2, seed: int = 0,
-                    mode: str = "thread", eb=None, **kwargs) -> str:
+                    mode: str = "thread", eb=None,
+                    frontier: frt.Frontier | None = None, **kwargs) -> str:
     """One-shot multi-part mirror of :func:`repro.io.write`.
 
     ``obj`` may be an :class:`AMRCompressionResult` (payload slices fan
     out; compression already happened) or an :class:`AMRDataset` (each
     part worker compresses its own slice of every level; ``eb``
-    required, scalar or per-level).
+    required, scalar or per-level).  ``frontier`` attaches an optional
+    rate–distortion frontier to the manifest.
 
     :returns: the snapshot directory path.
     """
@@ -706,6 +720,8 @@ def write_multipart(path, obj, *, parts: int = 2, seed: int = 0,
                                 **kwargs) as w:
             for lr in obj.levels:
                 w.add_compressed(lr)
+            if frontier is not None:
+                w.set_frontier(frontier)
         return w.path
     if isinstance(obj, AMRDataset):
         if eb is None:
@@ -717,6 +733,8 @@ def write_multipart(path, obj, *, parts: int = 2, seed: int = 0,
                                 **kwargs) as w:
             for lvl, e in zip(obj.levels, ebs):
                 w.add_level(lvl.data, lvl.mask, eb=float(e), ratio=lvl.ratio)
+            if frontier is not None:
+                w.set_frontier(frontier)
         return w.path
     raise TypeError(f"cannot write {type(obj).__name__} as multi-part TACZ")
 
@@ -764,6 +782,16 @@ class MultiPartReader(TACZReader):
                      else src)
         self.manifest = mfst.load(src)
         self.index_crc = int(self.manifest["crc32"]) & 0xFFFFFFFF
+        # the manifest's optional frontier mirrors the single-file TACF
+        # section; a malformed body degrades to None, never a raise
+        self.frontier: frt.Frontier | None = None
+        self.frontier_error: str | None = None
+        if "frontier" in self.manifest:
+            try:
+                self.frontier = frt.Frontier.from_dict(
+                    self.manifest["frontier"])
+            except (ValueError, KeyError, TypeError) as exc:
+                self.frontier_error = str(exc)
         self._part_names = mfst.referenced_parts(self.manifest)
         if not self._part_names:
             raise ValueError("multi-part manifest references no parts")

@@ -26,6 +26,7 @@ from repro.obs import metrics as obsm
 from repro.core.gsp import gsp_unpad
 
 from . import format as fmt
+from . import frontier as frt
 
 __all__ = ["ROILevel", "TACZReader", "WHOLE_LEVEL", "open_snapshot",
            "probe_index_crc", "read", "read_roi"]
@@ -121,6 +122,19 @@ class TACZReader:
             self.index_crc = idx_crc & 0xFFFFFFFF
             self.levels: list[fmt.LevelEntry] = fmt.parse_index(
                 index, version=self.version)
+            # optional TACF frontier section between index and footer:
+            # absent (zero gap) or corrupt → frontier=None, never raise
+            # (a pre-frontier file must keep opening, and a damaged
+            # section must degrade to default-variant serving)
+            self.frontier: frt.Frontier | None = None
+            self.frontier_error: str | None = None
+            gap = (self._size - fmt.FOOTER_SIZE) - (idx_off + idx_len)
+            if gap > 0:
+                try:
+                    self.frontier = frt.parse_section(
+                        self._read_at(idx_off + idx_len, gap))
+                except ValueError as exc:
+                    self.frontier_error = str(exc)
         except BaseException:
             # validation raises for exactly the files callers probe with
             # (truncated/corrupt/non-TACZ) — don't leak the fd until GC

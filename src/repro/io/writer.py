@@ -40,6 +40,7 @@ from repro.core.hybrid import (AMRCompressionResult, LevelResult,
 from repro.core.sz import SZResult
 
 from . import format as fmt
+from . import frontier as frt
 
 __all__ = ["TACZWriter", "pack_level", "write"]
 
@@ -367,6 +368,7 @@ class TACZWriter:
         self._f.write(fmt.pack_header())
         self._off = fmt.HEADER_SIZE
         self._entries: list[fmt.LevelEntry] = []
+        self._frontier: frt.Frontier | None = None
         #: index CRC of the published file (set by :meth:`close` — the
         #: same value ``probe_index_crc`` reads back from the footer)
         self.index_crc: int | None = None
@@ -430,6 +432,15 @@ class TACZWriter:
                 "keep_artifacts=True")
         self._put(("level", lr))
 
+    def set_frontier(self, frontier: frt.Frontier | None) -> None:
+        """Attach a rate–distortion frontier (``repro.io.frontier``) to
+        this snapshot.  ``close()`` then writes it as the optional
+        ``TACF`` section between the index and the footer — the footer
+        keeps framing only the index, so readers that predate the
+        section skip it untouched."""
+        self._check_live()
+        self._frontier = frontier
+
     def close(self, *, publish: bool = True) -> str:
         """Drain the queue, write index + footer, publish atomically.
 
@@ -459,6 +470,11 @@ class TACZWriter:
                 index = fmt.pack_index(self._entries)
                 self._f.write(index)
                 self.index_crc = fmt.index_crc(index)
+                if self._frontier is not None:
+                    # optional TACF section between index and footer —
+                    # the footer frames only the index, so pre-frontier
+                    # readers skip these bytes without noticing
+                    self._f.write(frt.pack_section(self._frontier))
                 self._f.write(fmt.pack_footer(self._off, len(index),
                                               self.index_crc))
                 self._f.flush()
@@ -566,18 +582,21 @@ class TACZWriter:
 
 
 def write(path: str, obj, *, eb: float | list[float] | None = None,
-          **kwargs) -> str:
+          frontier: frt.Frontier | None = None, **kwargs) -> str:
     """Write ``obj`` to a TACZ container at ``path``.
 
     ``obj`` may be an ``AMRCompressionResult`` (already compressed with
     ``keep_artifacts=True`` — the default) or an ``AMRDataset`` (compressed
     here, level by level, through the streaming writer; ``eb`` is required
-    and may be per-level).  Returns ``path``.
+    and may be per-level).  ``frontier`` attaches an optional rate–
+    distortion frontier (``TACF`` section).  Returns ``path``.
     """
     if isinstance(obj, AMRCompressionResult):
         with TACZWriter(path, **kwargs) as w:
             for lr in obj.levels:
                 w.add_compressed(lr)
+            if frontier is not None:
+                w.set_frontier(frontier)
         return path
     if isinstance(obj, AMRDataset):
         if eb is None:
@@ -588,5 +607,7 @@ def write(path: str, obj, *, eb: float | list[float] | None = None,
         with TACZWriter(path, **kwargs) as w:
             for lvl, e in zip(obj.levels, ebs):
                 w.add_level(lvl.data, lvl.mask, eb=float(e), ratio=lvl.ratio)
+            if frontier is not None:
+                w.set_frontier(frontier)
         return path
     raise TypeError(f"cannot write {type(obj).__name__} as TACZ")

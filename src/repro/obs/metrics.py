@@ -37,6 +37,7 @@ __all__ = [
     "ROUTER_ENDPOINT_FAILURES", "ROUTER_LOCAL_FALLBACKS",
     "ROUTER_RETRIES", "ROUTER_DEMOTIONS", "ROUTER_BATCH_SECONDS",
     "HTTP_REQUESTS", "HTTP_REQUEST_SECONDS",
+    "VARIANT_REQUESTS", "VARIANT_FALLBACKS", "VARIANT_UNSATISFIED",
     "SLO_FIRING", "SLO_STATE", "SLO_VALUE",
 ]
 
@@ -225,6 +226,27 @@ HTTP_REQUEST_SECONDS = REGISTRY.histogram(
     "tacz_http_request_seconds",
     "HTTP request handling wall time, by route.",
     labels=("route",))
+
+# ------------------------------- variants ---------------------------------
+# Distortion-aware serving (repro.serving.variants / docs/tuning.md):
+# which eb variants actually serve traffic, and how often the frontier
+# machinery degrades (fallback) or refuses (unsatisfiable target).
+
+VARIANT_REQUESTS = REGISTRY.counter(
+    "tacz_variant_requests_total",
+    "Region batches served per selected eb variant (label is the "
+    "variant name; 'default' for single-snapshot servers).",
+    labels=("variant",))
+
+VARIANT_FALLBACKS = REGISTRY.counter(
+    "tacz_variant_fallbacks_total",
+    "Distortion-target requests served by the default variant because "
+    "the frontier section was missing or corrupt.")
+
+VARIANT_UNSATISFIED = REGISTRY.counter(
+    "tacz_variant_unsatisfied_total",
+    "Distortion-target requests rejected because no variant satisfies "
+    "the target (HTTP 400).")
 
 # --------------------------------- slo ------------------------------------
 # The SLO engine (repro.obs.slo) exports its alert state back into the

@@ -25,6 +25,11 @@ Two independent subsystems live here:
     :class:`~repro.serving.loadgen.ZipfWorkload` — open-loop Zipf
     mixed-ROI traffic generation with exact client-side p50/p99,
     saturation detection, and sampled bit-identity verification.
+  * :class:`~repro.serving.variants.VariantServer` — distortion-aware
+    serving of multi-variant snapshot sets (``variants.json`` catalogs
+    the autotuner publishes): a ``target``/``variant`` request field
+    selects the cheapest eb variant satisfying an application-metric
+    target.  See ``docs/tuning.md``.
 
 See ``docs/serving.md`` for the architecture guide and ``docs/
 tacz_format.md`` for the container byte layout.
@@ -39,8 +44,9 @@ from .http_api import RegionHTTPServer, serve
 from .loadgen import LoadGenerator, LoadReport, ZipfWorkload, client_fetch
 from .regions import DecodePlanner, RegionServer, SubBlockCache
 from .sharded import ShardedRegionRouter, ShardMap
+from .variants import VariantServer
 
 __all__ = ["DecodePlanner", "LoadGenerator", "LoadReport", "RegionClient",
            "RegionHTTPServer", "RegionServer", "ShardMap",
-           "ShardedRegionRouter", "SubBlockCache", "ZipfWorkload",
-           "client_fetch", "serve"]
+           "ShardedRegionRouter", "SubBlockCache", "VariantServer",
+           "ZipfWorkload", "client_fetch", "serve"]

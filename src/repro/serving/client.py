@@ -158,17 +158,26 @@ class RegionClient:
         with self._get("/v1/stats") as resp:
             return json.loads(resp.read())
 
-    def region(self, level: int, box) -> ROILevel:
+    def region(self, level: int, box, *, target=None,
+               variant=None) -> ROILevel:
         """One level's crop of ``box`` (finest-grid cells).
 
         :param level: level index on the serving snapshot.
         :param box: three half-open ``(lo, hi)`` ranges in finest cells.
+        :param target: optional distortion target (``"psnr>=60"``) — the
+            endpoint serves the cheapest satisfying eb variant.
+        :param variant: optional explicit variant name.
         :returns: the crop, reassembled from the raw ``<f4`` body and the
             ``X-TACZ-*`` headers.
-        :raises urllib.error.HTTPError: on a 4xx/5xx response.
+        :raises urllib.error.HTTPError: on a 4xx/5xx response (including
+            a 400 for an unsatisfiable target).
         :raises urllib.error.URLError: if the endpoint is unreachable.
         """
         path = f"/v1/region?level={int(level)}&box={format_box(box)}"
+        if target is not None:
+            path += "&target=" + urllib.parse.quote(str(target))
+        if variant is not None:
+            path += "&variant=" + urllib.parse.quote(str(variant))
         with self._get(path) as resp:
             raw = resp.read()
             shape = tuple(int(s) for s in
@@ -180,19 +189,24 @@ class RegionClient:
                             ratio=int(resp.headers["X-TACZ-Ratio"]),
                             box=lbox, data=data)
 
-    def regions(self, boxes, levels=None) -> list[list[ROILevel]]:
+    def regions(self, boxes, levels=None, *, target=None,
+                variant=None) -> list[list[ROILevel]]:
         """Batched fetch — one list of per-level crops per box.
 
         :param boxes: half-open boxes in finest-grid cells.
         :param levels: optional level-index filter applied to every box.
+        :param target: optional distortion target (``"psnr>=60"``).
+        :param variant: optional explicit variant name.
         :returns: ``out[b][l]`` = crop of ``boxes[b]`` at the l-th
             requested level.
         :raises urllib.error.HTTPError: on a 4xx/5xx response.
         :raises urllib.error.URLError: if the endpoint is unreachable.
         """
-        return self.regions_meta(boxes, levels)[1]
+        return self.regions_meta(boxes, levels, target=target,
+                                 variant=variant)[1]
 
     def regions_meta(self, boxes, levels=None, *, request_id=None,
+                     target=None, variant=None,
                      ) -> tuple[int, list[list[ROILevel]]]:
         """Batched fetch that also returns the serving snapshot identity.
 
@@ -207,21 +221,29 @@ class RegionClient:
         :raises urllib.error.URLError: if the endpoint is unreachable.
         """
         header, out = self.regions_ex(boxes, levels,
-                                      request_id=request_id)
+                                      request_id=request_id,
+                                      target=target, variant=variant)
         return int(header["snapshot_crc"]), out
 
     def regions_ex(self, boxes, levels=None, *, request_id=None,
+                   target=None, variant=None,
                    ) -> tuple[dict, list[list[ROILevel]]]:
         """Batched fetch returning the full response header.
 
         The header carries ``snapshot_crc``, the server's ``request_id``
         (equal to ``request_id`` when one was sent — the fleet-tracing
-        contract), and ``trace`` — the server's span-tree summary for
-        this batch (stage timings in milliseconds).
+        contract), ``variant`` — the eb variant that served the batch
+        (null unless the endpoint is distortion-aware and a ``target``/
+        ``variant`` was sent) — and ``trace`` — the server's span-tree
+        summary for this batch (stage timings in milliseconds).
 
         :param request_id: optional caller-minted ID propagated via the
             ``X-Repro-Request-Id`` header (the sharded router stamps one
             per batch so every shard logs the same ID).
+        :param target: optional distortion target (``"psnr>=60"``) — an
+            unsatisfiable one is a :class:`RegionAPIError` with code 400
+            whose body names the best achievable value.
+        :param variant: optional explicit variant name.
         :returns: ``(response_header_dict, results)``.
         :raises RegionAPIError: on a 4xx/5xx response.
         :raises urllib.error.URLError: if the endpoint is unreachable.
@@ -229,6 +251,10 @@ class RegionClient:
         req = {"boxes": [[list(r) for r in box] for box in boxes]}
         if levels is not None:
             req["levels"] = [int(li) for li in levels]
+        if target is not None:
+            req["target"] = str(target)
+        if variant is not None:
+            req["variant"] = str(variant)
         body = json.dumps(req).encode()
         extra = ({obs.REQUEST_ID_HEADER: str(request_id)}
                  if request_id else None)

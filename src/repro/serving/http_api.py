@@ -14,18 +14,25 @@ Routes::
                                   200 ok/degraded, 503 down (with body)
     GET  /v1/region?level=L&box=x0:x1,y0:y1,z0:z1
                                   one level's crop; body = C-order <f4 bytes,
-                                  shape/box/ratio travel in X-TACZ-* headers
+                                  shape/box/ratio travel in X-TACZ-* headers;
+                                  optional &target=psnr>=60 / &variant=NAME
+                                  (distortion-aware serving — the selected
+                                  variant returns in X-TACZ-Variant)
     POST /v1/regions              batched: JSON {"boxes": [...], "levels":
-                                  [...]?} in; u32 header length + JSON header
+                                  [...]?, "target": "psnr>=60"?, "variant":
+                                  NAME?} in; u32 header length + JSON header
                                   + concatenated <f4 payloads out
 
 The batched response header is ``{"snapshot_crc", "request_id", "trace",
-"results"}`` where ``results[b][l]`` holds ``{level, ratio, box, shape,
-offset, nbytes}`` and ``offset`` indexes into the payload section that
-follows the header; ``trace`` is the request's span-tree summary and
-``request_id`` echoes the caller's ``X-Repro-Request-Id`` header (minted
-here when absent) — the ID the sharded router stamps on a batch so one
-slow request is greppable across every shard's access log.
+"variant", "results"}`` where ``results[b][l]`` holds ``{level, ratio,
+box, shape, offset, nbytes}`` and ``offset`` indexes into the payload
+section that follows the header; ``variant`` is the eb variant that
+served (null without a target); ``trace`` is the request's span-tree
+summary and ``request_id`` echoes the caller's ``X-Repro-Request-Id``
+header (minted here when absent) — the ID the sharded router stamps on a
+batch so one slow request is greppable across every shard's access log.
+A ``target`` no variant satisfies is a clean 400 whose JSON body names
+the target and the best achievable value (never a 500).
 Every request first runs the server's footer-CRC hot-swap check (when the
 server was built with ``auto_reload=True``), so an atomically republished
 snapshot is picked up without restarting the endpoint.
@@ -49,6 +56,8 @@ import numpy as np
 
 from repro import obs
 from repro.io import format as fmt
+from repro.io import variants as vrt
+from repro.io.frontier import TargetUnsatisfiable
 from repro.obs import metrics as obsm
 
 from .regions import RegionServer
@@ -128,6 +137,14 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
     def _fail(self, status: int, msg: str) -> None:
         self._send_json({"error": msg}, status=status)
 
+    def _unsatisfiable(self, exc: TargetUnsatisfiable) -> None:
+        """A distortion target no variant meets: a clean 400 whose body
+        names the target and the best achievable value — an operator
+        mistake, not a server failure (never a 500)."""
+        self._send_json({"error": str(exc),
+                         "target": str(exc.target),
+                         "best": exc.best}, status=400)
+
     def _meta(self) -> dict:
         rd = self.rs.reader
         levels = []
@@ -151,7 +168,29 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             if sid is not None:
                 shard["shard_id"] = sid
             meta["shard"] = shard
+        vm = getattr(self.rs, "variants_meta", None)
+        if vm is not None:   # a VariantServer advertises its catalog
+            meta["variants"] = vm()
         return meta
+
+    def _serve_batch(self, boxes, levels, target, variant):
+        """Serve one batch, distortion-aware when the request asks.
+
+        :returns: ``(snapshot_crc, variant_name_or_None, results)``.
+        :raises TargetUnsatisfiable: no variant meets ``target`` (the
+            caller maps it to a 400 with an explanatory body).
+        :raises ValueError: malformed target / unknown variant / an
+            endpoint with no distortion-target support.
+        """
+        if target is None and variant is None:
+            crc, results = self.rs.get_regions_with_crc(boxes,
+                                                        levels=levels)
+            return crc, None, results
+        ex = getattr(self.rs, "get_regions_ex", None)
+        if ex is None:
+            raise ValueError(
+                "endpoint does not support distortion targets")
+        return ex(boxes, levels=levels, target=target, variant=variant)
 
     # ------------------------------- routes --------------------------------
 
@@ -242,10 +281,14 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                 raise ValueError(f"level {level} out of range")
         except (KeyError, IndexError, ValueError) as exc:
             return self._fail(400, f"bad region query: {exc}")
+        target = (q.get("target") or [None])[0]
+        variant = (q.get("variant") or [None])[0]
         try:
-            crc, results = self.rs.get_regions_with_crc([box],
-                                                        levels=[level])
+            crc, vname, results = self._serve_batch([box], [level],
+                                                    target, variant)
             roi = results[0][0]
+        except TargetUnsatisfiable as exc:
+            return self._unsatisfiable(exc)
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad region query: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
@@ -261,6 +304,8 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                          ",".join(str(s) for s in roi.shape))
         self.send_header("X-TACZ-Dtype", "<f4")
         self.send_header("X-TACZ-Snapshot-CRC", str(crc))
+        if vname is not None:
+            self.send_header("X-TACZ-Variant", str(vname))
         self.end_headers()
         self.wfile.write(body)
 
@@ -281,6 +326,10 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                 for li in levels:
                     if not 0 <= li < self.rs.n_levels:
                         raise ValueError(f"level {li} out of range")
+            target = req.get("target")
+            target = None if target is None else str(target)
+            variant = req.get("variant")
+            variant = None if variant is None else str(variant)
         except (KeyError, TypeError, ValueError,
                 json.JSONDecodeError) as exc:
             return self._fail(400, f"bad regions request: {exc}")
@@ -291,8 +340,10 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             # The root span makes every trace() below it (plan, fetch,
             # decode) collect into one tree this response carries back.
             with obs.root_span("regions") as span:
-                crc, results = self.rs.get_regions_with_crc(boxes,
-                                                            levels=levels)
+                crc, vname, results = self._serve_batch(boxes, levels,
+                                                        target, variant)
+        except TargetUnsatisfiable as exc:
+            return self._unsatisfiable(exc)
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad regions request: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
@@ -300,6 +351,7 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         payload = bytearray()
         header: dict = {"snapshot_crc": crc,
                         "request_id": self._request_id,
+                        "variant": vname,
                         "trace": span.summary(), "results": []}
         for per_box in results:
             rows = []
@@ -343,7 +395,10 @@ def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
     a sharded router.
 
     :param src: a ``.tacz`` path (a :class:`RegionServer` is built for
-        it), an already-configured :class:`RegionServer`, or a
+        it), a variant-set directory (a
+        :class:`repro.serving.variants.VariantServer` is built — the
+        endpoint then honors ``target``/``variant`` request fields), an
+        already-configured :class:`RegionServer`, or a
         :class:`repro.serving.sharded.ShardedRegionRouter` — a mounted
         router serves the same routes (``/v1/meta|stats|metrics|health|
         region|regions``), so a fleet's front door speaks the identical
@@ -371,8 +426,14 @@ def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
     """
     if not isinstance(src, RegionServer) and \
             not hasattr(src, "get_regions_with_crc"):
-        src = RegionServer(src, cache_bytes=cache_bytes,
-                           auto_reload=auto_reload, shard_map=shard_map,
-                           shard_id=shard_id)
+        if vrt.is_variant_set(src):
+            from .variants import VariantServer
+            src = VariantServer(src, cache_bytes=cache_bytes,
+                                auto_reload=auto_reload,
+                                shard_map=shard_map, shard_id=shard_id)
+        else:
+            src = RegionServer(src, cache_bytes=cache_bytes,
+                               auto_reload=auto_reload,
+                               shard_map=shard_map, shard_id=shard_id)
     return RegionHTTPServer((host, port), src, verbose=verbose,
                             log_json=log_json)

@@ -39,12 +39,48 @@ import numpy as np
 from repro import obs
 from repro.core import sz
 from repro.io import format as fmt
+from repro.io import frontier as frt
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
                              open_snapshot, probe_index_crc)
 from repro.obs import metrics as obsm
 
 __all__ = ["CacheKey", "SubBlockCache", "DecodePlanner", "PlannedLevel",
-           "RegionServer", "WHOLE_LEVEL"]
+           "RegionServer", "WHOLE_LEVEL", "resolve_single_target"]
+
+
+def resolve_single_target(reader, target) -> str:
+    """Validate a distortion target against a *single* snapshot — the
+    serving rule for servers/routers that hold one eb variant only.
+
+    The snapshot's recorded frontier (``reader.frontier``) names the
+    metrics of the point it was written at; the request is admitted when
+    that default point satisfies the target.  A snapshot with no frontier
+    — pre-frontier files, or a corrupt ``TACF`` section the reader
+    degraded on — cannot prove anything either way, so the request is
+    served as-is and counted in ``tacz_variant_fallbacks_total`` (the
+    operator's signal that targets are being ignored, not enforced).
+
+    :param reader: an open snapshot reader (``frontier`` attribute
+        optional).
+    :param target: a :class:`repro.io.frontier.Target` or its string
+        form, e.g. ``"psnr>=60"``.
+    :returns: the serving variant name — always ``"default"`` here.
+    :raises ValueError: on a malformed target spec.
+    :raises repro.io.frontier.TargetUnsatisfiable: when the frontier is
+        present and the snapshot's own point misses the target (counted
+        in ``tacz_variant_unsatisfied_total``).
+    """
+    if isinstance(target, str):
+        target = frt.parse_target(target)
+    fr = getattr(reader, "frontier", None)
+    point = fr.default_point if fr is not None else None
+    if point is None:
+        obsm.VARIANT_FALLBACKS.inc()
+    elif not target.satisfies(point.metrics):
+        obsm.VARIANT_UNSATISFIED.inc()
+        raise frt.TargetUnsatisfiable(target, fr.best_value(target.metric))
+    obsm.VARIANT_REQUESTS.labels("default").inc()
+    return "default"
 
 # planner key: (level index, sub-block index); WHOLE_LEVEL (re-exported
 # from repro.io.reader) marks the full reconstruction of a gsp/global
@@ -585,6 +621,40 @@ class RegionServer:
                     retired = self._retired.pop(id(rd), None)
                     if retired is not None:   # last request drained
                         retired.close()
+
+    def get_regions_ex(self, boxes: list[Box],
+                       levels: list[int] | None = None, *,
+                       target=None, variant: str | None = None,
+                       ) -> tuple[int, str | None, list[list[ROILevel]]]:
+        """:meth:`get_regions_with_crc` plus distortion-target admission.
+
+        A single-snapshot server holds exactly one eb variant, so the
+        only question a ``target`` can ask is whether *this* snapshot's
+        recorded frontier point satisfies it (see
+        :func:`resolve_single_target`); :class:`repro.serving.variants.
+        VariantServer` overrides the surface with real multi-variant
+        selection.  This is the method the HTTP layer binds ``target``/
+        ``variant`` request fields to.
+
+        :param target: optional distortion target (string or
+            :class:`repro.io.frontier.Target`), e.g. ``"psnr>=60"``.
+        :param variant: optional explicit variant name — rejected here
+            (a single snapshot has no named variants).
+        :returns: ``(snapshot_crc, variant_name, results)`` —
+            ``variant_name`` is None when no target/variant was given.
+        :raises ValueError: on a malformed target or a ``variant`` name.
+        :raises repro.io.frontier.TargetUnsatisfiable: when the target
+            cannot be met (the HTTP layer maps this to a 400).
+        """
+        name = None
+        if variant is not None:
+            raise ValueError(
+                f"unknown variant {variant!r}: this endpoint serves a "
+                f"single snapshot, not a variant set")
+        if target is not None:
+            name = resolve_single_target(self._reader, target)
+        crc, out = self.get_regions_with_crc(boxes, levels)
+        return crc, name, out
 
     def get_region(self, level: int, box: Box) -> ROILevel:
         """One level's crop of ``box`` (finest-grid cells).

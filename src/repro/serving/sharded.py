@@ -39,6 +39,7 @@ fallback) instead of silently mixing generations.
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor, wait
@@ -47,12 +48,13 @@ import numpy as np
 
 from repro import obs
 from repro.io import placement
+from repro.io import variants as vrt
 from repro.obs import metrics as obsm
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
                              open_snapshot, probe_index_crc)
 
 from .client import RegionClient
-from .regions import CacheKey, DecodePlanner
+from .regions import CacheKey, DecodePlanner, resolve_single_target
 
 __all__ = ["ShardMap", "ShardedRegionRouter"]
 
@@ -225,10 +227,12 @@ class ShardedRegionRouter:
     from the local file (``TACZReader.read_level_box``) — unless
     ``local_fallback=False``, in which case the batch raises.
 
-    :param path: local path of the snapshot — a ``.tacz`` file or a
-        multi-part snapshot directory — used for planning and for the
-        fallback decode; on a multi-host deployment this is the
-        replicated copy of the same published snapshot.
+    :param path: local path of the snapshot — a ``.tacz`` file, a
+        multi-part snapshot directory, or a multi-variant set directory
+        (``variants.json`` catalog; distortion-target batches then route
+        per selected variant) — used for planning and for the fallback
+        decode; on a multi-host deployment this is the replicated copy
+        of the same published snapshot.
     :param shard_map: the :class:`ShardMap` the shard servers were
         configured with (same serialized config — ownership must agree).
     :param endpoints: ``{shard_id: url}`` or ``{shard_id: [url, ...]}``
@@ -271,7 +275,28 @@ class ShardedRegionRouter:
         self._pool = ThreadPoolExecutor(max_workers=max(1, int(max_workers)),
                                         thread_name_prefix="shard-router")
         self._lock = threading.Lock()
-        self._reader = open_snapshot(self.path)
+        # a variant-set directory routes per selected eb variant: the
+        # default variant is the always-open planning snapshot, the rest
+        # open lazily on first distortion-target/variant request.  The
+        # sub-block partition depends only on index geometry (levels ×
+        # sub-block indices), which eb does not change, so one shard map
+        # covers every variant.
+        self._catalog = None
+        self._default_variant: str | None = None
+        self._variant_paths: dict[str, str] = {}
+        self._var_readers: dict[str, tuple[TACZReader, DecodePlanner]] = {}
+        self._probe_path = self.path
+        if vrt.is_variant_set(self.path):
+            self._catalog = vrt.load_catalog(self.path)
+            set_dir = self.path
+            if os.path.basename(set_dir) == vrt.VARIANTS_NAME:
+                set_dir = os.path.dirname(set_dir)
+            self._default_variant = str(self._catalog["default"])
+            self._variant_paths = {
+                str(v["name"]): os.path.join(set_dir, v["file"])
+                for v in self._catalog["variants"]}
+            self._probe_path = self._variant_paths[self._default_variant]
+        self._reader = open_snapshot(self._probe_path)
         self._planner = DecodePlanner(self._reader)
         # readers displaced by a reload, with per-reader in-flight counts
         # (same drain discipline as RegionServer: each retired reader
@@ -290,6 +315,9 @@ class ShardedRegionRouter:
         self._pool.shutdown(wait=True)
         with self._lock:
             self._reader.close()
+            for rd, _ in self._var_readers.values():
+                rd.close()
+            self._var_readers.clear()
             for rd in self._retired.values():
                 rd.close()
             self._retired.clear()
@@ -328,14 +356,14 @@ class ShardedRegionRouter:
 
         :returns: True when a new snapshot was adopted.
         """
-        crc = probe_index_crc(self.path)
+        crc = probe_index_crc(self._probe_path)
         if crc is None or crc == self.snapshot_crc:
             return False
         with self._lock:
             if crc == self.snapshot_crc:
                 return False
             try:
-                reader = open_snapshot(self.path)
+                reader = open_snapshot(self._probe_path)
             except (OSError, ValueError):
                 return False
             old = self._reader
@@ -406,6 +434,7 @@ class ShardedRegionRouter:
 
     def _fetch_group(self, rd: TACZReader, shard: str, li: int,
                      parts: list[_Part], request_id: str = "",
+                     variant: str | None = None,
                      ) -> tuple[list[np.ndarray], dict]:
         """Crops for one (shard, level) group, in ``parts`` order, plus a
         fan-out summary for the batch's response metadata.
@@ -447,7 +476,8 @@ class ShardedRegionRouter:
                 if attempt:
                     self._count("retries")
                 header, results = self._client(url).regions_ex(
-                    boxes_f, levels=[li], request_id=request_id or None)
+                    boxes_f, levels=[li], request_id=request_id or None,
+                    variant=variant)
                 crc = int(header["snapshot_crc"])
                 if (crc & 0xFFFFFFFF) != want_crc:
                     raise ValueError(
@@ -496,8 +526,85 @@ class ShardedRegionRouter:
         """
         return self.get_regions_meta(boxes, levels)[0]
 
+    def _resolve_variant(self, target, variant) -> str | None:
+        """The variant name a batch's ``target``/``variant`` binds to.
+
+        Over a single snapshot the target is validated against the local
+        reader's recorded frontier (:func:`~repro.serving.regions.
+        resolve_single_target`); over a variant set the catalog picks
+        the cheapest satisfying variant — *locally*, so every shard of
+        the batch is pinned to the same choice.
+
+        :raises ValueError: unknown variant name / malformed target.
+        :raises repro.io.frontier.TargetUnsatisfiable: no variant
+            satisfies the target.
+        """
+        if self._catalog is None:
+            if variant is not None:
+                raise ValueError(
+                    f"unknown variant {variant!r}: this router serves a "
+                    f"single snapshot, not a variant set")
+            if target is None:
+                return None
+            return resolve_single_target(self._reader, target)
+        if variant is None and target is None:
+            return None
+        if variant is not None:
+            name = str(variant)
+            if name not in self._variant_paths:
+                raise ValueError(
+                    f"unknown variant {variant!r} (catalog has: "
+                    f"{', '.join(sorted(self._variant_paths))})")
+        else:
+            try:
+                name = str(vrt.select_variant(self._catalog,
+                                              target)["name"])
+            except vrt.TargetUnsatisfiable:
+                obsm.VARIANT_UNSATISFIED.inc()
+                raise
+        obsm.VARIANT_REQUESTS.labels(name).inc()
+        return name
+
+    def _rd_planner_locked(self, name: str | None,
+                           ) -> tuple[TACZReader, DecodePlanner]:
+        """Reader+planner for one resolved variant (caller holds the
+        lock).  The default variant *is* the hot-swappable planning
+        snapshot; other variants open lazily and live until close."""
+        if (name is None or self._catalog is None
+                or name == self._default_variant):
+            return self._reader, self._planner
+        pair = self._var_readers.get(name)
+        if pair is None:
+            rd = open_snapshot(self._variant_paths[name])
+            pair = (rd, DecodePlanner(rd))
+            self._var_readers[name] = pair
+        return pair
+
+    def get_regions_ex(self, boxes: list[Box],
+                       levels: list[int] | None = None, *,
+                       target=None, variant: str | None = None,
+                       ) -> tuple[int, str | None, list[list[ROILevel]]]:
+        """Distortion-aware batch — the router-side mirror of
+        :meth:`RegionServer.get_regions_ex` /
+        :meth:`repro.serving.variants.VariantServer.get_regions_ex`.
+
+        The variant is resolved *locally* from the router's catalog, the
+        name is stamped into every shard request of the batch, and each
+        shard's response must carry that variant's snapshot CRC — so a
+        batch can never mix crops from different variants.
+
+        :returns: ``(snapshot_crc, variant_name, results)``.
+        :raises ValueError: unknown variant name / malformed target.
+        :raises repro.io.frontier.TargetUnsatisfiable: no variant
+            satisfies the target (HTTP layer maps it to a 400).
+        """
+        out, meta = self.get_regions_meta(boxes, levels, target=target,
+                                          variant=variant)
+        return int(meta["snapshot_crc"]), meta.get("variant"), out
+
     def get_regions_meta(self, boxes: list[Box],
-                         levels: list[int] | None = None,
+                         levels: list[int] | None = None, *,
+                         target=None, variant: str | None = None,
                          ) -> tuple[list[list[ROILevel]], dict]:
         """:meth:`get_regions` plus the batch's fan-out metadata.
 
@@ -508,17 +615,25 @@ class ShardedRegionRouter:
         milliseconds, and the shard's own span summary when it returned
         one.
 
+        :param target: optional distortion target (``"psnr>=60"``); see
+            :meth:`get_regions_ex`.
+        :param variant: optional explicit variant name.
         :returns: ``(out, meta)`` where ``meta`` has ``request_id``,
             ``snapshot_crc`` (the generation that served the batch),
-            ``ms`` (whole-batch wall time), and ``shards`` — one summary
-            dict per fan-out group, slowest first.
+            ``variant`` (the resolved variant name, or None), ``ms``
+            (whole-batch wall time), and ``shards`` — one summary dict
+            per fan-out group, slowest first.
         """
         rid = obs.new_request_id()
         t_batch = time.perf_counter()
+        name = self._resolve_variant(target, variant)
+        # only variant-set deployments understand the wire field; a
+        # single-snapshot target was fully validated locally above
+        wire_variant = name if self._catalog is not None else None
         if self.auto_reload:
             self.maybe_reload()
         with self._lock:
-            rd, planner = self._reader, self._planner
+            rd, planner = self._rd_planner_locked(name)
             self._inflight[id(rd)] = self._inflight.get(id(rd), 0) + 1
         try:
             lis = list(range(rd.n_levels)) if levels is None else \
@@ -544,7 +659,8 @@ class ShardedRegionRouter:
                             _Part(pi, isect))
 
             futures = {gk: self._pool.submit(self._fetch_group, rd,
-                                             gk[0], gk[1], parts, rid)
+                                             gk[0], gk[1], parts, rid,
+                                             wire_variant)
                        for gk, parts in groups.items()}
             # settle every group before consuming any result: a raising
             # group must not leave siblings still decoding from a reader
@@ -585,6 +701,7 @@ class ShardedRegionRouter:
             obsm.ROUTER_BATCH_SECONDS.labels().observe(dt)
             meta = {"request_id": rid,
                     "snapshot_crc": rd.index_crc,
+                    "variant": name,
                     "ms": round(dt * 1000.0, 3),
                     "shards": shard_infos}
             return out, meta
@@ -645,6 +762,12 @@ class ShardedRegionRouter:
         s["snapshot_crc"] = self.snapshot_crc
         s["shard_map"] = self.shard_map.to_dict()
         s["load_balance"] = self.load_balance
+        if self._catalog is not None:
+            with self._lock:
+                opened = sorted(self._var_readers)
+            s["variants"] = {"default": self._default_variant,
+                             "names": sorted(self._variant_paths),
+                             "opened": opened}
         hist = obsm.ROUTER_BATCH_SECONDS.labels()
         lat = {"count": hist.count}
         for q, key in ((0.5, "p50_ms"), (0.9, "p90_ms"), (0.99, "p99_ms")):
@@ -679,7 +802,7 @@ class ShardedRegionRouter:
         checks: dict = {}
         status = "ok"
         try:
-            probe = probe_index_crc(self.path)
+            probe = probe_index_crc(self._probe_path)
         except Exception:
             probe = None
         if probe is None:

@@ -1,0 +1,102 @@
+"""Regenerate the golden conformance fixtures.
+
+Run from the repo root::
+
+    PYTHONPATH=src python tests/golden/make_golden.py
+
+The fixtures freeze the container formats on disk so a future encoder
+or entropy-coder change that silently alters decoded bytes (or breaks
+old files) fails ``tests/test_golden.py`` instead of shipping:
+
+  * ``v1.tacz``            — version-1 container (pre-payload-codec era)
+  * ``v2_zlib.tacz``       — version-2, zlib payload pass, TACF frontier
+  * ``multipart.taczd/``   — two-part snapshot with a manifest frontier
+  * ``truncated_tacf.tacz``— v2 file whose TACF body length field lies
+    (the corrupt-frontier fault fixture: must open, decode bit-identical
+    to ``v2_zlib.tacz``, and report ``frontier_error``)
+  * ``expected.npz``       — the decoded per-level arrays all of the
+    above must reproduce bit for bit
+
+Everything is derived from one seeded synthetic dataset; regenerating
+on the same numpy stack is byte-stable.  Do NOT regenerate casually —
+the whole point is that these bytes never change.
+"""
+import os
+import sys
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(HERE, "..", "..", "src"))
+
+from repro import io as tacz                              # noqa: E402
+from repro.core import amr, hybrid                        # noqa: E402
+from repro.io import frontier as frt                      # noqa: E402
+from repro.io import writer as tacz_writer                # noqa: E402
+
+SEED = 1234
+EB = 1e-3
+
+
+def dataset():
+    return amr.synthetic_amr((16, 16, 16), densities=[0.4, 0.6],
+                             refine_block=4, seed=SEED)
+
+
+def frontier(res):
+    """A small frozen frontier whose default point is the written eb."""
+    dp = frt.FrontierPoint(
+        ebs=tuple(lr.eb for lr in res.levels), bits=res.total_bits,
+        metrics={"psnr": 72.0, "max_abs_error": EB})
+    loose = frt.FrontierPoint(
+        ebs=tuple(4 * lr.eb for lr in res.levels),
+        bits=max(1, res.total_bits // 2),
+        metrics={"psnr": 58.0, "max_abs_error": 4 * EB})
+    return frt.Frontier(metric="psnr", points=[loose, dp], default=1)
+
+
+def main():
+    ds = dataset()
+    res = hybrid.compress_amr(ds, eb=EB)
+    fr = frontier(res)
+
+    # v1: no payload-codec pass existed yet
+    packed = [tacz_writer.pack_level(lr, payload_codec="none")
+              for lr in res.levels]
+    with open(os.path.join(HERE, "v1.tacz"), "wb") as f:
+        f.write(tacz_writer.build_container(packed, version=1))
+
+    v2 = os.path.join(HERE, "v2_zlib.tacz")
+    tacz.write(v2, res, payload_codec="zlib", frontier=fr)
+
+    tacz.write_multipart(os.path.join(HERE, "multipart.taczd"), res,
+                         parts=2, payload_codec="zlib", frontier=fr)
+
+    # corrupt-TACF fault fixture: copy v2 and overstate the body length
+    trunc = os.path.join(HERE, "truncated_tacf.tacz")
+    with open(v2, "rb") as f:
+        blob = bytearray(f.read())
+    import struct
+    from repro.io import format as fmt
+    idx_off, idx_len, _ = fmt.parse_footer(bytes(blob[-fmt.FOOTER_SIZE:]))
+    sec = idx_off + idx_len
+    assert bytes(blob[sec:sec + 4]) == frt.FRONTIER_MAGIC
+    blob[sec + 8:sec + 12] = struct.pack("<I", 0x7FFFFFFF)
+    with open(trunc, "wb") as f:
+        f.write(bytes(blob))
+
+    recons = tacz.read(v2)
+    np.savez_compressed(
+        os.path.join(HERE, "expected.npz"),
+        **{f"level{li}": r for li, r in enumerate(recons)},
+        **{f"mask{li}": l.mask for li, l in enumerate(ds.levels)},
+        **{f"orig{li}": l.data for li, l in enumerate(ds.levels)})
+    print("golden fixtures written to", HERE)
+    for name in sorted(os.listdir(HERE)):
+        p = os.path.join(HERE, name)
+        if os.path.isfile(p):
+            print(f"  {name:24s} {os.path.getsize(p):7d} B")
+
+
+if __name__ == "__main__":
+    main()

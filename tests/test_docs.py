@@ -35,11 +35,17 @@ def obs_doc() -> str:
     return _read("docs/observability.md")
 
 
+@pytest.fixture(scope="module")
+def tuning_doc() -> str:
+    return _read("docs/tuning.md")
+
+
 def test_readme_links_both_docs():
     readme = _read("README.md")
     assert "docs/tacz_format.md" in readme
     assert "docs/serving.md" in readme
     assert "docs/observability.md" in readme
+    assert "docs/tuning.md" in readme
 
 
 def test_format_doc_enum_tables_match_constants(format_doc):
@@ -125,6 +131,82 @@ def test_format_doc_entropy_framing_note(format_doc):
     assert "repro.core.entropy" in format_doc
     assert "engine-independent" in format_doc
     assert "byte-identical payloads" in format_doc
+
+
+def test_tuning_doc_spec_matches_constants(tuning_doc):
+    """The TACF section spec and the variant-catalog spec in tuning.md
+    must agree with the live constants — a wire change forces a doc
+    change."""
+    from repro.io import frontier as frt
+    from repro.io import variants as vrt
+    assert f'`"{frt.FRONTIER_MAGIC.decode()}"`' in tuning_doc
+    assert f"section version: **{frt.FRONTIER_VERSION}**" in tuning_doc
+    assert f"`{frt._SECTION_HEAD.format}`" in tuning_doc, \
+        "TACF struct string not documented verbatim"
+    assert f"SECTION_HEAD ({frt.SECTION_HEAD_SIZE} B)" in tuning_doc
+    for metric in frt.HIGHER_IS_BETTER:
+        assert f"`{metric}`" in tuning_doc, f"metric {metric} undocumented"
+    for op in (">=", "<=", ">", "<"):
+        assert op in tuning_doc
+    assert f'`"{vrt.VARIANTS_MAGIC}"`' in tuning_doc
+    assert f"currently **{vrt.VARIANTS_VERSION}**" in tuning_doc
+    assert f"`{vrt.VARIANTS_NAME}`" in tuning_doc
+    for fld in ["magic", "version", "default", "variants", "crc32",
+                "name", "file", "target", "ebs", "bits", "metrics"]:
+        assert f"| `{fld}` |" in tuning_doc, \
+            f"catalog field {fld} missing from the tables"
+    # the canonical-JSON CRC rule must be spelled out
+    assert "sorted keys" in tuning_doc
+
+
+def test_tuning_doc_covers_required_topics(tuning_doc):
+    for needle in ["AutoTuner", "write_variant_set", "measure_metrics",
+                   "TuneResult", "coordinate descent", "Pareto",
+                   "Frontier", "FrontierPoint", "TargetUnsatisfiable",
+                   "parse_target", "HIGHER_IS_BETTER", "set_frontier",
+                   "frontier_error", "variants.json", "VariantServer",
+                   "get_regions_ex", "X-TACZ-Variant", "HTTP 400",
+                   "tacz_variant_requests_total",
+                   "tacz_variant_fallbacks_total",
+                   "tacz_variant_unsatisfied_total",
+                   "load_catalog", "select_variant", "is_variant_set",
+                   "bench_autotune", "serving.md", "tacz_format.md",
+                   "observability.md", "psnr>=60"]:
+        assert needle in tuning_doc, f"tuning.md lost coverage: {needle}"
+
+
+def test_tuning_doc_references_live_apis():
+    import inspect
+
+    from repro import io as repro_io
+    from repro import serving, tuning
+
+    for attr in ("AutoTuner", "TuneResult", "measure_metrics",
+                 "write_variant_set"):
+        assert hasattr(tuning, attr)
+    for attr in ("Frontier", "FrontierPoint", "Target",
+                 "TargetUnsatisfiable", "parse_target", "is_variant_set",
+                 "load_catalog", "select_variant"):
+        assert hasattr(repro_io, attr)
+    assert hasattr(serving, "VariantServer")
+    for cls in (serving.RegionServer, serving.VariantServer,
+                serving.ShardedRegionRouter):
+        params = inspect.signature(cls.get_regions_ex).parameters
+        assert "target" in params and "variant" in params, cls
+    for meth in (serving.RegionClient.regions_ex,
+                 serving.RegionClient.region):
+        params = inspect.signature(meth).parameters
+        assert "target" in params and "variant" in params, meth
+    from repro.io.parallel import ParallelTACZWriter
+    from repro.io.writer import TACZWriter
+    assert hasattr(TACZWriter, "set_frontier")
+    assert hasattr(ParallelTACZWriter, "set_frontier")
+
+
+def test_serving_doc_covers_distortion_targets(serving_doc):
+    for needle in ["VariantServer", "tuning.md", "target", "variant",
+                   "X-TACZ-Variant", "variants.json", "400"]:
+        assert needle in serving_doc, f"serving.md lost coverage: {needle}"
 
 
 def test_obs_doc_metric_catalog_matches_registry(obs_doc):

@@ -1,0 +1,293 @@
+"""Pipeline-wide error-bound property suite (ISSUE 9).
+
+The error bound is the one promise every layer of the pipeline must
+preserve: ``max |recon - orig| <= eb`` on every covered cell of every
+level, no matter which branch compressed it, which entropy engine
+decoded it, which container codec framed it, or which serving path
+delivered it.  This module asserts that promise *end to end* — original
+array → compress → TACZ write → (reader | region server | sharded
+router) → reconstruction — across:
+
+  * branches: ``lorenzo`` / ``interp`` / ``lor_reg`` (adaptive lor+reg);
+  * entropy engines: ``numpy`` / ``batched`` decode paths;
+  * container codecs: v1 (pre-codec) containers and v2 with
+    ``none``/``zlib``/``auto`` payload passes;
+  * single-file ``.tacz`` and multi-part ``.taczd`` snapshots;
+  * cold ``TACZReader`` reads, warm ``RegionServer`` reads (cache hit
+    path included), and scatter-gathered ``ShardedRegionRouter`` reads;
+
+plus the rate–distortion sanity property the autotuner builds on:
+loosening the bound never costs bits.
+
+Quantization maps each value to ``round(x / (2 eb))``-style bins, so
+the decoded error can exceed the nominal bound only by float32
+round-off; ``_EB_SLACK`` covers exactly that.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro import io as tacz
+from repro.core import amr, hybrid
+from repro.io import writer as tacz_writer
+from repro.serving import (RegionClient, RegionServer, ShardMap,
+                           ShardedRegionRouter, serve)
+
+#: multiplicative slack for float32 round-off on top of the nominal eb
+_EB_SLACK = 1.0 + 1e-5
+
+WHOLE = ((0, 32), (0, 32), (0, 32))
+
+
+def _dataset(seed=5, densities=(0.35, 0.65), shape=(32, 32, 32)):
+    return amr.synthetic_amr(tuple(shape), densities=list(densities),
+                             refine_block=4, seed=seed)
+
+
+def _assert_within_eb(ds, recons, ebs):
+    """Every covered cell of every level is within its level's bound."""
+    assert len(recons) == len(ds.levels)
+    for li, (lvl, recon) in enumerate(zip(ds.levels, recons)):
+        err = np.abs(np.asarray(recon) - lvl.data)[lvl.mask]
+        if err.size:
+            assert float(err.max()) <= ebs[li] * _EB_SLACK, \
+                f"level {li}: {err.max():g} > eb {ebs[li]:g}"
+
+
+def _eb_for(ds, rel=1e-3):
+    lvl = ds.levels[0]
+    return rel * float(lvl.data.max() - lvl.data.min())
+
+
+def _compress(ds, eb, algorithm="lor_reg"):
+    """Serializable compression for any branch: the non-SHE branches
+    (pure lorenzo / interp) are only indexable through the gsp
+    whole-level strategy, which conveniently also exercises the
+    WHOLE_LEVEL decode path."""
+    strategy = None if algorithm == "lor_reg" else "gsp"
+    return hybrid.compress_amr(ds, eb=eb, algorithm=algorithm,
+                               strategy=strategy)
+
+
+# ------------------------- branch × codec matrix ---------------------------
+
+
+@pytest.mark.parametrize("algorithm", ["lorenzo", "interp", "lor_reg"])
+@pytest.mark.parametrize("codec", ["none", "zlib", "auto"])
+def test_eb_end_to_end_single_file(tmp_path, algorithm, codec):
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = _compress(ds, eb, algorithm)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res, payload_codec=codec)
+    recons = tacz.read(path)
+    _assert_within_eb(ds, recons, [lr.eb for lr in res.levels])
+
+
+@pytest.mark.parametrize("algorithm", ["lorenzo", "lor_reg"])
+def test_eb_end_to_end_multipart(tmp_path, algorithm):
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = _compress(ds, eb, algorithm)
+    path = os.path.join(str(tmp_path), "s.taczd")
+    tacz.write_multipart(path, res, parts=2)
+    with tacz.open_snapshot(path) as rd:
+        recons = [rd.read_level(li) for li in range(rd.n_levels)]
+    _assert_within_eb(ds, recons, [lr.eb for lr in res.levels])
+
+
+def test_eb_v1_container(tmp_path):
+    """v1 containers (no payload-codec pass) preserve the bound too."""
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = hybrid.compress_amr(ds, eb=eb)
+    packed = [tacz_writer.pack_level(lr, payload_codec="none")
+              for lr in res.levels]
+    blob = tacz_writer.build_container(packed, version=1)
+    path = os.path.join(str(tmp_path), "v1.tacz")
+    with open(path, "wb") as f:
+        f.write(blob)
+    with tacz.TACZReader(path) as rd:
+        assert rd.version == 1
+        recons = [rd.read_level(li) for li in range(rd.n_levels)]
+    _assert_within_eb(ds, recons, [lr.eb for lr in res.levels])
+
+
+@pytest.mark.parametrize("engine", ["numpy", "batched"])
+def test_eb_entropy_engines(tmp_path, engine):
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res)
+    with tacz.TACZReader(path, entropy_engine=engine) as rd:
+        recons = [rd.read_level(li) for li in range(rd.n_levels)]
+    _assert_within_eb(ds, recons, [lr.eb for lr in res.levels])
+
+
+def test_eb_per_level_vector(tmp_path):
+    """A per-level eb vector (the autotuner's output form) is honored
+    level by level — each level meets *its own* bound."""
+    ds = _dataset(densities=(0.3, 0.5, 0.2))
+    base = _eb_for(ds)
+    ebs = [base * 0.5, base * 2.0, base * 8.0]
+    res = hybrid.compress_amr(ds, eb=ebs)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res)
+    _assert_within_eb(ds, tacz.read(path), ebs)
+
+
+# ----------------------------- serving paths -------------------------------
+
+
+def test_eb_region_server_cold_and_warm(tmp_path):
+    """Cold (first) and warm (cache-hit) RegionServer reads both honor
+    the bound — and are bit-identical to each other."""
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res)
+    with RegionServer(path, cache_bytes=32 << 20) as rs:
+        cold = rs.get_roi(WHOLE)
+        warm = rs.get_roi(WHOLE)
+        _assert_within_eb(ds, [r.data for r in cold],
+                          [lr.eb for lr in res.levels])
+        for c, w in zip(cold, warm):
+            np.testing.assert_array_equal(c.data, w.data)
+        assert rs.cache.stats()["hits"] > 0
+
+
+def test_eb_through_sharded_router(tmp_path):
+    """A scatter-gathered read over a two-shard HTTP fleet honors the
+    bound and matches the unsharded server bit for bit."""
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res)
+    smap = ShardMap(["s0", "s1"], seed=3)
+    servers, urls = [], {}
+    try:
+        for sid in smap.shards:
+            httpd = serve(path, port=0, cache_bytes=16 << 20,
+                          shard_map=smap, shard_id=sid)
+            threading.Thread(target=httpd.serve_forever,
+                             daemon=True).start()
+            servers.append(httpd)
+            urls[sid] = f"http://127.0.0.1:{httpd.server_address[1]}"
+        with RegionServer(path) as single, \
+                ShardedRegionRouter(path, smap, urls,
+                                    local_fallback=False) as router:
+            routed = router.get_roi(WHOLE)
+            _assert_within_eb(ds, [r.data for r in routed],
+                              [lr.eb for lr in res.levels])
+            for g, r in zip(routed, single.get_roi(WHOLE)):
+                np.testing.assert_array_equal(g.data, r.data)
+    finally:
+        for httpd in servers:
+            httpd.shutdown()
+            httpd.server_close()
+            httpd.region_server.close()
+
+
+def test_eb_http_single_level_roi(tmp_path):
+    """The raw <f4 wire format does not disturb the bound on a crop."""
+    ds = _dataset()
+    eb = _eb_for(ds)
+    res = hybrid.compress_amr(ds, eb=eb)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res)
+    httpd = serve(path, port=0)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        cli = RegionClient(f"http://127.0.0.1:{httpd.server_address[1]}")
+        box = ((4, 20), (8, 24), (0, 16))
+        roi = cli.region(0, box)
+        lvl = ds.levels[0]
+        sl = tuple(slice(lo, hi) for lo, hi in roi.box)
+        err = np.abs(roi.data - lvl.data[sl])[lvl.mask[sl]]
+        assert float(err.max()) <= res.levels[0].eb * _EB_SLACK
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+# ------------------------ rate–distortion sanity ---------------------------
+
+
+def test_rate_distortion_monotonic():
+    """Loosening the bound never costs bits, and the achieved error
+    tracks the bound — the property the autotuner's search relies on."""
+    ds = _dataset()
+    base = _eb_for(ds)
+    bits, errs = [], []
+    for k in (0.25, 1.0, 4.0, 16.0):
+        res = hybrid.compress_amr(ds, eb=base * k)
+        bits.append(res.total_bits)
+        worst = 0.0
+        for lvl, lr in zip(ds.levels, res.levels):
+            err = np.abs(lr.recon - lvl.data)[lvl.mask]
+            if err.size:
+                worst = max(worst, float(err.max()))
+        errs.append(worst)
+    assert all(b2 <= b1 for b1, b2 in zip(bits, bits[1:])), bits
+    assert all(e <= base * k * _EB_SLACK
+               for e, k in zip(errs, (0.25, 1.0, 4.0, 16.0)))
+
+
+# --------------------------- hypothesis sweeps ------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+    settings.register_profile("error_bound", max_examples=10,
+                              deadline=None)
+    settings.load_profile("error_bound")
+except ImportError:        # pragma: no cover - environment dependent
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 10_000),
+           eb_rel=st.floats(1e-4, 0.2),
+           fine=st.floats(0.1, 0.9),
+           algorithm=st.sampled_from(["lorenzo", "interp", "lor_reg"]))
+    def test_property_eb_holds_across_seeds(tmp_path_factory, seed,
+                                            eb_rel, fine, algorithm):
+        ds = amr.synthetic_amr((16, 16, 16),
+                               densities=[fine, 1.0 - fine],
+                               refine_block=4, seed=seed)
+        eb = _eb_for(ds, rel=eb_rel)
+        res = _compress(ds, eb, algorithm)
+        path = os.path.join(str(tmp_path_factory.mktemp("eb")), "p.tacz")
+        tacz.write(path, res)
+        _assert_within_eb(ds, tacz.read(path),
+                          [lr.eb for lr in res.levels])
+
+    @given(seed=st.integers(0, 10_000),
+           lo=st.tuples(st.integers(0, 28), st.integers(0, 28),
+                        st.integers(0, 28)),
+           ext=st.tuples(st.integers(1, 32), st.integers(1, 32),
+                         st.integers(1, 32)))
+    def test_property_eb_holds_on_served_crops(tmp_path_factory, seed,
+                                               lo, ext):
+        ds = amr.synthetic_amr((32, 32, 32), densities=[0.35, 0.65],
+                               refine_block=4, seed=seed)
+        eb = _eb_for(ds)
+        res = hybrid.compress_amr(ds, eb=eb)
+        path = os.path.join(str(tmp_path_factory.mktemp("eb")), "p.tacz")
+        tacz.write(path, res)
+        box = tuple((int(l), int(min(l + e, 32)))
+                    for l, e in zip(lo, ext))
+        with RegionServer(path, cache_bytes=8 << 20) as rs:
+            for roi in rs.get_roi(box):
+                lvl = ds.levels[roi.level]
+                sl = tuple(slice(b0, b1) for b0, b1 in roi.box)
+                err = np.abs(roi.data - lvl.data[sl])[lvl.mask[sl]]
+                if err.size:
+                    assert float(err.max()) <= \
+                        res.levels[roi.level].eb * _EB_SLACK

@@ -1,0 +1,85 @@
+"""Golden-file conformance: frozen ``.tacz`` fixtures must keep
+decoding bit-identically (ISSUE 9).
+
+The fixtures under ``tests/golden/`` were written once (see
+``tests/golden/make_golden.py``) and committed; these tests decode them
+with *today's* reader and compare against the stored expected arrays.
+Any change to the entropy coder, predictor, payload codecs, container
+framing, or frontier parsing that alters decoded bytes — or drops the
+ability to read old files — fails here first.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro import io as tacz
+
+GOLD = os.path.join(os.path.dirname(__file__), "golden")
+
+
+@pytest.fixture(scope="module")
+def expected():
+    with np.load(os.path.join(GOLD, "expected.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+def _levels(expected):
+    return sorted(int(k[len("level"):]) for k in expected
+                  if k.startswith("level"))
+
+
+def _assert_matches(rd, expected):
+    lis = _levels(expected)
+    assert rd.n_levels == len(lis)
+    for li in lis:
+        got = np.asarray(rd.read_level(li))
+        want = expected[f"level{li}"]
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want)
+
+
+def test_golden_v1(expected):
+    with tacz.TACZReader(os.path.join(GOLD, "v1.tacz")) as rd:
+        assert rd.version == 1
+        assert rd.frontier is None and rd.frontier_error is None
+        _assert_matches(rd, expected)
+
+
+def test_golden_v2_zlib(expected):
+    with tacz.TACZReader(os.path.join(GOLD, "v2_zlib.tacz")) as rd:
+        assert rd.version >= 2
+        _assert_matches(rd, expected)
+        # the frozen TACF section still parses
+        assert rd.frontier_error is None
+        dp = rd.frontier.default_point
+        assert rd.frontier.metric == "psnr"
+        assert dp.metrics["psnr"] == 72.0
+        assert rd.frontier.select("psnr>=60") is dp
+
+
+def test_golden_multipart(expected):
+    with tacz.open_snapshot(os.path.join(GOLD, "multipart.taczd")) as rd:
+        _assert_matches(rd, expected)
+        assert rd.frontier is not None
+        assert rd.frontier.default_point.metrics["psnr"] == 72.0
+
+
+def test_golden_truncated_tacf(expected):
+    """The corrupt-frontier fault fixture: the lying TACF body length
+    must cost exactly the frontier — the data still decodes bit for
+    bit and the error is reported, not raised."""
+    with tacz.TACZReader(os.path.join(GOLD, "truncated_tacf.tacz")) as rd:
+        assert rd.frontier is None
+        assert rd.frontier_error
+        _assert_matches(rd, expected)
+
+
+def test_golden_error_bound(expected):
+    """The frozen snapshots honor the eb they were written at (1e-3)."""
+    recons = tacz.read(os.path.join(GOLD, "v2_zlib.tacz"))
+    for li in _levels(expected):
+        mask = expected[f"mask{li}"]
+        err = np.abs(recons[li] - expected[f"orig{li}"])[mask]
+        if err.size:
+            assert float(err.max()) <= 1e-3 * (1 + 1e-5)

@@ -1,0 +1,529 @@
+"""Autotuner, rate–distortion frontiers, and distortion-aware serving
+(ISSUE 9).
+
+Covers the whole ``repro.tuning`` → container → serving chain:
+
+  * the distortion-target grammar (``metric{>=,<=,>,<}value``) and the
+    cheapest-satisfying selection rule;
+  * the ``TACF`` byte section — roundtrip, and every corruption mode
+    degrading to ``frontier = None`` + ``frontier_error`` without ever
+    breaking the snapshot itself;
+  * :class:`~repro.tuning.AutoTuner` — the tuned point meets its target
+    *when re-measured from the decoded snapshot* (the acceptance
+    criterion), frontier Pareto invariants, memoization, and clean
+    ``TargetUnsatisfiable`` failures;
+  * variant sets — catalog integrity (CRC, corruption detection),
+    selection, and the serving surface: :class:`VariantServer`, the
+    HTTP API (including the 400-not-500 contract for unsatisfiable or
+    malformed targets), single-snapshot fallback counters, and the
+    sharded router answering a distortion target with bytes identical
+    to reading the selected variant directly.
+"""
+import json
+import os
+import shutil
+import threading
+
+import numpy as np
+import pytest
+
+from repro import io as tacz
+from repro.core import amr, hybrid
+from repro.core import metrics as core_metrics
+from repro.io import format as fmt
+from repro.io import frontier as frt
+from repro.io import variants as vrt
+from repro.obs import metrics as obsm
+from repro.serving import (RegionClient, RegionServer, ShardMap,
+                           ShardedRegionRouter, VariantServer, serve)
+from repro.serving.client import RegionAPIError
+from repro.tuning import AutoTuner, measure_metrics, write_variant_set
+
+BOX = ((0, 20), (4, 28), (8, 24))
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return amr.synthetic_amr((32, 32, 32), densities=[0.35, 0.65],
+                             refine_block=4, seed=5)
+
+
+@pytest.fixture(scope="module")
+def variant_set(ds, tmp_path_factory):
+    """A tuned two-variant set (shared: tuning is the expensive step)."""
+    set_dir = os.path.join(str(tmp_path_factory.mktemp("vset")),
+                           "snap.taczv")
+    write_variant_set(set_dir, ds, {"hi": "psnr>=70", "lo": "psnr>=50"},
+                      default="lo")
+    return set_dir
+
+
+# ----------------------------- target grammar ------------------------------
+
+
+@pytest.mark.parametrize("spec,metric,op,value", [
+    ("psnr>=60", "psnr", ">=", 60.0),
+    ("ps_error<=1e-2", "ps_error", "<=", 0.01),
+    (" psnr_u > 42.5 ", "psnr_u", ">", 42.5),
+    ("max_abs_error<0.125", "max_abs_error", "<", 0.125),
+])
+def test_parse_target(spec, metric, op, value):
+    t = frt.parse_target(spec)
+    assert (t.metric, t.op, t.value) == (metric, op, value)
+    # str() is a valid spec again (the catalog stores this form)
+    assert frt.parse_target(str(t)) == t
+
+
+@pytest.mark.parametrize("bad", [
+    "", "psnr", "psnr=60", "psnr==60", "psnr>=", ">=60",
+    "psnr>=sixty", "bogus_metric>=3", "psnr >= 60 extra",
+])
+def test_parse_target_rejects(bad):
+    with pytest.raises(ValueError):
+        frt.parse_target(bad)
+
+
+def test_target_satisfies_direction():
+    hi = frt.parse_target("psnr>=60")
+    assert hi.satisfies({"psnr": 60.0})
+    assert not hi.satisfies({"psnr": 59.999})
+    assert not hi.satisfies({"ps_error": 0.0})   # metric never measured
+    lo = frt.parse_target("ps_error<0.01")
+    assert lo.satisfies({"ps_error": 0.0099})
+    assert not lo.satisfies({"ps_error": 0.01})
+
+
+# ----------------------------- frontier model ------------------------------
+
+
+def _frontier():
+    pts = [frt.FrontierPoint(ebs=(8.0,), bits=100,
+                             metrics={"psnr": 40.0, "ps_error": 0.1}),
+           frt.FrontierPoint(ebs=(2.0,), bits=300,
+                             metrics={"psnr": 55.0, "ps_error": 0.02}),
+           frt.FrontierPoint(ebs=(0.5,), bits=900,
+                             metrics={"psnr": 70.0, "ps_error": 0.004})]
+    return frt.Frontier(metric="psnr", points=pts, default=1)
+
+
+def test_frontier_select_cheapest():
+    fr = _frontier()
+    assert fr.select("psnr>=50").bits == 300      # not the 900-bit point
+    assert fr.select("psnr>=60").bits == 900
+    assert fr.select("ps_error<=0.05").bits == 300
+    assert fr.default_point.bits == 300
+
+
+def test_frontier_unsatisfiable_reports_best():
+    fr = _frontier()
+    with pytest.raises(frt.TargetUnsatisfiable) as ei:
+        fr.select("psnr>=90")
+    assert ei.value.best == 70.0
+    assert "best available psnr=70" in str(ei.value)
+    assert ei.value.target.value == 90.0
+
+
+def test_frontier_best_value_direction():
+    fr = _frontier()
+    assert fr.best_value("psnr") == 70.0          # higher is better
+    assert fr.best_value("ps_error") == 0.004     # lower is better
+    assert fr.best_value("psnr_u") is None        # never measured
+
+
+def test_frontier_from_dict_validation():
+    good = _frontier().to_dict()
+    assert frt.Frontier.from_dict(good).to_dict() == good
+    bad = dict(good, magic="NOPE")
+    with pytest.raises(ValueError, match="frontier"):
+        frt.Frontier.from_dict(bad)
+    with pytest.raises(ValueError, match="version"):
+        frt.Frontier.from_dict(dict(good, version=frt.FRONTIER_VERSION + 1))
+    with pytest.raises(ValueError, match="default"):
+        frt.Frontier.from_dict(dict(good, default=7))
+
+
+# ------------------------------ TACF section -------------------------------
+
+
+def test_section_roundtrip():
+    fr = _frontier()
+    buf = frt.pack_section(fr)
+    assert buf[:4] == frt.FRONTIER_MAGIC
+    assert frt.parse_section(buf).to_dict() == fr.to_dict()
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda b: b[:frt.SECTION_HEAD_SIZE - 1], "truncated"),
+    (lambda b: b[:-3], "truncated"),
+    (lambda b: b + b"x", "oversized"),
+    (lambda b: b"XXXX" + b[4:], "magic"),
+    (lambda b: b[:frt.SECTION_HEAD_SIZE + 5]
+        + bytes([b[frt.SECTION_HEAD_SIZE + 5] ^ 0xFF])
+        + b[frt.SECTION_HEAD_SIZE + 6:], "CRC"),
+])
+def test_section_corruption(mutate, match):
+    buf = frt.pack_section(_frontier())
+    with pytest.raises(ValueError, match=match):
+        frt.parse_section(mutate(buf))
+
+
+# ------------------------- container plumbing ------------------------------
+
+
+def _section_span(path):
+    """(start, end) byte offsets of the TACF gap in a single-file tacz."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        f.seek(size - fmt.FOOTER_SIZE)
+        idx_off, idx_len, _crc = fmt.parse_footer(f.read(fmt.FOOTER_SIZE))
+    return idx_off + idx_len, size - fmt.FOOTER_SIZE
+
+
+def test_single_file_frontier_roundtrip(tmp_path, ds):
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    fr = _frontier()
+    plain = os.path.join(str(tmp_path), "plain.tacz")
+    withf = os.path.join(str(tmp_path), "withf.tacz")
+    tacz.write(plain, res)
+    tacz.write(withf, res, frontier=fr)
+    with tacz.TACZReader(plain) as rd:
+        assert rd.frontier is None and rd.frontier_error is None
+        base = [rd.read_level(li) for li in range(rd.n_levels)]
+    with tacz.TACZReader(withf) as rd:
+        assert rd.frontier_error is None
+        assert rd.frontier.to_dict() == fr.to_dict()
+        # carrying a frontier never perturbs the payload
+        for li, ref in enumerate(base):
+            np.testing.assert_array_equal(rd.read_level(li), ref)
+
+
+def test_corrupt_section_degrades_not_fails(tmp_path, ds):
+    """A damaged TACF section costs the frontier, never the data."""
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res, frontier=_frontier())
+    start, end = _section_span(path)
+    assert end - start > frt.SECTION_HEAD_SIZE
+    with open(path, "r+b") as f:                  # flip a body byte
+        f.seek(start + frt.SECTION_HEAD_SIZE + 3)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+    with tacz.TACZReader(path) as rd:
+        assert rd.frontier is None
+        assert "CRC" in rd.frontier_error
+        recons = [rd.read_level(li) for li in range(rd.n_levels)]
+    for lvl, recon in zip(ds.levels, recons):
+        err = np.abs(recon - lvl.data)[lvl.mask]
+        assert float(err.max()) <= res.levels[0].eb * (1 + 1e-5) \
+            or err.size == 0
+
+
+def test_multipart_frontier_roundtrip(tmp_path, ds):
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    fr = _frontier()
+    path = os.path.join(str(tmp_path), "s.taczd")
+    tacz.write_multipart(path, res, parts=2, frontier=fr)
+    with tacz.open_snapshot(path) as rd:
+        assert rd.frontier.to_dict() == fr.to_dict()
+        assert rd.frontier_error is None
+
+
+# -------------------------------- autotuner --------------------------------
+
+
+def test_autotune_restated_from_decoded_snapshot(tmp_path, ds):
+    """The acceptance criterion: the tuned point's stated metrics hold
+    when re-measured from the *decoded file*, not the tuner's memo."""
+    tuner = AutoTuner(ds, steps_down=4, steps_up=4)
+    tr = tuner.tune("psnr>=60")
+    assert tr.target.satisfies(tr.metrics)
+    assert tr.frontier.default_point.bits == tr.bits
+    assert tr.frontier.default_point.ebs == tr.ebs
+    path = os.path.join(str(tmp_path), "tuned.tacz")
+    tacz.write(path, tr.result, frontier=tr.frontier)
+    recons = tacz.read(path)
+    orig = np.concatenate([l.data[l.mask] for l in ds.levels])
+    rec = np.concatenate([r[l.mask]
+                          for l, r in zip(ds.levels, recons)])
+    repsnr = core_metrics.psnr(orig, rec)
+    assert repsnr == pytest.approx(tr.metrics["psnr"], abs=1e-6)
+    assert repsnr >= 60.0
+    remax = float(np.abs(orig - rec).max())
+    assert remax == pytest.approx(tr.metrics["max_abs_error"], rel=1e-6)
+    # per-level bounds hold at the per-level ebs the tuner chose
+    for li, (lvl, recon) in enumerate(zip(ds.levels, recons)):
+        err = np.abs(recon - lvl.data)[lvl.mask]
+        if err.size:
+            assert float(err.max()) <= tr.ebs[li] * (1 + 1e-5)
+
+
+def test_autotune_frontier_is_pareto(ds):
+    tr = AutoTuner(ds, steps_down=3, steps_up=3).tune("psnr>=55")
+    pts = tr.frontier.points
+    assert pts == sorted(pts, key=lambda p: p.bits)
+    default = tr.frontier.default_point
+    for a in pts:
+        if a is default:      # the written point is force-kept
+            continue
+        for b in pts:
+            if b is a:
+                continue
+            dominates = (b.bits <= a.bits
+                         and b.metrics["psnr"] >= a.metrics["psnr"]
+                         and (b.bits < a.bits
+                              or b.metrics["psnr"] > a.metrics["psnr"]))
+            assert not dominates, (a, b)
+
+
+def test_autotune_unsatisfiable(ds):
+    with pytest.raises(frt.TargetUnsatisfiable) as ei:
+        AutoTuner(ds, steps_down=1, steps_up=1).tune("psnr>=500")
+    assert ei.value.best is not None
+
+
+def test_autotune_memo_one_compression_per_level_eb(ds):
+    tuner = AutoTuner(ds, steps_down=3, steps_up=3)
+    tuner.tune("psnr>=50")
+    first = tuner.compressions
+    tuner.tune("psnr>=60")    # overlapping ladder → memo reuse
+    assert tuner.compressions == len(tuner._level_memo)
+    assert tuner.compressions < 2 * first
+
+
+def test_measure_metrics_keys(ds):
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    mets = measure_metrics(ds, res)
+    assert set(mets) == set(frt.HIGHER_IS_BETTER)
+    assert mets["max_abs_error"] <= 1e-3 * (1 + 1e-5)
+
+
+# ------------------------------ variant sets -------------------------------
+
+
+def test_variant_set_catalog(variant_set, ds):
+    assert vrt.is_variant_set(variant_set)
+    cat = vrt.load_catalog(variant_set)
+    assert cat["magic"] == vrt.VARIANTS_MAGIC
+    assert cat["default"] == "lo"
+    assert vrt.variant_names(cat) == ["hi", "lo"] \
+        or set(vrt.variant_names(cat)) == {"hi", "lo"}
+    for entry in cat["variants"]:
+        path = os.path.join(variant_set, entry["file"])
+        assert os.path.exists(path)
+        with tacz.TACZReader(path) as rd:
+            # each variant file carries its own frontier, and its
+            # default point is exactly the catalog row
+            dp = rd.frontier.default_point
+            assert dp.bits == entry["bits"]
+            assert list(dp.ebs) == list(entry["ebs"])
+            assert frt.parse_target(entry["target"]).satisfies(dp.metrics)
+
+
+def test_select_variant(variant_set):
+    cat = vrt.load_catalog(variant_set)
+    assert vrt.select_variant(cat, None)["name"] == "lo"
+    assert vrt.select_variant(cat, "psnr>=60")["name"] == "hi"
+    assert vrt.select_variant(cat, "psnr>=20")["name"] == "lo"
+    with pytest.raises(frt.TargetUnsatisfiable) as ei:
+        vrt.select_variant(cat, "psnr>=500")
+    assert ei.value.best is not None
+
+
+def test_catalog_corruption_detected(variant_set, tmp_path):
+    clone = os.path.join(str(tmp_path), "clone.taczv")
+    shutil.copytree(variant_set, clone)
+    cpath = os.path.join(clone, vrt.VARIANTS_NAME)
+    body = json.load(open(cpath))
+    body["default"] = "hi"        # flip a field without re-stamping CRC
+    with open(cpath, "w") as f:
+        json.dump(body, f)
+    with pytest.raises(ValueError, match="CRC"):
+        vrt.load_catalog(clone)
+    with open(cpath, "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError, match="corrupt"):
+        vrt.load_catalog(clone)
+
+
+# ------------------------------ serving paths ------------------------------
+
+
+def test_variant_server_selection_bit_identical(variant_set):
+    with VariantServer(variant_set) as vs:
+        assert vs.default_variant == "lo"
+        crc, name, res = vs.get_regions_ex([BOX], target="psnr>=60")
+        assert name == "hi"
+        direct = tacz.read_roi(os.path.join(variant_set, "hi.tacz"), BOX)
+        for roi, d in zip(res[0], direct):
+            np.testing.assert_array_equal(roi.data, d.data)
+        # no target → default variant
+        _, dname, dres = vs.get_regions_ex([BOX])
+        assert dname == "lo"
+        lo = tacz.read_roi(os.path.join(variant_set, "lo.tacz"), BOX)
+        np.testing.assert_array_equal(dres[0][0].data, lo[0].data)
+
+
+def test_variant_server_unknown_variant(variant_set):
+    with VariantServer(variant_set) as vs:
+        with pytest.raises(ValueError, match="unknown variant"):
+            vs.get_regions_ex([BOX], variant="nope")
+
+
+def test_variant_server_unsatisfiable_counts(variant_set):
+    before = obsm.VARIANT_UNSATISFIED.labels().value
+    with VariantServer(variant_set) as vs:
+        with pytest.raises(frt.TargetUnsatisfiable):
+            vs.get_regions_ex([BOX], target="psnr>=500")
+    assert obsm.VARIANT_UNSATISFIED.labels().value == before + 1
+
+
+def test_variant_server_fault_hook_forwards(variant_set):
+    """fault_hook injected at the set level fires inside every variant's
+    inner server — the fleet-test fault-injection surface."""
+    with VariantServer(variant_set) as vs:
+        calls = []
+
+        def boom():
+            calls.append(1)
+            raise RuntimeError("injected fault")
+
+        vs.fault_hook = boom
+        with pytest.raises(RuntimeError, match="injected fault"):
+            vs.get_regions_ex([BOX], target="psnr>=60")
+        assert calls
+        vs.fault_hook = None
+        _, name, _ = vs.get_regions_ex([BOX], target="psnr>=60")
+        assert name == "hi"
+
+
+def _serve_bg(src, **kw):
+    httpd = serve(src, port=0, **kw)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    return httpd, f"http://127.0.0.1:{httpd.server_address[1]}"
+
+
+def test_http_variant_set(variant_set):
+    """The HTTP wire surface over a variant set: meta block, target
+    selection + variant header, explicit pin, and the 400 contract."""
+    direct = tacz.read_roi(os.path.join(variant_set, "hi.tacz"), BOX)
+    httpd, url = _serve_bg(variant_set, cache_bytes=16 << 20)
+    try:
+        cli = RegionClient(url)
+        meta = cli.meta()
+        assert meta["variants"]["default"] == "lo"
+        assert {v["name"] for v in meta["variants"]["variants"]} \
+            == {"hi", "lo"}
+        header, out = cli.regions_ex([BOX], target="psnr>=60")
+        assert header["variant"] == "hi"
+        for roi, d in zip(out[0], direct):
+            np.testing.assert_array_equal(roi.data, d.data)
+        # GET single-region path takes the same query params
+        roi = cli.region(0, BOX, target="psnr>=60")
+        np.testing.assert_array_equal(roi.data, direct[0].data)
+        # explicit variant pin
+        header, out = cli.regions_ex([BOX], variant="lo")
+        assert header["variant"] == "lo"
+        # no target → header reports the default variant was used
+        header, _ = cli.regions_ex([BOX])
+        assert header["variant"] is None or header["variant"] == "lo"
+        # unsatisfiable → clean 400 with an explanatory JSON body
+        with pytest.raises(RegionAPIError) as ei:
+            cli.regions([BOX], target="psnr>=500")
+        assert ei.value.code == 400
+        assert "best" in ei.value.body_excerpt
+        assert "psnr" in ei.value.body_excerpt
+        # malformed target → 400, not 500
+        with pytest.raises(RegionAPIError) as ei:
+            cli.regions([BOX], target="psnr==60")
+        assert ei.value.code == 400
+        with pytest.raises(RegionAPIError) as ei:
+            cli.region(0, BOX, target="psnr>=500")
+        assert ei.value.code == 400
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+
+
+def test_single_server_target_and_fallback(variant_set, tmp_path, ds):
+    """A plain RegionServer honors targets against its own frontier,
+    and falls back (counted) when the file has none."""
+    hi_path = os.path.join(variant_set, "hi.tacz")
+    req0 = obsm.VARIANT_REQUESTS.labels("default").value
+    with RegionServer(hi_path) as rs:
+        _, name, _ = rs.get_regions_ex([BOX], target="psnr>=60")
+        assert name == "default"
+        with pytest.raises(frt.TargetUnsatisfiable):
+            rs.get_regions_ex([BOX], target="psnr>=500")
+        with pytest.raises(ValueError, match="variant set"):
+            rs.get_regions_ex([BOX], variant="hi")
+    assert obsm.VARIANT_REQUESTS.labels("default").value == req0 + 1
+    # frontier-less file: target is unverifiable → serve + count fallback
+    plain = os.path.join(str(tmp_path), "plain.tacz")
+    tacz.write(plain, hybrid.compress_amr(ds, eb=1e-3))
+    fb0 = obsm.VARIANT_FALLBACKS.labels().value
+    with RegionServer(plain) as rs:
+        _, name, res = rs.get_regions_ex([BOX], target="psnr>=60")
+        assert name == "default" and res[0]
+    assert obsm.VARIANT_FALLBACKS.labels().value == fb0 + 1
+
+
+def test_corrupt_frontier_falls_back(tmp_path, ds):
+    """In-place TACF corruption (the truncated-section fault fixture):
+    the server keeps serving and counts the fallback."""
+    res = hybrid.compress_amr(ds, eb=1e-3)
+    path = os.path.join(str(tmp_path), "s.tacz")
+    tacz.write(path, res, frontier=_frontier())
+    start, _end = _section_span(path)
+    with open(path, "r+b") as f:                  # truncate the body len
+        f.seek(start + 8)
+        f.write(b"\xff\xff\xff\x7f")
+    fb0 = obsm.VARIANT_FALLBACKS.labels().value
+    with RegionServer(path) as rs:
+        assert rs.reader.frontier is None
+        assert rs.reader.frontier_error
+        _, name, out = rs.get_regions_ex([BOX], target="psnr>=60")
+        assert name == "default"
+        np.testing.assert_array_equal(
+            out[0][0].data, tacz.read_roi(path, BOX)[0].data)
+    assert obsm.VARIANT_FALLBACKS.labels().value == fb0 + 1
+
+
+def test_sharded_router_over_variant_set(variant_set):
+    """Acceptance criterion: a distortion-target request through the
+    sharded router returns bits identical to directly reading the
+    selected variant."""
+    hi_path = os.path.join(variant_set, "hi.tacz")
+    direct = tacz.read_roi(hi_path, BOX)
+    smap = ShardMap(["a", "b"], seed=7)
+    servers, urls = [], {}
+    try:
+        for sid in smap.shards:
+            vs = VariantServer(variant_set, shard_map=smap, shard_id=sid)
+            httpd, url = _serve_bg(vs)
+            servers.append(httpd)
+            urls[sid] = url
+        with ShardedRegionRouter(variant_set, smap, urls,
+                                 local_fallback=False) as router:
+            crc, name, res = router.get_regions_ex([BOX],
+                                                   target="psnr>=60")
+            assert name == "hi"
+            with tacz.open_snapshot(hi_path) as rd:
+                assert crc == rd.index_crc
+            for roi, d in zip(res[0], direct):
+                np.testing.assert_array_equal(roi.data, d.data)
+            assert router.counters["local_fallbacks"] == 0
+            # explicit pin routes the other variant's bytes
+            _, lname, lres = router.get_regions_ex([BOX], variant="lo")
+            assert lname == "lo"
+            lo = tacz.read_roi(os.path.join(variant_set, "lo.tacz"), BOX)
+            np.testing.assert_array_equal(lres[0][0].data, lo[0].data)
+            with pytest.raises(frt.TargetUnsatisfiable):
+                router.get_regions_ex([BOX], target="psnr>=500")
+            with pytest.raises(ValueError, match="unknown variant"):
+                router.get_regions_ex([BOX], variant="nope")
+    finally:
+        for httpd in servers:
+            httpd.shutdown()
+            httpd.server_close()
+            httpd.region_server.close()
