@@ -22,6 +22,15 @@ fraction of responses is compared ``np.array_equal`` against a local
 reader, and any mismatch fails the bench — a fleet that got fast by
 corrupting crops cannot pass.
 
+A second, gated scenario (ISSUE 10) **grows the fleet one shard while
+the load runs**: at the halfway request a loadgen action starts a third
+shard on the grown map, hands the moved decoded bricks over
+(``/v1/cache/export`` → ``/v1/cache/import``), and swaps the router —
+old owners ``reshard()`` only after the run.  Gates: zero failed
+requests through the transition, some bricks actually handed off, the
+old owners drop their moved keys, the post-swap warm hit rate does not
+collapse (≥ pre-swap − 10 points), and the same pinned SLO set passes.
+
 Artifacts: one CSV row per run configuration, the SLO verdict merged
 into ``bench_summary.json`` (via the driver), and the collector's fleet
 JSON snapshot (``loadgen_fleet.json``) — per-endpoint health + metrics
@@ -78,11 +87,18 @@ def run(quick: bool = False):
             servers.append(httpd)
             return f"http://127.0.0.1:{httpd.server_address[1]}"
 
-        urls = {sid: endpoint(shard_map=m, shard_id=sid)
-                for sid in m.shards}
-        router = ShardedRegionRouter(path, m,
-                                     {k: [v] for k, v in urls.items()})
+        shard_httpds: dict[str, object] = {}
+
+        def shard_endpoint(sid, smap):
+            url = endpoint(shard_map=smap, shard_id=sid)
+            shard_httpds[sid] = servers[-1]
+            return url
+
+        shard_urls = {sid: shard_endpoint(sid, m) for sid in m.shards}
+        router = ShardedRegionRouter(
+            path, m, {k: [v] for k, v in shard_urls.items()})
         try:
+            urls = dict(shard_urls)
             urls["router"] = endpoint_url = \
                 f"http://127.0.0.1:{serve_router(router, servers)}"
             client = RegionClient(endpoint_url)
@@ -99,9 +115,47 @@ def run(quick: bool = False):
                     client_fetch(client), wl, rate=rate, concurrency=4,
                     verify_reader=rd, verify_fraction=0.2, seed=1)
                 report = gen.run(n_requests)
+
+                # -- scenario 2: grow s0,s1 -> s0,s1,s2 mid-run --------
+                keys = list(rd.subblock_keys())
+                new_map, moved = m.grow("s2", keys)
+                grow_info = {"imported": 0}
+                swap_stats: list[dict] = []
+
+                def fleet_cache():
+                    return [dict(h.region_server.cache.stats())
+                            for h in shard_httpds.values()]
+
+                def grow_fleet():
+                    url2 = shard_endpoint("s2", new_map)
+                    imported = 0
+                    for sid in m.shards:      # old owners export
+                        blob = RegionClient(
+                            shard_urls[sid]).cache_export(moved)
+                        imported += RegionClient(url2).cache_import(
+                            blob)["imported"]
+                    grow_info["imported"] = imported
+                    router.apply_shard_map(
+                        new_map, {**{k: [v] for k, v in
+                                     shard_urls.items()},
+                                  "s2": [url2]})
+                    swap_stats.extend(fleet_cache())
+
+                pre_stats = fleet_cache()
+                grow_report = gen.run(
+                    n_requests, actions={n_requests // 2: grow_fleet})
+                post_stats = fleet_cache()
             col.poll()
             eng.evaluate()
             verdict = eng.verdict()
+
+            # old owners drop moved keys only now that the router is on
+            # the new map — resharding earlier would serve zeros
+            dropped = sum(shard_httpds[sid].region_server.reshard(new_map)
+                          for sid in m.shards)
+            final = client.regions([wl.queries[0].box], levels=[0])
+            assert final and final[0], "post-reshard fleet went dark"
+
             fleet_json = os.path.join(RESULTS_DIR, "loadgen_fleet.json")
             os.makedirs(RESULTS_DIR, exist_ok=True)
             col.dump_json(fleet_json)
@@ -113,34 +167,71 @@ def run(quick: bool = False):
                 httpd.server_close()
                 httpd.region_server.close()
 
-    d = report.to_dict()
-    rows.append((name, len(urls), d["offered_rate"], d["achieved_rate"],
-                 d["requests"], d["errors"], d["verified"],
-                 d["mismatches"], d["p50_ms"], d["p90_ms"], d["p99_ms"],
-                 d["max_lag_ms"], d["saturated"], verdict["passed"]))
+    pre_rate = _hit_rate(pre_stats, swap_stats[:len(pre_stats)])
+    post_rate = _hit_rate(swap_stats, post_stats)
+    for scenario, rep, n_ep in (("steady", report, 3),
+                                ("grow", grow_report, 4)):
+        d = rep.to_dict()
+        rows.append((name, scenario, n_ep, d["offered_rate"],
+                     d["achieved_rate"], d["requests"], d["errors"],
+                     d["verified"], d["mismatches"], d["p50_ms"],
+                     d["p90_ms"], d["p99_ms"], d["max_lag_ms"],
+                     d["saturated"], verdict["passed"]))
     csv = write_csv("loadgen",
-                    ["dataset", "n_endpoints", "offered_rate",
+                    ["dataset", "scenario", "n_endpoints", "offered_rate",
                      "achieved_rate", "requests", "errors", "verified",
                      "mismatches", "p50_ms", "p90_ms", "p99_ms",
                      "max_lag_ms", "saturated", "slo_passed"],
                     rows)
 
-    if report.errors:
+    for scenario, rep in (("steady", report), ("grow", grow_report)):
+        if rep.errors:
+            raise AssertionError(
+                f"loadgen acceptance failed ({scenario}): {rep.errors} "
+                f"request error(s): {rep.error_messages[:3]}")
+        if rep.verified == 0 or rep.mismatches:
+            raise AssertionError(
+                f"loadgen bit-identity failed ({scenario}): "
+                f"verified={rep.verified} mismatches={rep.mismatches}")
+    if not grow_info["imported"]:
         raise AssertionError(
-            f"loadgen acceptance failed: {report.errors} request "
-            f"error(s) under Zipf load: {report.error_messages[:3]}")
-    if report.verified == 0 or report.mismatches:
+            "grow scenario handed off zero warm bricks — the new shard "
+            "came up cold")
+    if not dropped:
         raise AssertionError(
-            f"loadgen bit-identity failed: verified={report.verified} "
-            f"mismatches={report.mismatches}")
+            "old owners dropped nothing on reshard — the moved keys "
+            "were never cached or the map did not change")
+    if post_rate < pre_rate - 0.10:
+        raise AssertionError(
+            f"warm handoff failed: fleet hit rate fell from "
+            f"{pre_rate:.2f} to {post_rate:.2f} across the reshard")
     if not verdict["passed"]:
         failing = {n: r for n, r in verdict["rules"].items()
                    if r["satisfied"] is False or r["state"] in
                    ("pending", "firing")}
         raise AssertionError(
             f"pinned SLO set failed under load: {failing}")
+    d = report.to_dict()
     return {"csv": csv, "slo_passed": verdict["passed"],
-            "p99_ms": d["p99_ms"], "achieved_rate": d["achieved_rate"]}
+            "p99_ms": d["p99_ms"], "achieved_rate": d["achieved_rate"],
+            "grow_errors": grow_report.errors,
+            "handoff_imported": grow_info["imported"],
+            "reshard_dropped": dropped,
+            "hit_rate_pre": round(pre_rate, 4),
+            "hit_rate_post": round(post_rate, 4)}
+
+
+def _hit_rate(before: list, after: list) -> float:
+    """Fleet-wide cache hit rate over the window between two
+    ``cache.stats()`` snapshots (servers added after ``before`` was
+    taken count from zero)."""
+    hits = misses = 0
+    for i, b in enumerate(after):
+        a = before[i] if i < len(before) else {"hits": 0, "misses": 0}
+        hits += b["hits"] - a["hits"]
+        misses += b["misses"] - a["misses"]
+    total = hits + misses
+    return hits / total if total else 1.0
 
 
 def serve_router(router, servers) -> int:

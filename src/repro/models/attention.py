@@ -212,12 +212,26 @@ def decode_attention(q, k, v, *, valid_len, k_scale=None, v_scale=None):
         s = s * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
     kpos = jnp.arange(Sk)
     s = jnp.where((kpos < valid_len)[None, None, None, None, :], s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
+    # Normalize *after* the pv contraction with unnormalized exp weights
+    # rounded to the cache dtype — the exact operation order of the flash
+    # path, so decode logits track train logits to the last rounding step
+    # (train/serve consistency; the MoE router is sensitive to sub-ulp
+    # drift in the attention output).
+    m = s.max(axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    l = p.sum(axis=-1)
     if v_scale is not None:
-        p = p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
-    out = jnp.einsum("bhgqs,bshd->bqhgd", p.astype(jnp.float32),
-                     v.astype(jnp.float32),
-                     preferred_element_type=jnp.float32)
+        pv = jnp.einsum("bhgqs,bshd->bhgqd",
+                        (p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+                         ).astype(jnp.float32),
+                        v.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    else:
+        pv = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(v.dtype), v,
+                        preferred_element_type=jnp.float32)
+    out = pv / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4)
     return out.reshape(B, Sq, H, D).astype(q.dtype)
 
 

@@ -58,10 +58,13 @@ def rwkv6_specs(cfg) -> dict:
 def init_rwkv_state(cfg, batch: int):
     d = cfg.d_model
     nh, hd = d // cfg.rwkv_head, cfg.rwkv_head
+    # fp32 shift streams: the block computes in fp32 (see rwkv6_apply), and
+    # a bf16 handoff would make the decode step see a rounded x_{t-1} the
+    # train path never saw.
     return {
         "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
-        "shift_t": jnp.zeros((batch, d), jnp.bfloat16),
-        "shift_c": jnp.zeros((batch, d), jnp.bfloat16),
+        "shift_t": jnp.zeros((batch, d), jnp.float32),
+        "shift_c": jnp.zeros((batch, d), jnp.float32),
     }
 
 
@@ -76,10 +79,25 @@ def _mix(x, xprev, mu):
 
 def rwkv6_apply(params, x, cfg, *, mode: str, state=None,
                 chunk: int = 32, unroll: bool = False):
-    """Full RWKV6 block (time-mix + channel-mix).  Returns (out, state)."""
+    """Full RWKV6 block (time-mix + channel-mix).  Returns (out, state).
+
+    The whole block runs in fp32 with a single rounding back to the model
+    dtype at the residual output.  Intermediate bf16 roundings are not
+    shape-stable under XLA (conversion folding elides them differently per
+    fused program), so a bf16 block makes decode logits drift from train
+    logits by bf16 ulps even though the recurrence is exact — fp32 ops
+    round identically in every program shape, which is what the
+    decode==train serve-consistency gate needs at its 1e-4 tolerance.
+    """
     B, S, d = x.shape
     nh, hd = d // cfg.rwkv_head, cfg.rwkv_head
     st = state or init_rwkv_state(cfg, B)
+    out_dtype = x.dtype
+    f32 = jnp.float32
+    x = x.astype(f32)
+    params = jax.tree.map(
+        lambda a: a.astype(f32) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, params)
 
     # ---------------- time mix ----------------
     xn = rmsnorm(x, params["ln_t"], cfg.norm_eps)
@@ -163,7 +181,7 @@ def rwkv6_apply(params, x, cfg, *, mode: str, state=None,
     kk = jnp.square(jax.nn.relu(linear(xm, params["ck"])))
     kk = shard(kk, "batch", None, "mlp")
     cm = linear(kk, params["cv"]) * jax.nn.sigmoid(linear(xm, params["cr"]))
-    out = x + cm
-    new_state = {"wkv": new_wkv, "shift_t": new_shift_t.astype(jnp.bfloat16),
-                 "shift_c": xc[:, -1].astype(jnp.bfloat16)}
+    out = (x + cm).astype(out_dtype)
+    new_state = {"wkv": new_wkv, "shift_t": new_shift_t.astype(jnp.float32),
+                 "shift_c": xc[:, -1].astype(jnp.float32)}
     return out, new_state

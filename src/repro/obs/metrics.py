@@ -31,13 +31,16 @@ __all__ = [
     "PLANNER_SUBBLOCKS", "PLANNER_DECODE_SECONDS", "PLANNER_DECODED_BYTES",
     "ENTROPY_DECODE_SECONDS",
     "SERVER_REQUEST_SECONDS", "SERVER_REGIONS",
+    "SERVER_BACKPRESSURE", "SERVER_DECODE_UNITS", "SERVER_QUEUE_DEPTH",
     "CACHE_HITS", "CACHE_MISSES", "CACHE_EVICTIONS",
     "CACHE_ENTRIES", "CACHE_BYTES", "CACHE_BUDGET_BYTES",
+    "HANDOFF_KEYS", "HANDOFF_BYTES",
     "ROUTER_SHARD_SECONDS", "ROUTER_BATCHES", "ROUTER_SHARD_REQUESTS",
     "ROUTER_ENDPOINT_FAILURES", "ROUTER_LOCAL_FALLBACKS",
     "ROUTER_RETRIES", "ROUTER_DEMOTIONS", "ROUTER_BATCH_SECONDS",
     "HTTP_REQUESTS", "HTTP_REQUEST_SECONDS",
     "VARIANT_REQUESTS", "VARIANT_FALLBACKS", "VARIANT_UNSATISFIED",
+    "VARIANT_LABEL_BUDGET",
     "SLO_FIRING", "SLO_STATE", "SLO_VALUE",
 ]
 
@@ -150,6 +153,25 @@ SERVER_REGIONS = REGISTRY.counter(
     "tacz_server_regions_total",
     "Region boxes served by RegionServer.get_regions.")
 
+# Admission control (repro.serving.core.AsyncServingCore): decode work
+# is bounded; what the bound rejects or queues must be visible.
+
+SERVER_BACKPRESSURE = REGISTRY.counter(
+    "tacz_server_backpressure_total",
+    "Batches rejected by decode admission control "
+    "(reason: queue_full | draining).",
+    labels=("reason",))
+
+SERVER_DECODE_UNITS = REGISTRY.counter(
+    "tacz_server_decode_units_total",
+    "Per-level decode units executed by the AsyncServingCore worker "
+    "pool (an oversized batch splits into one unit per level).")
+
+SERVER_QUEUE_DEPTH = REGISTRY.gauge(
+    "tacz_server_queue_depth",
+    "Decode units currently admitted (queued + running) in the "
+    "AsyncServingCore.")
+
 # Cache gauges are refreshed from SubBlockCache.stats() at scrape/stat
 # time (the cache keeps its own lifetime counters across hot swaps).
 CACHE_HITS = REGISTRY.gauge(
@@ -176,6 +198,22 @@ def refresh_cache_gauges(cache_stats: dict) -> None:
     CACHE_ENTRIES.labels().set(cache_stats.get("entries", 0))
     CACHE_BYTES.labels().set(cache_stats.get("bytes", 0))
     CACHE_BUDGET_BYTES.labels().set(cache_stats.get("budget_bytes", 0))
+
+
+# Cache handoff (live resharding): decoded bricks moved between shards
+# so a grown fleet serves warm instead of cold-starting.
+
+HANDOFF_KEYS = REGISTRY.counter(
+    "tacz_cache_handoff_keys_total",
+    "Decoded bricks moved by the cache-handoff protocol "
+    "(direction: export | import).",
+    labels=("direction",))
+
+HANDOFF_BYTES = REGISTRY.counter(
+    "tacz_cache_handoff_bytes_total",
+    "Decoded-brick payload bytes moved by the cache-handoff protocol "
+    "(direction: export | import).",
+    labels=("direction",))
 
 
 # ------------------------------- router ----------------------------------
@@ -232,11 +270,17 @@ HTTP_REQUEST_SECONDS = REGISTRY.histogram(
 # which eb variants actually serve traffic, and how often the frontier
 # machinery degrades (fallback) or refuses (unsatisfiable target).
 
+#: Cardinality budget for the ``variant`` label: a fleet mixing many
+#: variant sets cannot blow up a scrape — the 65th and later distinct
+#: variant names collapse into ``variant="__other__"``.
+VARIANT_LABEL_BUDGET = 64
+
 VARIANT_REQUESTS = REGISTRY.counter(
     "tacz_variant_requests_total",
     "Region batches served per selected eb variant (label is the "
-    "variant name; 'default' for single-snapshot servers).",
-    labels=("variant",))
+    "variant name; 'default' for single-snapshot servers; names beyond "
+    "the cardinality budget collapse into '__other__').",
+    labels=("variant",), max_series=VARIANT_LABEL_BUDGET)
 
 VARIANT_FALLBACKS = REGISTRY.counter(
     "tacz_variant_fallbacks_total",

@@ -34,7 +34,8 @@ import math
 import threading
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "DEFAULT_TIME_BUCKETS", "quantile_from_buckets"]
+           "DEFAULT_TIME_BUCKETS", "OVERFLOW_LABEL",
+           "quantile_from_buckets"]
 
 #: Default latency buckets (seconds): 100 µs … 10 s, roughly 1-2.5-5 per
 #: decade — wide enough for a cold multi-level decode, fine enough to
@@ -253,19 +254,34 @@ class Histogram(_Child):
             return self._sum / self._count
 
 
+#: Label value every over-budget series collapses into (see
+#: ``_Family.max_series``) — one bounded bucket instead of a scrape that
+#: grows with every distinct label value a client invents.
+OVERFLOW_LABEL = "__other__"
+
+
 class _Family:
     """One metric name: help text, label names, and labeled children."""
 
     __slots__ = ("name", "help", "kind", "label_names", "_children",
-                 "_lock", "_reg", "_bounds")
+                 "_lock", "_reg", "_bounds", "max_series", "_overflow")
 
     def __init__(self, reg, name, help_text, kind, label_names,
-                 bounds=None):
+                 bounds=None, max_series=None):
         self.name = _check_name(name, "metric")
         self.help = str(help_text)
         self.kind = kind
         self.label_names = tuple(_check_name(n, "label")
                                  for n in label_names)
+        if max_series is not None:
+            max_series = int(max_series)
+            if max_series < 1:
+                raise ValueError("max_series must be >= 1")
+            if not self.label_names:
+                raise ValueError(
+                    "max_series only applies to labeled families")
+        self.max_series = max_series
+        self._overflow = (OVERFLOW_LABEL,) * len(self.label_names)
         self._children: dict[tuple[str, ...], _Child] = {}
         self._lock = threading.Lock()
         self._reg = reg
@@ -273,7 +289,14 @@ class _Family:
 
     def labels(self, *values) -> _Child:
         """The child series for one label-value tuple (created on first
-        use).  A family with no labels has a single anonymous child."""
+        use).  A family with no labels has a single anonymous child.
+
+        With ``max_series`` set, a *new* label tuple arriving once the
+        family already holds that many distinct series is routed to the
+        ``__other__`` overflow child instead — the cardinality budget
+        that keeps one scrape bounded no matter how many distinct label
+        values (e.g. eb-variant names across a fleet) show up.
+        """
         if len(values) != len(self.label_names):
             raise ValueError(
                 f"{self.name} takes labels {self.label_names}, "
@@ -281,6 +304,12 @@ class _Family:
         key = tuple(str(v) for v in values)
         with self._lock:
             child = self._children.get(key)
+            if (child is None and self.max_series is not None
+                    and key != self._overflow
+                    and sum(k != self._overflow
+                            for k in self._children) >= self.max_series):
+                key = self._overflow
+                child = self._children.get(key)
             if child is None:
                 if self.kind == "counter":
                     child = Counter(self._lock, self._reg)
@@ -367,42 +396,56 @@ class MetricsRegistry:
 
     # ----------------------------- families -------------------------------
 
-    def _family(self, name, help_text, kind, label_names, bounds=None):
+    def _family(self, name, help_text, kind, label_names, bounds=None,
+                max_series=None):
         with self._lock:
             fam = self._families.get(name)
             if fam is not None:
                 if (fam.kind != kind
                         or fam.label_names != tuple(label_names)
-                        or (bounds is not None and fam._bounds != bounds)):
+                        or (bounds is not None and fam._bounds != bounds)
+                        or (max_series is not None
+                            and fam.max_series != max_series)):
                     raise ValueError(
                         f"metric {name!r} re-registered with a different "
-                        f"kind/labels/buckets")
+                        f"kind/labels/buckets/max_series")
                 return fam
-            fam = _Family(self, name, help_text, kind, label_names, bounds)
+            fam = _Family(self, name, help_text, kind, label_names, bounds,
+                          max_series)
             self._families[name] = fam
             return fam
 
     def counter(self, name: str, help_text: str,
-                labels: tuple[str, ...] = ()) -> _Family:
-        """Get or create a counter family."""
-        return self._family(name, help_text, "counter", labels)
+                labels: tuple[str, ...] = (),
+                max_series: int | None = None) -> _Family:
+        """Get or create a counter family.  ``max_series`` caps the
+        number of distinct label tuples; later new tuples collapse into
+        the ``__other__`` overflow series (see :data:`OVERFLOW_LABEL`)."""
+        return self._family(name, help_text, "counter", labels,
+                            max_series=max_series)
 
     def gauge(self, name: str, help_text: str,
-              labels: tuple[str, ...] = ()) -> _Family:
-        """Get or create a gauge family."""
-        return self._family(name, help_text, "gauge", labels)
+              labels: tuple[str, ...] = (),
+              max_series: int | None = None) -> _Family:
+        """Get or create a gauge family (``max_series`` as in
+        :meth:`counter`)."""
+        return self._family(name, help_text, "gauge", labels,
+                            max_series=max_series)
 
     def histogram(self, name: str, help_text: str,
                   labels: tuple[str, ...] = (),
                   buckets: tuple[float, ...] = DEFAULT_TIME_BUCKETS,
+                  max_series: int | None = None,
                   ) -> _Family:
         """Get or create a histogram family with fixed ``buckets``
-        (finite ascending upper bounds; ``+Inf`` is implicit)."""
+        (finite ascending upper bounds; ``+Inf`` is implicit;
+        ``max_series`` as in :meth:`counter`)."""
         bounds = tuple(float(b) for b in buckets)
         if list(bounds) != sorted(set(bounds)) or any(
                 math.isinf(b) for b in bounds):
             raise ValueError("buckets must be finite, ascending, unique")
-        return self._family(name, help_text, "histogram", labels, bounds)
+        return self._family(name, help_text, "histogram", labels, bounds,
+                            max_series=max_series)
 
     def families(self) -> list[_Family]:
         with self._lock:

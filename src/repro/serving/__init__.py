@@ -14,9 +14,14 @@ Two independent subsystems live here:
     mirror of ``TACZReader.read_roi`` with footer-CRC snapshot hot-swap
     (warm entries carry over for levels whose payload CRCs are
     unchanged) and an optional shard filter.
+  * :class:`~repro.serving.core.AsyncServingCore` — bounded worker-pool
+    execution front with admission control: per-level decode-unit
+    splitting, 429/503 + ``Retry-After`` backpressure, and a
+    ``tacz_server_backpressure_total`` rejection counter.
   * :mod:`~repro.serving.http_api` / :class:`~repro.serving.client.
     RegionClient` — stdlib HTTP endpoint and client (JSON metadata, raw
-    ``<f4`` region payloads).
+    ``<f4`` region payloads) — worker-pooled, with busy-aware client
+    retry and the ``/v1/cache/export|import`` resharding handoff routes.
   * :class:`~repro.serving.sharded.ShardMap` /
     :class:`~repro.serving.sharded.ShardedRegionRouter` — consistent-hash
     placement of sub-blocks over N shard endpoints and the scatter-gather
@@ -40,13 +45,15 @@ not re-exported here so the region-serving path stays importable on
 hosts without an accelerator stack.
 """
 from .client import RegionClient
+from .core import AsyncServingCore, ServerBusy
 from .http_api import RegionHTTPServer, serve
 from .loadgen import LoadGenerator, LoadReport, ZipfWorkload, client_fetch
 from .regions import DecodePlanner, RegionServer, SubBlockCache
 from .sharded import ShardedRegionRouter, ShardMap
 from .variants import VariantServer
 
-__all__ = ["DecodePlanner", "LoadGenerator", "LoadReport", "RegionClient",
-           "RegionHTTPServer", "RegionServer", "ShardMap",
+__all__ = ["AsyncServingCore", "DecodePlanner", "LoadGenerator",
+           "LoadReport", "RegionClient", "RegionHTTPServer",
+           "RegionServer", "ServerBusy", "ShardMap",
            "ShardedRegionRouter", "SubBlockCache", "VariantServer",
            "ZipfWorkload", "client_fetch", "serve"]

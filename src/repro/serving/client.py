@@ -12,6 +12,7 @@ import io
 import json
 import struct
 import threading
+import time
 import urllib.error
 import urllib.parse
 import urllib.request
@@ -58,14 +59,29 @@ class RegionAPIError(urllib.error.HTTPError):
 class RegionClient:
     """Client for one region endpoint (``http://host:port``).
 
+    Backpressure: a 429/503 response carrying a ``Retry-After`` header
+    means the endpoint is *busy*, not down — admission control rejected
+    the request because its decode queue is full.  The client honors the
+    hint transparently: it sleeps ``min(Retry-After, busy_backoff_cap)``
+    and retries, up to ``busy_retries`` times, before surfacing the
+    :class:`RegionAPIError`.  (A 503 *without* ``Retry-After`` — e.g. a
+    health readiness failure — is never retried.)
+
     :param base_url: endpoint root, e.g. ``"http://127.0.0.1:8765"``
         (trailing slash tolerated).
     :param timeout: per-request socket timeout in seconds.
+    :param busy_retries: how many 429/503 + ``Retry-After`` rejections to
+        wait out per request before raising (0 disables).
+    :param busy_backoff_cap: upper bound in seconds on each honored
+        ``Retry-After`` sleep.
     """
 
-    def __init__(self, base_url: str, *, timeout: float = 30.0):
+    def __init__(self, base_url: str, *, timeout: float = 30.0,
+                 busy_retries: int = 2, busy_backoff_cap: float = 2.0):
         self.base_url = base_url.rstrip("/")
         self.timeout = float(timeout)
+        self.busy_retries = max(0, int(busy_retries))
+        self.busy_backoff_cap = float(busy_backoff_cap)
         split = urllib.parse.urlsplit(self.base_url)
         if split.scheme not in ("http", "https") or not split.hostname:
             raise ValueError(
@@ -79,21 +95,40 @@ class RegionClient:
         self._prefix = split.path.rstrip("/")   # e.g. a reverse-proxy root
         self._local = threading.local()   # one keep-alive conn per thread
 
+    def _busy_delay(self, retry_after: str) -> float:
+        """The (capped) sleep a ``Retry-After`` hint asks for."""
+        try:
+            delay = float(retry_after)
+        except (TypeError, ValueError):
+            delay = 1.0
+        return min(max(delay, 0.0), self.busy_backoff_cap)
+
     def _get(self, path: str):
         """``GET`` with contextual errors: a 4xx/5xx response raises
         :class:`RegionAPIError` (status + body excerpt + the server's
-        request ID) instead of a bare ``HTTPError``."""
-        try:
-            return urllib.request.urlopen(self.base_url + path,
-                                          timeout=self.timeout)
-        except urllib.error.HTTPError as exc:
-            body = b""
+        request ID) instead of a bare ``HTTPError``.  A 429/503 with a
+        ``Retry-After`` header is waited out up to ``busy_retries``
+        times first (server busy, not down)."""
+        busy_left = self.busy_retries
+        while True:
             try:
-                body = exc.read()
-            except Exception:   # pragma: no cover - unreadable error body
-                pass
-            raise RegionAPIError(self.base_url + path, exc.code,
-                                 exc.reason, exc.headers, body) from exc
+                return urllib.request.urlopen(self.base_url + path,
+                                              timeout=self.timeout)
+            except urllib.error.HTTPError as exc:
+                body = b""
+                try:
+                    body = exc.read()
+                except Exception:  # pragma: no cover - unreadable body
+                    pass
+                ra = (exc.headers.get("Retry-After")
+                      if exc.headers else None)
+                if exc.code in (429, 503) and ra is not None and busy_left:
+                    busy_left -= 1
+                    time.sleep(self._busy_delay(ra))
+                    continue
+                raise RegionAPIError(self.base_url + path, exc.code,
+                                     exc.reason, exc.headers,
+                                     body) from exc
 
     def _post(self, path: str, body: bytes,
               headers: dict | None = None) -> tuple[dict, bytes]:
@@ -109,7 +144,8 @@ class RegionClient:
         send_headers = {"Content-Type": "application/json"}
         if headers:
             send_headers.update(headers)
-        for attempt in (0, 1):
+        drop_left, busy_left = 1, self.busy_retries
+        while True:
             conn = getattr(self._local, "conn", None)
             try:
                 if conn is None:
@@ -124,9 +160,20 @@ class RegionClient:
                 self._local.conn = None
                 if conn is not None:
                     conn.close()
-                if attempt:
+                if not drop_left:
                     raise urllib.error.URLError(exc) from exc
+                drop_left -= 1
                 continue
+            if resp.status in (429, 503):
+                # busy, not down: honor the Retry-After hint and retry
+                ra = resp.headers.get("Retry-After")
+                if ra is not None and busy_left:
+                    busy_left -= 1
+                    if resp.will_close:
+                        self._local.conn = None
+                        conn.close()
+                    time.sleep(self._busy_delay(ra))
+                    continue
             if resp.status >= 400:
                 self._local.conn = None
                 conn.close()
@@ -136,7 +183,6 @@ class RegionClient:
                 self._local.conn = None
                 conn.close()
             return dict(resp.headers), data
-        raise AssertionError("unreachable")  # pragma: no cover
 
     def meta(self) -> dict:
         """Snapshot + level metadata + cache stats (``GET /v1/meta``).
@@ -323,3 +369,36 @@ class RegionClient:
                 except ValueError:
                     pass
             raise
+
+    def cache_export(self, keys) -> bytes:
+        """Pull a CRC-checked handoff blob of the endpoint's decoded
+        bricks for ``keys`` (``POST /v1/cache/export``).
+
+        Used during live resharding: the old owner of moved keys exports
+        its warm bricks so the new owner can start warm (see
+        :meth:`RegionServer.cache_export` for the wire format).
+
+        :param keys: ``(level, sub_block)`` pairs to export.
+        :returns: the handoff blob (feed to a peer's
+            :meth:`cache_import`).
+        :raises RegionAPIError: e.g. 400 from an endpoint with no cache.
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
+        body = json.dumps(
+            {"keys": [[int(li), int(sbi)] for li, sbi in keys]}).encode()
+        _, blob = self._post("/v1/cache/export", body)
+        return blob
+
+    def cache_import(self, blob: bytes) -> dict:
+        """Push a handoff blob into the endpoint's cache
+        (``POST /v1/cache/import``).
+
+        :param blob: bytes from a peer's :meth:`cache_export`.
+        :returns: the import summary — ``imported``, ``skipped_foreign``,
+            ``skipped_stale``, ``bytes``, ``snapshot_crc``.
+        :raises RegionAPIError: 400 on a corrupt blob (CRC mismatch).
+        :raises urllib.error.URLError: if the endpoint is unreachable.
+        """
+        _, data = self._post("/v1/cache/import", bytes(blob),
+                             {"Content-Type": "application/octet-stream"})
+        return json.loads(data)

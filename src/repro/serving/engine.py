@@ -5,6 +5,12 @@ int8-quantized) KV cache / recurrent state.
 dry-run lowers for the ``prefill_32k`` / ``decode_32k`` / ``long_500k``
 cells.  :class:`ServingEngine` wires them into a minimal batched loop
 (greedy or temperature sampling) for the examples and integration tests.
+
+The region-serving counterpart — :class:`AsyncServingCore`, the bounded
+worker-pool execution front with 429/503 admission control the HTTP
+region endpoint runs on — is re-exported here from
+:mod:`repro.serving.core` (kept in its own module so the region path
+stays importable without JAX).
 """
 from __future__ import annotations
 
@@ -17,9 +23,11 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig, RunConfig
 from ..models import model as M
 from ..models.layers import mesh_context
+from .core import AsyncServingCore, ServerBusy
 from .kv_cache import quantize_prefill_cache
 
-__all__ = ["make_prefill_step", "make_serve_step", "ServingEngine"]
+__all__ = ["AsyncServingCore", "ServerBusy", "make_prefill_step",
+           "make_serve_step", "ServingEngine"]
 
 
 def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh=None, rules=None,

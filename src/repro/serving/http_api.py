@@ -22,6 +22,12 @@ Routes::
                                   [...]?, "target": "psnr>=60"?, "variant":
                                   NAME?} in; u32 header length + JSON header
                                   + concatenated <f4 payloads out
+    POST /v1/cache/export         JSON {"keys": [[level, sub_block], ...]}
+                                  in; CRC-checked handoff blob of this
+                                  shard's decoded bricks out (resharding)
+    POST /v1/cache/import         handoff blob in; JSON import summary out
+                                  (imported / skipped_foreign /
+                                  skipped_stale counts)
 
 The batched response header is ``{"snapshot_crc", "request_id", "trace",
 "variant", "results"}`` where ``results[b][l]`` holds ``{level, ratio,
@@ -37,6 +43,19 @@ Every request first runs the server's footer-CRC hot-swap check (when the
 server was built with ``auto_reload=True``), so an atomically republished
 snapshot is picked up without restarting the endpoint.
 
+Concurrency model: the old one-unbounded-thread-per-connection
+``ThreadingHTTPServer`` behavior is gone.  Connections are handled by a
+fixed accept/parse pool (``accept_workers``), and every region decode
+goes through the server's :class:`~repro.serving.core.AsyncServingCore`
+— a bounded decode pool with admission control.  When the decode queue
+is full the endpoint answers **429** (503 while draining) with a
+``Retry-After`` header and a JSON body naming the reason; rejections are
+counted in ``tacz_server_backpressure_total``.  Idle keep-alive
+connections time out after ``keepalive_timeout`` seconds so they cannot
+pin accept-pool workers (clients transparently reconnect).  Binary
+payloads are written straight from the decoded arrays via ``memoryview``
+— no intermediate payload copy.
+
 Access logging: one structured record per request (method, path, status,
 duration_ms, request_id) through the ``repro.serving.http`` logger at
 DEBUG — quiet by default, and ``serve(..., verbose=True)`` raises it to
@@ -49,6 +68,7 @@ import json
 import logging
 import struct
 import time
+from concurrent.futures import ThreadPoolExecutor
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
@@ -60,6 +80,7 @@ from repro.io import variants as vrt
 from repro.io.frontier import TargetUnsatisfiable
 from repro.obs import metrics as obsm
 
+from .core import AsyncServingCore, ServerBusy
 from .regions import RegionServer
 
 __all__ = ["RegionHTTPServer", "RegionRequestHandler", "serve",
@@ -73,7 +94,8 @@ access_log = logging.getLogger("repro.serving.http")
 # bounded route-label set for the HTTP metrics (an arbitrary 404 path
 # must not mint an unbounded number of label values)
 _KNOWN_ROUTES = ("/v1/meta", "/v1/stats", "/v1/metrics", "/v1/health",
-                 "/v1/region", "/v1/regions")
+                 "/v1/region", "/v1/regions",
+                 "/v1/cache/export", "/v1/cache/import")
 
 
 def format_box(box) -> str:
@@ -102,6 +124,14 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
     #: set per request by :meth:`_handle`; echoed on every response
     _request_id: str = ""
     _status: int = 0
+
+    def setup(self) -> None:
+        """Idle keep-alive connections time out after the server's
+        ``keepalive_timeout`` so they cannot pin a fixed-pool worker
+        forever; clients re-open transparently (the region client
+        already retries a dropped keep-alive connection once)."""
+        self.timeout = getattr(self.server, "keepalive_timeout", 30.0)
+        super().setup()
 
     def log_message(self, format: str, *args) -> None:
         """Base-class messages (errors, malformed requests) go through the
@@ -136,6 +166,19 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
 
     def _fail(self, status: int, msg: str) -> None:
         self._send_json({"error": msg}, status=status)
+
+    def _busy(self, exc: ServerBusy) -> None:
+        """Admission control rejected the request: 429 (queue full) or
+        503 (draining), always with a ``Retry-After`` header — the
+        signal that this endpoint is *busy*, not *down*."""
+        body = json.dumps({"error": str(exc), "reason": exc.reason,
+                           "retry_after_s": exc.retry_after}).encode()
+        self.send_response(exc.status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Retry-After", str(exc.retry_after))
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
 
     def _unsatisfiable(self, exc: TargetUnsatisfiable) -> None:
         """A distortion target no variant meets: a clean 400 whose body
@@ -181,7 +224,13 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             caller maps it to a 400 with an explanatory body).
         :raises ValueError: malformed target / unknown variant / an
             endpoint with no distortion-target support.
+        :raises ServerBusy: decode admission control rejected the batch.
         """
+        core = getattr(self.server, "core", None)
+        if core is not None:
+            return core.execute(boxes, levels=levels, target=target,
+                                variant=variant)
+        # no core mounted (bare handler reuse): direct, unbounded path
         if target is None and variant is None:
             crc, results = self.rs.get_regions_with_crc(boxes,
                                                         levels=levels)
@@ -289,11 +338,16 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
             roi = results[0][0]
         except TargetUnsatisfiable as exc:
             return self._unsatisfiable(exc)
+        except ServerBusy as exc:
+            return self._busy(exc)
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad region query: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
             return self._fail(500, f"region decode failed: {exc}")
-        body = np.ascontiguousarray(roi.data, dtype="<f4").tobytes()
+        # zero-copy: the contiguous <f4 array is written straight to the
+        # socket (wfile is unbuffered, so write() is a direct sendall)
+        body = memoryview(
+            np.ascontiguousarray(roi.data, dtype="<f4")).cast("B")
         self.send_response(200)
         self.send_header("Content-Type", "application/octet-stream")
         self.send_header("Content-Length", str(len(body)))
@@ -310,6 +364,10 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         self.wfile.write(body)
 
     def _route_post(self, url) -> None:
+        if url.path == "/v1/cache/export":
+            return self._cache_export()
+        if url.path == "/v1/cache/import":
+            return self._cache_import()
         if url.path != "/v1/regions":
             return self._fail(404, f"unknown path {url.path!r}")
         try:
@@ -344,11 +402,17 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
                                                         target, variant)
         except TargetUnsatisfiable as exc:
             return self._unsatisfiable(exc)
+        except ServerBusy as exc:
+            return self._busy(exc)
         except ValueError as exc:      # e.g. hot-swap shrank the level count
             return self._fail(400, f"bad regions request: {exc}")
         except Exception as exc:       # corrupt payload, missing codec, ...
             return self._fail(500, f"region decode failed: {exc}")
-        payload = bytearray()
+        # zero-copy payload section: each decoded array is framed as a
+        # memoryview and written straight to the socket — the payload is
+        # never concatenated into an intermediate buffer
+        frames: list = []
+        total = 0
         header: dict = {"snapshot_crc": crc,
                         "request_id": self._request_id,
                         "variant": vname,
@@ -356,40 +420,125 @@ class RegionRequestHandler(BaseHTTPRequestHandler):
         for per_box in results:
             rows = []
             for roi in per_box:
-                raw = np.ascontiguousarray(roi.data, dtype="<f4").tobytes()
+                mv = memoryview(
+                    np.ascontiguousarray(roi.data, dtype="<f4")).cast("B")
                 rows.append({"level": roi.level, "ratio": roi.ratio,
                              "box": [list(r) for r in roi.box],
                              "shape": list(roi.shape),
-                             "offset": len(payload), "nbytes": len(raw)})
-                payload.extend(raw)
+                             "offset": total, "nbytes": len(mv)})
+                frames.append(mv)
+                total += len(mv)
             header["results"].append(rows)
         hdr = json.dumps(header).encode()
-        body = struct.pack("<I", len(hdr)) + hdr + bytes(payload)
         self.send_response(200)
         self.send_header("Content-Type", "application/octet-stream")
-        self.send_header("Content-Length", str(len(body)))
+        self.send_header("Content-Length", str(4 + len(hdr) + total))
         self.end_headers()
-        self.wfile.write(body)
+        self.wfile.write(struct.pack("<I", len(hdr)))
+        self.wfile.write(hdr)
+        for mv in frames:
+            self.wfile.write(mv)
+
+    # --------------------------- cache handoff ----------------------------
+
+    def _cache_export(self) -> None:
+        """``POST /v1/cache/export`` — serialize the requested decoded
+        bricks into a CRC-checked handoff blob (live resharding)."""
+        fn = getattr(self.rs, "cache_export", None)
+        if fn is None:
+            return self._fail(400, "endpoint has no sub-block cache")
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            req = json.loads(self.rfile.read(n) or b"{}")
+            keys = [(int(li), int(sbi)) for li, sbi in req.get("keys", [])]
+        except (KeyError, TypeError, ValueError,
+                json.JSONDecodeError) as exc:
+            return self._fail(400, f"bad cache export request: {exc}")
+        try:
+            blob = fn(keys)
+        except Exception as exc:
+            return self._fail(500, f"cache export failed: {exc}")
+        self.send_response(200)
+        self.send_header("Content-Type", "application/octet-stream")
+        self.send_header("Content-Length", str(len(blob)))
+        self.end_headers()
+        self.wfile.write(blob)
+
+    def _cache_import(self) -> None:
+        """``POST /v1/cache/import`` — ingest a handoff blob; responds
+        with the import summary (a corrupt blob is a clean 400)."""
+        fn = getattr(self.rs, "cache_import", None)
+        if fn is None:
+            return self._fail(400, "endpoint has no sub-block cache")
+        try:
+            n = int(self.headers.get("Content-Length", 0))
+            summary = fn(self.rfile.read(n))
+        except ValueError as exc:      # truncated frame / CRC mismatch
+            return self._fail(400, f"bad cache handoff blob: {exc}")
+        except Exception as exc:
+            return self._fail(500, f"cache import failed: {exc}")
+        return self._send_json(summary)
 
 
 class RegionHTTPServer(ThreadingHTTPServer):
-    """ThreadingHTTPServer bound to one :class:`RegionServer` (or a
-    router exposing the same serving surface)."""
+    """Worker-pooled HTTP server bound to one :class:`RegionServer` (or
+    a router exposing the same serving surface).
+
+    Unlike the ``ThreadingHTTPServer`` it subclasses, connections are
+    NOT given a fresh unbounded thread each: :meth:`process_request` is
+    overridden to hand every accepted socket to a fixed
+    ``accept_workers``-sized pool, and all region decodes flow through
+    :attr:`core` — an :class:`~repro.serving.core.AsyncServingCore`
+    whose admission control turns overload into fast 429s instead of an
+    unbounded thread pile-up.
+    """
 
     daemon_threads = True
 
     def __init__(self, addr, region_server: RegionServer, *,
-                 verbose: bool = False, log_json: bool = False):
+                 verbose: bool = False, log_json: bool = False,
+                 accept_workers: int = 32, decode_workers: int = 4,
+                 queue_depth: int = 16, retry_after_s: float = 1.0,
+                 keepalive_timeout: float = 30.0):
         super().__init__(addr, RegionRequestHandler)
         self.region_server = region_server
         self.verbose = verbose
         self.log_json = log_json
+        self.keepalive_timeout = float(keepalive_timeout)
+        self.core = AsyncServingCore(region_server,
+                                     decode_workers=decode_workers,
+                                     queue_depth=queue_depth,
+                                     retry_after_s=retry_after_s)
+        self._accept_pool = ThreadPoolExecutor(
+            max_workers=max(1, int(accept_workers)),
+            thread_name_prefix="http-worker")
+
+    def process_request(self, request, client_address) -> None:
+        """Hand the accepted connection to the fixed accept pool
+        (replaces ThreadingMixIn's thread-per-connection)."""
+        self._accept_pool.submit(self._work, request, client_address)
+
+    def _work(self, request, client_address) -> None:
+        try:
+            self.finish_request(request, client_address)
+        except Exception:
+            self.handle_error(request, client_address)
+        finally:
+            self.shutdown_request(request)
+
+    def server_close(self) -> None:
+        super().server_close()
+        self._accept_pool.shutdown(wait=False)
+        self.core.close()
 
 
 def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
           cache_bytes: int = 256 << 20, auto_reload: bool = True,
           shard_map=None, shard_id: str | None = None,
           verbose: bool = False, log_json: bool = False,
+          accept_workers: int = 32, decode_workers: int = 4,
+          queue_depth: int = 16, retry_after_s: float = 1.0,
+          keepalive_timeout: float = 30.0,
           ) -> RegionHTTPServer:
     """Build a region endpoint from a ``.tacz`` path, a RegionServer, or
     a sharded router.
@@ -419,6 +568,17 @@ def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
         (``method``, ``path``, ``status``, ``duration_ms``,
         ``request_id``) instead of the plain-text line — machine-parsable
         fleet logs; the plain-text format is the unchanged default.
+    :param accept_workers: fixed connection-handling pool size (replaces
+        the old unbounded thread-per-connection model).
+    :param decode_workers: decode pool size — the hard cap on concurrent
+        region decodes.
+    :param queue_depth: admitted-but-waiting decode-unit budget beyond
+        the workers; a batch that would exceed
+        ``decode_workers + queue_depth`` in-flight units is rejected
+        with 429 + ``Retry-After``.
+    :param retry_after_s: the ``Retry-After`` hint on rejections.
+    :param keepalive_timeout: idle keep-alive connections are closed
+        after this many seconds so they cannot pin accept-pool workers.
     :returns: the (not yet running) HTTP server; call ``serve_forever()``
         (typically on a thread) and ``shutdown()`` to stop.
     :raises ValueError: if only one of ``shard_map``/``shard_id`` is
@@ -436,4 +596,9 @@ def serve(src, host: str = "127.0.0.1", port: int = 8765, *,
                                auto_reload=auto_reload,
                                shard_map=shard_map, shard_id=shard_id)
     return RegionHTTPServer((host, port), src, verbose=verbose,
-                            log_json=log_json)
+                            log_json=log_json,
+                            accept_workers=accept_workers,
+                            decode_workers=decode_workers,
+                            queue_depth=queue_depth,
+                            retry_after_s=retry_after_s,
+                            keepalive_timeout=keepalive_timeout)

@@ -229,7 +229,8 @@ class LoadGenerator:
                 return False
         return True
 
-    def run(self, n_requests: int) -> LoadReport:
+    def run(self, n_requests: int, *,
+            actions: dict | None = None) -> LoadReport:
         """Drive ``n_requests`` through the fleet and report.
 
         Blocks until every request completed (or errored).  Thread-safe
@@ -238,10 +239,18 @@ class LoadGenerator:
         one keep-alive connection per thread, so the default stack is
         safe at any concurrency.
 
+        :param actions: optional ``{request_index: callable}`` — the
+            worker that claims index *i* runs ``actions[i]()`` once,
+            inline, before waiting for the request's due time.  This is
+            how a benchmark injects a mid-run control-plane event (e.g.
+            a live reshard) at a deterministic point in the request
+            stream.  An action that raises is recorded as an error
+            (tagged ``action@i``), so a zero-errors gate catches it.
         :returns: the :class:`LoadReport` (exact client-side
             percentiles, error/mismatch counts, saturation).
         """
         n = int(n_requests)
+        actions = dict(actions or {})
         queries = self.workload.sequence(n)
         rng = random.Random(self._seed)
         verify_mask = [self.verify_reader is not None
@@ -263,6 +272,18 @@ class LoadGenerator:
                     if i >= n:
                         return
                     next_idx[0] += 1
+                action = actions.pop(i, None) if actions else None
+                if action is not None:
+                    try:
+                        action()
+                    except Exception as exc:  # noqa: BLE001 — record
+                        with lock:
+                            if len(errors) < 20:
+                                errors.append(
+                                    f"action@{i} "
+                                    f"{type(exc).__name__}: {exc}")
+                            else:
+                                errors.append("")
                 due = i / self.rate
                 now = time.perf_counter() - t0
                 if now < due:

@@ -29,8 +29,11 @@ endpoint lives in ``repro.serving.http_api``; the matching client in
 """
 from __future__ import annotations
 
+import json
+import struct
 import threading
 import time
+import zlib
 from collections import OrderedDict
 from dataclasses import dataclass
 
@@ -149,6 +152,29 @@ class SubBlockCache:
                 _, victim = self._od.popitem(last=False)
                 self._bytes -= victim.nbytes
                 self.evictions += 1
+
+    def peek(self, key: tuple) -> np.ndarray | None:
+        """Look one brick up *without* touching counters or LRU order.
+
+        The cache-handoff exporter uses this: serializing a shard's hot
+        set for a peer must not skew the hit/miss statistics or promote
+        entries the serving workload is not actually using.
+        """
+        with self._lock:
+            return self._od.get(key)
+
+    def drop(self, pred) -> int:
+        """Remove every entry whose key matches ``pred(key)``.
+
+        :param pred: predicate over full cache keys (e.g. the 3-tuple
+            ``(gen, level, sub_block)`` form the planner uses).
+        :returns: number of entries removed.
+        """
+        with self._lock:
+            victims = [k for k in self._od if pred(k)]
+            for k in victims:
+                self._bytes -= self._od.pop(k).nbytes
+            return len(victims)
 
     def clear(self) -> None:
         """Drop every entry (counters are kept — they are lifetime totals)."""
@@ -674,6 +700,148 @@ class RegionServer:
         :returns: one crop per level, finest first (file order).
         """
         return self.get_regions([box])[0]
+
+    # --------------------------- cache handoff -----------------------------
+    #
+    # Live resharding moves sub-block ownership between shard servers.
+    # The handoff protocol lets the *new* owner start warm: the old owner
+    # serializes its decoded bricks for the moved keys (`cache_export`),
+    # the new owner ingests them (`cache_import`), and only then does the
+    # old owner adopt the new shard map (`reshard`) and drop the keys.
+    # The blob mirrors the /v1/regions framing (u32 header length + JSON
+    # header + raw <f4 frames) with two integrity gates: a per-entry
+    # zlib.crc32 over the frame bytes, and the exporter's snapshot CRC —
+    # bricks from a different snapshot generation are skipped wholesale.
+
+    def cache_export(self, keys: list[CacheKey]) -> bytes:
+        """Serialize cached decoded bricks for ``keys`` into a handoff blob.
+
+        Keys not currently cached are silently omitted (the importer's
+        peer decodes them cold on first touch); lookups bypass the LRU
+        and hit/miss counters.  Exported volume is counted in
+        ``tacz_cache_handoff_keys_total`` / ``..._bytes_total``
+        (``direction="export"``).
+
+        :param keys: ``(level, sub_block)`` pairs to export.
+        :returns: the blob — u32 header length, JSON header
+            (``snapshot_crc`` + per-entry ``level/sub_block/shape/offset/
+            nbytes/crc32``), then the concatenated ``<f4`` frames.
+        """
+        if self.auto_reload:
+            self.maybe_reload()
+        gen = self.snapshot_crc
+        entries = []
+        frames: list[memoryview] = []
+        total = 0
+        for li, sbi in keys:
+            arr = self.cache.peek((gen, int(li), int(sbi)))
+            if arr is None:
+                continue
+            mv = memoryview(np.ascontiguousarray(arr, dtype="<f4")).cast("B")
+            entries.append({"level": int(li), "sub_block": int(sbi),
+                            "shape": list(arr.shape),
+                            "offset": total, "nbytes": len(mv),
+                            "crc32": zlib.crc32(mv) & 0xFFFFFFFF})
+            frames.append(mv)
+            total += len(mv)
+        hdr = json.dumps({"snapshot_crc": gen, "entries": entries},
+                         sort_keys=True).encode()
+        obsm.HANDOFF_KEYS.labels("export").inc(len(entries))
+        obsm.HANDOFF_BYTES.labels("export").inc(total)
+        return struct.pack("<I", len(hdr)) + hdr + b"".join(frames)
+
+    def cache_import(self, blob: bytes) -> dict:
+        """Ingest a :meth:`cache_export` blob into this server's cache.
+
+        Three per-entry gates, in order: entries from a *different
+        snapshot generation* than this server currently serves are
+        counted ``skipped_stale`` (a hot-swap between export and import
+        invalidates the bricks — not an error); entries this server does
+        not *own* under its shard map are counted ``skipped_foreign``;
+        a truncated frame or a ``crc32`` mismatch raises — corruption in
+        a handoff must never seed the cache with wrong data.  Ingest is
+        all-or-nothing: every frame is CRC-verified *before* the first
+        one touches the cache, so a corrupt blob leaves it untouched.
+
+        :param blob: bytes produced by a peer's :meth:`cache_export`.
+        :returns: summary dict — ``imported``, ``skipped_foreign``,
+            ``skipped_stale``, ``bytes``, ``snapshot_crc``.
+        :raises ValueError: malformed blob, truncated frame, or CRC
+            mismatch.
+        """
+        if self.auto_reload:
+            self.maybe_reload()
+        if len(blob) < 4:
+            raise ValueError("handoff blob shorter than its length prefix")
+        hlen = struct.unpack_from("<I", blob)[0]
+        if 4 + hlen > len(blob):
+            raise ValueError("handoff blob truncated inside its header")
+        try:
+            head = json.loads(blob[4:4 + hlen])
+            src_crc = int(head["snapshot_crc"])
+            entries = head["entries"]
+        except (KeyError, TypeError, ValueError) as exc:
+            raise ValueError(f"malformed handoff header: {exc}") from None
+        gen = self.snapshot_crc
+        stale = (src_crc & 0xFFFFFFFF) != (gen & 0xFFFFFFFF)
+        base = 4 + hlen
+        imported = skipped_foreign = skipped_stale = nbytes = 0
+        owned = self._owned
+        admitted = []                       # verified (key, frame, shape)
+        for e in entries:
+            li, sbi = int(e["level"]), int(e["sub_block"])
+            if stale:
+                skipped_stale += 1
+                continue
+            if owned is not None and (li, sbi) not in owned:
+                skipped_foreign += 1
+                continue
+            off, n = base + int(e["offset"]), int(e["nbytes"])
+            frame = blob[off:off + n]
+            if len(frame) != n:
+                raise ValueError(
+                    f"handoff frame truncated for ({li}, {sbi})")
+            if zlib.crc32(frame) & 0xFFFFFFFF != int(e["crc32"]):
+                raise ValueError(
+                    f"handoff CRC mismatch for ({li}, {sbi})")
+            admitted.append(((gen, li, sbi), frame,
+                             tuple(int(s) for s in e["shape"])))
+        for key, frame, shape in admitted:
+            arr = np.frombuffer(frame, dtype="<f4").reshape(shape).copy()
+            self.cache.put(key, arr)
+            imported += 1
+            nbytes += len(frame)
+        obsm.HANDOFF_KEYS.labels("import").inc(imported)
+        obsm.HANDOFF_BYTES.labels("import").inc(nbytes)
+        return {"imported": imported, "skipped_foreign": skipped_foreign,
+                "skipped_stale": skipped_stale, "bytes": nbytes,
+                "snapshot_crc": gen}
+
+    def reshard(self, shard_map, shard_id: str | None = None) -> int:
+        """Adopt a new shard map, dropping cache entries for keys this
+        server no longer owns.
+
+        Ordering matters for a live fleet: the *router* must adopt the
+        new map (and the new owner must import the moved bricks) before
+        old owners call this — a server that reshards early serves zeros
+        for its moved keys while the router still queries it for them.
+
+        :param shard_map: the new map (``owner(key) -> shard_id``).
+        :param shard_id: this server's shard in the new map (defaults to
+            its current ``shard_id``).
+        :returns: number of cache entries dropped (now-foreign keys).
+        """
+        with self._lock:
+            self.shard_map = shard_map
+            if shard_id is not None:
+                self.shard_id = shard_id
+            self._owned = self._compute_owned(self._reader)
+            self._planner = DecodePlanner(self._reader, self._owned)
+            owned = self._owned
+        if owned is None:
+            return 0
+        return self.cache.drop(
+            lambda k: len(k) == 3 and (k[1], k[2]) not in owned)
 
     def stats(self) -> dict:
         """Cache counters plus snapshot identity (and shard info when

@@ -53,7 +53,7 @@ from repro.obs import metrics as obsm
 from repro.io.reader import (WHOLE_LEVEL, Box, ROILevel, TACZReader,
                              open_snapshot, probe_index_crc)
 
-from .client import RegionClient
+from .client import RegionAPIError, RegionClient
 from .regions import CacheKey, DecodePlanner, resolve_single_target
 
 __all__ = ["ShardMap", "ShardedRegionRouter"]
@@ -147,6 +147,28 @@ class ShardMap:
             raise ValueError(f"unknown shard {shard_id!r}")
         return ShardMap([s for s in self.shards if s != str(shard_id)],
                         seed=self.seed)
+
+    def grow(self, shard_id: str, keys,
+             ) -> tuple["ShardMap", list[CacheKey]]:
+        """The map with ``shard_id`` added, plus exactly which of
+        ``keys`` change owner — the live-resharding work list.
+
+        Rendezvous hashing guarantees every moved key's *new* owner is
+        the added shard (no key moves between two pre-existing shards),
+        and only ~``1/(N+1)`` of the keys move at all.  The moved list
+        drives the cache handoff: each moved key's old owner exports its
+        decoded brick, the new shard imports it, and the fleet serves
+        warm through the transition.
+
+        :param shard_id: the shard to add.
+        :param keys: the key universe to diff ownership over (normally
+            ``reader.subblock_keys()``).
+        :returns: ``(new_map, moved_keys)``.
+        :raises ValueError: if the shard already exists.
+        """
+        new = self.with_shard(shard_id)
+        moved = [k for k in keys if self.owner(k) != new.owner(k)]
+        return new, moved
 
     # ---------------------------- serialization ----------------------------
 
@@ -251,6 +273,13 @@ class ShardedRegionRouter:
         succeeds; correctness is unchanged either way (every endpoint of
         a shard serves identical bytes, and failures still walk the
         remaining endpoints then the local fallback).
+    :param busy_retries: per request group, how many 429/503 +
+        ``Retry-After`` rejections to wait out *on the same endpoint*
+        before treating it as failed.  Busy is not down: these waits are
+        counted as retries but never as endpoint failures, and never
+        demote the endpoint in the load-balance rotation.
+    :param busy_backoff_cap: upper bound in seconds on each honored
+        ``Retry-After`` sleep.
     :raises ValueError: if the snapshot fails validation.
     :raises OSError: if the snapshot cannot be opened.
     """
@@ -259,7 +288,8 @@ class ShardedRegionRouter:
                  endpoints: dict[str, str | list[str]], *,
                  timeout: float = 30.0, local_fallback: bool = True,
                  auto_reload: bool = True, max_workers: int = 8,
-                 load_balance: bool = False):
+                 load_balance: bool = False, busy_retries: int = 2,
+                 busy_backoff_cap: float = 2.0):
         self.path = str(path)
         self.shard_map = shard_map
         self.endpoints: dict[str, list[str]] = {
@@ -269,6 +299,8 @@ class ShardedRegionRouter:
         self.local_fallback = bool(local_fallback)
         self.auto_reload = bool(auto_reload)
         self.load_balance = bool(load_balance)
+        self.busy_retries = max(0, int(busy_retries))
+        self.busy_backoff_cap = float(busy_backoff_cap)
         self._rotation: dict[str, int] = {}      # per-shard round-robin
         self._unhealthy: set[str] = set()        # demoted endpoint urls
         self._clients: dict[str, RegionClient] = {}
@@ -378,11 +410,14 @@ class ShardedRegionRouter:
     # ------------------------------- scatter -------------------------------
 
     def _client(self, url: str) -> RegionClient:
+        # busy_retries=0: backpressure policy lives in _fetch_group (the
+        # router decides whether to wait on an endpoint or move on), not
+        # in the per-endpoint client
         with self._lock:   # pool-thread safe; clients are thread-safe
             cli = self._clients.get(url)
             if cli is None:
                 cli = self._clients[url] = RegionClient(
-                    url, timeout=self.timeout)
+                    url, timeout=self.timeout, busy_retries=0)
             return cli
 
     # router counters mirror into the process-wide obs registry so one
@@ -442,8 +477,12 @@ class ShardedRegionRouter:
         Tries the shard's endpoints (see :meth:`_endpoint_order`); every
         failure mode — unreachable, HTTP error, stale snapshot
         generation, mis-shaped response — moves on, and the local reader
-        is the last resort.  Attempts beyond the first count as retries;
-        the group's wall time lands in
+        is the last resort.  One exception: a 429/503 carrying a
+        ``Retry-After`` header means the endpoint is *busy*, not broken
+        — the group waits out the hint (capped, up to ``busy_retries``
+        times) and retries the *same* endpoint without counting an
+        endpoint failure or demoting it.  Attempts beyond the first
+        count as retries; the group's wall time lands in
         ``tacz_router_shard_seconds{shard=...}``.
 
         The summary dict carries ``shard``, ``level``, ``ms``, the
@@ -470,33 +509,57 @@ class ShardedRegionRouter:
                 info["trace"] = remote
             return info
 
-        for attempt, url in enumerate(self._endpoint_order(shard)):
-            try:
-                self._count("shard_requests")
-                if attempt:
-                    self._count("retries")
-                header, results = self._client(url).regions_ex(
-                    boxes_f, levels=[li], request_id=request_id or None,
-                    variant=variant)
-                crc = int(header["snapshot_crc"])
-                if (crc & 0xFFFFFFFF) != want_crc:
-                    raise ValueError(
-                        f"snapshot mismatch: shard serves {crc:#x}, "
-                        f"router plans against {want_crc:#x}")
-                crops = []
-                for part, per_box in zip(parts, results):
-                    roi = per_box[0]
-                    if tuple(roi.box) != tuple(part.isect):
+        attempts = 0
+        for url in self._endpoint_order(shard):
+            busy_left = self.busy_retries
+            while True:
+                try:
+                    self._count("shard_requests")
+                    if attempts:
+                        self._count("retries")
+                    attempts += 1
+                    header, results = self._client(url).regions_ex(
+                        boxes_f, levels=[li],
+                        request_id=request_id or None, variant=variant)
+                    crc = int(header["snapshot_crc"])
+                    if (crc & 0xFFFFFFFF) != want_crc:
                         raise ValueError(
-                            f"shard returned box {roi.box}, "
-                            f"wanted {part.isect}")
-                    crops.append(roi.data)
-                self._mark_endpoint(url, healthy=True)
-                return crops, _summary(url, header.get("trace"))
-            except Exception as exc:   # noqa: BLE001 — isolate per endpoint
-                self._count("endpoint_failures")
-                self._mark_endpoint(url, healthy=False)
-                errors.append(f"{url}: {exc}")
+                            f"snapshot mismatch: shard serves {crc:#x}, "
+                            f"router plans against {want_crc:#x}")
+                    crops = []
+                    for part, per_box in zip(parts, results):
+                        roi = per_box[0]
+                        if tuple(roi.box) != tuple(part.isect):
+                            raise ValueError(
+                                f"shard returned box {roi.box}, "
+                                f"wanted {part.isect}")
+                        crops.append(roi.data)
+                    self._mark_endpoint(url, healthy=True)
+                    return crops, _summary(url, header.get("trace"))
+                except RegionAPIError as exc:
+                    ra = (exc.headers.get("Retry-After")
+                          if exc.headers else None)
+                    if (exc.code in (429, 503) and ra is not None
+                            and busy_left):
+                        # busy, not down: wait out the hint and retry
+                        # the same endpoint — never a failure/demotion
+                        busy_left -= 1
+                        try:
+                            delay = float(ra)
+                        except ValueError:
+                            delay = 1.0
+                        time.sleep(min(max(delay, 0.0),
+                                       self.busy_backoff_cap))
+                        continue
+                    self._count("endpoint_failures")
+                    self._mark_endpoint(url, healthy=False)
+                    errors.append(f"{url}: {exc}")
+                    break
+                except Exception as exc:  # noqa: BLE001 — per endpoint
+                    self._count("endpoint_failures")
+                    self._mark_endpoint(url, healthy=False)
+                    errors.append(f"{url}: {exc}")
+                    break
         if not self.local_fallback:
             raise RuntimeError(
                 f"shard {shard!r} unreachable for level {li} and local "
@@ -635,6 +698,10 @@ class ShardedRegionRouter:
         with self._lock:
             rd, planner = self._rd_planner_locked(name)
             self._inflight[id(rd)] = self._inflight.get(id(rd), 0) + 1
+            # pin the shard map for the whole batch: a concurrent
+            # apply_shard_map (live resharding) must not re-owner keys
+            # halfway through the scatter loop
+            smap = self.shard_map
         try:
             lis = list(range(rd.n_levels)) if levels is None else \
                 [int(li) for li in levels]
@@ -649,12 +716,12 @@ class ShardedRegionRouter:
             groups: dict[tuple[str, int], list[_Part]] = {}
             for pi, p in enumerate(plans):
                 if p.whole_level:
-                    owner = self.shard_map.owner((p.level, WHOLE_LEVEL))
+                    owner = smap.owner((p.level, WHOLE_LEVEL))
                     groups.setdefault((owner, p.level), []).append(
                         _Part(pi, p.lbox))
                 else:
                     for sbi, isect in p.tasks:
-                        owner = self.shard_map.owner((p.level, sbi))
+                        owner = smap.owner((p.level, sbi))
                         groups.setdefault((owner, p.level), []).append(
                             _Part(pi, isect))
 
@@ -715,6 +782,31 @@ class ShardedRegionRouter:
                     retired = self._retired.pop(id(rd), None)
                     if retired is not None:   # last batch on it drained
                         retired.close()
+
+    def apply_shard_map(self, shard_map: ShardMap,
+                        endpoints: dict | None = None) -> None:
+        """Atomically adopt a new shard map (live resharding).
+
+        In-flight batches finish against the map they started with (the
+        scatter loop pins it per batch); batches started after this call
+        route by the new one.  Fleet ordering matters — see
+        :meth:`RegionServer.reshard`: the new shard's server must be up
+        (and its moved bricks imported) *before* the router adopts the
+        map, and old owners drop moved keys only *after*.
+
+        :param shard_map: the new :class:`ShardMap`.
+        :param endpoints: optional replacement endpoint dict
+            (``{shard_id: url | [urls]}``); None keeps the current one —
+            callers adding a shard usually pass the old dict plus the
+            new shard's url.
+        """
+        with self._lock:
+            self.shard_map = shard_map
+            if endpoints is not None:
+                self.endpoints = {
+                    str(sid): [urls] if isinstance(urls, str)
+                    else list(urls)
+                    for sid, urls in endpoints.items()}
 
     def get_region(self, level: int, box: Box) -> ROILevel:
         """One level's crop of ``box`` (finest-grid cells).

@@ -1,0 +1,472 @@
+"""Async serving core (ISSUE 10): bounded decode admission control,
+429/503 + ``Retry-After`` backpressure semantics, per-level decode-unit
+splitting, busy-aware client/router retry (busy is not down), the
+CRC-checked cache-handoff protocol, and live fleet resharding."""
+import contextlib
+import json
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import metrics as obsm
+from repro.serving import (AsyncServingCore, RegionClient, RegionServer,
+                           ServerBusy, ShardMap, ShardedRegionRouter,
+                           serve)
+from repro.serving.client import RegionAPIError
+from repro.serving.loadgen import LoadGenerator, ZipfWorkload
+
+BOXES = [((0, 8), (0, 8), (0, 8)),
+         ((5, 23), (11, 30), (2, 9)),
+         ((24, 32), (16, 32), (0, 32))]
+FULL = ((0, 32), (0, 32), (0, 32))
+
+
+@pytest.fixture(scope="module")
+def snapshot(make_amr_snapshot):
+    snap = make_amr_snapshot(densities=[0.35, 0.65], seed=5, name="async")
+    return snap.path, snap.res
+
+
+@pytest.fixture()
+def metrics_enabled():
+    """Leave the process-wide registry the way we found it."""
+    was = obs.is_enabled()
+    obs.set_enabled(True)
+    yield
+    obs.set_enabled(was)
+
+
+@contextlib.contextmanager
+def _serve(path, **kw):
+    httpd = serve(path, port=0, **kw)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    try:
+        yield httpd, f"http://127.0.0.1:{httpd.server_address[1]}"
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        httpd.region_server.close()
+
+
+# ------------------------------ core unit ------------------------------
+
+
+class _FakeServer:
+    """Levels-aware stand-in recording which unit calls the core makes."""
+
+    n_levels = 3
+
+    def __init__(self, crcs=(7,)):
+        self.calls = []
+        self._crcs = list(crcs)
+        self._lock = threading.Lock()
+
+    def get_regions_with_crc(self, boxes, levels=None):
+        with self._lock:
+            self.calls.append(tuple(levels))
+            crc = self._crcs[0] if len(self._crcs) == 1 \
+                else self._crcs.pop(0)
+        return crc, [[f"L{li}" for li in levels] for _ in boxes]
+
+
+def test_core_splits_per_level_and_merges_in_request_order():
+    core = AsyncServingCore(_FakeServer(), decode_workers=2)
+    try:
+        crc, vname, results = core.execute([0, 1], levels=[2, 0, 1])
+        assert (crc, vname) == (7, None)
+        # one unit per level, re-merged in the caller's level order
+        assert results == [["L2", "L0", "L1"], ["L2", "L0", "L1"]]
+        assert sorted(core.server.calls) == [(0,), (1,), (2,)]
+    finally:
+        core.close()
+
+
+def test_core_levels_none_expands_to_all_levels():
+    core = AsyncServingCore(_FakeServer(), decode_workers=2)
+    try:
+        _, _, results = core.execute([0])
+        assert results == [["L0", "L1", "L2"]]
+    finally:
+        core.close()
+
+
+def test_core_crc_race_retries_once_then_raises():
+    # units disagree on the serving CRC once (hot swap between units):
+    # the whole batch retries and succeeds on the new generation
+    core = AsyncServingCore(_FakeServer(crcs=[1, 2, 2]),
+                            decode_workers=1)
+    try:
+        crc, _, _ = core.execute([0], levels=[0, 1])
+        assert crc == 2
+    finally:
+        core.close()
+    # pathological churn: both attempts race -> IOError, not bad data
+    core = AsyncServingCore(_FakeServer(crcs=[1, 2, 3, 4, 5]),
+                            decode_workers=1)
+    try:
+        with pytest.raises(IOError, match="hot-swap"):
+            core.execute([0], levels=[0, 1])
+    finally:
+        core.close()
+
+
+def test_core_queue_full_rejects_with_429_semantics(metrics_enabled):
+    release = threading.Event()
+    entered = threading.Event()
+
+    class _Blocking(_FakeServer):
+        def get_regions_with_crc(self, boxes, levels=None):
+            entered.set()
+            release.wait(5)
+            return super().get_regions_with_crc(boxes, levels=levels)
+
+    core = AsyncServingCore(_Blocking(), decode_workers=1, queue_depth=0,
+                            retry_after_s=0.2)
+    t = threading.Thread(target=core.execute, args=([0],),
+                         kwargs={"levels": [0]}, daemon=True)
+    t.start()
+    assert entered.wait(5)
+    before = obsm.SERVER_BACKPRESSURE.labels("queue_full").value
+    with pytest.raises(ServerBusy) as exc_info:
+        core.execute([0], levels=[1])
+    exc = exc_info.value
+    assert exc.status == 429
+    assert exc.reason == "queue_full"
+    assert exc.retry_after >= 1          # sub-second hints round up
+    assert obsm.SERVER_BACKPRESSURE.labels("queue_full").value \
+        == before + 1
+    release.set()
+    t.join(timeout=5)
+    assert core.pending == 0
+    core.close()
+
+
+def test_core_draining_rejects_with_503_semantics():
+    core = AsyncServingCore(_FakeServer(), decode_workers=1)
+    core.close()
+    with pytest.raises(ServerBusy) as exc_info:
+        core.execute([0], levels=[0])
+    assert exc_info.value.status == 503
+    assert exc_info.value.reason == "draining"
+
+
+# ------------------------------ HTTP layer -----------------------------
+
+
+def test_http_backpressure_429_retry_after_header(snapshot,
+                                                  metrics_enabled):
+    """Saturating a 1-worker endpoint yields immediate 429s carrying
+    ``Retry-After``, counted in tacz_server_backpressure_total."""
+    path, _ = snapshot
+    with _serve(path, decode_workers=1, queue_depth=0,
+                retry_after_s=0.25) as (httpd, url):
+        httpd.region_server.fault_hook = lambda: time.sleep(0.4)
+        cli = RegionClient(url, busy_retries=0)   # surface the 429s
+        before = obsm.SERVER_BACKPRESSURE.labels("queue_full").value
+        results, failures = [], []
+        barrier = threading.Barrier(4)
+
+        def request():
+            barrier.wait()
+            try:
+                results.append(cli.regions(BOXES[:1], levels=[0]))
+            except RegionAPIError as exc:
+                failures.append(exc)
+
+        threads = [threading.Thread(target=request) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert results, "someone must get through"
+        assert failures, "a saturated endpoint must shed load"
+        for exc in failures:
+            assert exc.code == 429
+            assert int(exc.headers["Retry-After"]) >= 1
+            body = json.loads(exc.body_excerpt)
+            assert body["reason"] == "queue_full"
+        assert obsm.SERVER_BACKPRESSURE.labels("queue_full").value \
+            >= before + len(failures)
+
+
+def test_client_busy_retry_waits_out_saturation(snapshot):
+    """With a retry budget, every request of a saturating burst lands —
+    the client sleeps out the Retry-After hints instead of failing."""
+    path, _ = snapshot
+    with _serve(path, decode_workers=1, queue_depth=0,
+                retry_after_s=0.1) as (httpd, url):
+        httpd.region_server.fault_hook = lambda: time.sleep(0.05)
+        cli = RegionClient(url, busy_retries=20, busy_backoff_cap=0.1)
+        results, failures = [], []
+        barrier = threading.Barrier(4)
+
+        def request():
+            barrier.wait()
+            try:
+                results.append(cli.regions(BOXES[:1], levels=[0]))
+            except Exception as exc:  # noqa: BLE001 — any failure fails
+                failures.append(exc)
+
+        threads = [threading.Thread(target=request) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not failures, failures
+        assert len(results) == 4
+
+
+def test_oversized_batch_split_is_bit_identical(snapshot,
+                                                metrics_enabled):
+    """A multi-level batch splits into per-level decode units and still
+    returns exactly what an unsplit server serves."""
+    path, _ = snapshot
+    with _serve(path) as (_httpd, url), RegionServer(path) as direct:
+        before = obsm.SERVER_DECODE_UNITS.labels().value
+        got = RegionClient(url).regions(BOXES)        # levels=None: all
+        want = direct.get_regions(BOXES)
+        assert obsm.SERVER_DECODE_UNITS.labels().value \
+            == before + direct.n_levels
+        for per_got, per_want in zip(got, want):
+            assert len(per_got) == len(per_want) == direct.n_levels
+            for g, w in zip(per_got, per_want):
+                assert g.level == w.level and g.box == w.box
+                assert np.array_equal(np.asarray(g.data),
+                                      np.asarray(w.data))
+
+
+def test_router_treats_busy_as_busy_not_down(snapshot):
+    """A 429 from a shard makes the router wait and retry the same
+    endpoint — never demote it, count an endpoint failure, or fall back
+    locally."""
+    path, _ = snapshot
+    m = ShardMap(["s0"], seed=7)
+    release = threading.Event()
+    occupied = threading.Event()
+    first = []
+    lock = threading.Lock()
+
+    def hook():
+        with lock:
+            mine = not first
+            first.append(1)
+        if mine:            # only the occupying request blocks
+            occupied.set()
+            release.wait(5)
+
+    with _serve(path, shard_map=m, shard_id="s0", decode_workers=1,
+                queue_depth=0, retry_after_s=0.2) as (httpd, url):
+        httpd.region_server.fault_hook = hook
+        occupier = threading.Thread(
+            target=RegionClient(url, busy_retries=0).regions,
+            args=(BOXES[:1],), kwargs={"levels": [0]}, daemon=True)
+        occupier.start()
+        assert occupied.wait(5)
+        threading.Timer(0.3, release.set).start()
+        with ShardedRegionRouter(path, m, {"s0": url}, busy_retries=10,
+                                 busy_backoff_cap=0.25) as router, \
+                RegionServer(path) as direct:
+            out = router.get_regions(BOXES[:1], levels=[0])
+            assert router.counters["retries"] >= 1
+            assert router.counters["endpoint_failures"] == 0
+            assert router.counters["demotions"] == 0
+            assert router.counters["local_fallbacks"] == 0
+            want = direct.get_regions(BOXES[:1], levels=[0])
+            assert np.array_equal(np.asarray(out[0][0].data),
+                                  np.asarray(want[0][0].data))
+        occupier.join(timeout=5)
+
+
+# ----------------------------- cache handoff ---------------------------
+
+
+def test_shard_map_grow_moves_only_to_new_shard(snapshot):
+    path, _ = snapshot
+    with RegionServer(path) as srv:
+        keys = list(srv.reader.subblock_keys())
+    m = ShardMap(["s0", "s1"], seed=7)
+    new_map, moved = m.grow("s2", keys)
+    assert new_map.shards == ("s0", "s1", "s2")
+    assert moved, "growing must move some keys"
+    assert len(moved) < len(keys), "growing must not move everything"
+    for k in moved:
+        # rendezvous minimality: every moved key lands on the NEW shard
+        assert new_map.owner(k) == "s2"
+    for k in keys:
+        if k not in moved:
+            assert new_map.owner(k) == m.owner(k)
+
+
+def test_cache_export_import_roundtrip(snapshot, metrics_enabled):
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=7)
+    with RegionServer(path, shard_map=m, shard_id="s0") as old, \
+            RegionServer(path) as whole:
+        old.get_regions([FULL])         # warm every owned sub-block
+        new_map, moved = m.grow("s2", old.reader.subblock_keys())
+        blob = old.cache_export(moved)
+        with RegionServer(path, shard_map=new_map,
+                          shard_id="s2") as new:
+            summary = new.cache_import(blob)
+            assert summary["imported"] > 0
+            assert summary["skipped_foreign"] == 0
+            assert summary["skipped_stale"] == 0
+            assert summary["bytes"] > 0
+            assert summary["snapshot_crc"] == new.snapshot_crc
+            # imported bricks are really in the cache, bit-identical to
+            # a fresh decode of the same sub-block
+            gen = new.snapshot_crc
+            hits = 0
+            for li, sbi in moved:
+                got = new.cache.peek((gen, li, sbi))
+                if got is None:
+                    continue            # moved from s1, not in the blob
+                hits += 1
+                ref = whole.cache.peek((whole.snapshot_crc, li, sbi))
+                if ref is None:
+                    whole.get_regions([FULL])
+                    ref = whole.cache.peek((whole.snapshot_crc, li, sbi))
+                assert np.array_equal(got, ref)
+            assert hits == summary["imported"]
+
+
+def test_cache_import_rejects_corruption_and_stale(snapshot):
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=7)
+    with RegionServer(path, shard_map=m, shard_id="s0") as old:
+        old.get_regions([FULL])
+        new_map, moved = m.grow("s2", old.reader.subblock_keys())
+        blob = old.cache_export(moved)
+        with RegionServer(path, shard_map=new_map,
+                          shard_id="s2") as new:
+            # flip one payload byte: CRC gate must refuse, not ingest
+            bad = bytearray(blob)
+            bad[-1] ^= 0xFF
+            with pytest.raises(ValueError, match="CRC mismatch"):
+                new.cache_import(bytes(bad))
+            assert new.cache.stats()["entries"] == 0
+            # rewrite the generation: every entry skipped as stale
+            hlen = struct.unpack_from("<I", blob)[0]
+            head = json.loads(blob[4:4 + hlen])
+            head["snapshot_crc"] = head["snapshot_crc"] + 1
+            hdr = json.dumps(head, sort_keys=True).encode()
+            stale = struct.pack("<I", len(hdr)) + hdr + blob[4 + hlen:]
+            summary = new.cache_import(stale)
+            assert summary["imported"] == 0
+            # the blob holds every moved brick s0 owned (all were cached)
+            assert summary["skipped_stale"] \
+                == sum(1 for k in moved if m.owner(k) == "s0")
+
+
+def test_reshard_drops_only_foreign_keys(snapshot):
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=7)
+    with RegionServer(path, shard_map=m, shard_id="s0") as srv:
+        srv.get_regions([FULL])
+        entries_before = srv.cache.stats()["entries"]
+        new_map, moved = m.grow("s2", srv.reader.subblock_keys())
+        moved_from_s0 = [k for k in moved if m.owner(k) == "s0"]
+        dropped = srv.reshard(new_map)
+        # the full-domain warm-up cached every owned brick, so exactly
+        # the bricks that changed owner get dropped
+        assert dropped == len(moved_from_s0)
+        assert srv.cache.stats()["entries"] == entries_before - dropped
+        # what's left is exactly what the new map says s0 owns
+        gen = srv.snapshot_crc
+        for li, sbi in srv.reader.subblock_keys():
+            cached = srv.cache.peek((gen, li, sbi)) is not None
+            if cached:
+                assert new_map.owner((li, sbi)) == "s0"
+
+
+def test_http_cache_handoff_between_endpoints(snapshot):
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=7)
+    new_map = m.with_shard("s2")
+    with _serve(path, shard_map=m, shard_id="s0") as (_h0, url0), \
+            _serve(path, shard_map=new_map, shard_id="s2") as (h2, url2):
+        cli0, cli2 = RegionClient(url0), RegionClient(url2)
+        cli0.regions([FULL])                    # warm every level of s0
+        with RegionServer(path) as srv:
+            _, moved = m.grow("s2", srv.reader.subblock_keys())
+        blob = cli0.cache_export(moved)
+        summary = cli2.cache_import(blob)
+        assert summary["imported"] > 0
+        assert h2.region_server.cache.stats()["entries"] \
+            == summary["imported"]
+        bad = bytearray(blob)
+        bad[-1] ^= 0xFF
+        with pytest.raises(RegionAPIError) as exc_info:
+            cli2.cache_import(bytes(bad))
+        assert exc_info.value.code == 400
+
+
+def test_live_reshard_grow_fleet_serves_warm_and_correct(snapshot):
+    """The full grow choreography: export/import moved bricks, router
+    adopts the map, old owners reshard last — bit-identical before,
+    during, and after, with zero endpoint failures or fallbacks."""
+    path, _ = snapshot
+    m = ShardMap(["s0", "s1"], seed=7)
+    with RegionServer(path) as direct:
+        want = direct.get_regions(BOXES)
+        keys = list(direct.reader.subblock_keys())
+    new_map, moved = m.grow("s2", keys)
+
+    def check(router):
+        got = router.get_regions(BOXES)
+        for per_got, per_want in zip(got, want):
+            for g, w in zip(per_got, per_want):
+                assert np.array_equal(np.asarray(g.data),
+                                      np.asarray(w.data))
+
+    with _serve(path, shard_map=m, shard_id="s0") as (h0, url0), \
+            _serve(path, shard_map=m, shard_id="s1") as (h1, url1):
+        urls = {"s0": url0, "s1": url1}
+        with ShardedRegionRouter(path, m, dict(urls)) as router:
+            check(router)                        # warm the old fleet
+            # (1) new shard comes up already on the new map
+            with _serve(path, shard_map=new_map,
+                        shard_id="s2") as (h2, url2):
+                # (2) moved bricks hand off old -> new
+                imported = 0
+                for url in urls.values():
+                    blob = RegionClient(url).cache_export(moved)
+                    imported += RegionClient(url2).cache_import(
+                        blob)["imported"]
+                assert imported > 0, "handoff must move warm bricks"
+                assert h2.region_server.cache.stats()["entries"] \
+                    == imported
+                # (3) router swaps to the grown fleet
+                router.apply_shard_map(new_map,
+                                       {**urls, "s2": url2})
+                check(router)
+                # (4) old owners drop moved keys only after the swap
+                for h in (h0, h1):
+                    h.region_server.reshard(new_map)
+                check(router)
+                assert router.counters["endpoint_failures"] == 0
+                assert router.counters["local_fallbacks"] == 0
+
+
+# ------------------------------- loadgen -------------------------------
+
+
+def test_loadgen_actions_hook_runs_once_and_reports_errors():
+    wl = ZipfWorkload(shape=(8, 8, 8), population=4, seed=1)
+    gen = LoadGenerator(lambda q: [], wl, rate=500.0, concurrency=2)
+    ran = []
+    report = gen.run(10, actions={3: lambda: ran.append(1)})
+    assert ran == [1]
+    assert report.errors == 0
+
+    def boom():
+        raise RuntimeError("control-plane exploded")
+
+    report = gen.run(10, actions={0: boom})
+    assert report.errors == 1
+    assert any(e.startswith("action@0") for e in report.error_messages)
+    assert report.requests == 10          # requests still all ran

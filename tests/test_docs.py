@@ -209,6 +209,30 @@ def test_serving_doc_covers_distortion_targets(serving_doc):
         assert needle in serving_doc, f"serving.md lost coverage: {needle}"
 
 
+def test_serving_doc_covers_admission_and_resharding(serving_doc):
+    """ISSUE 10: the async core, backpressure semantics, and the live
+    resharding choreography must stay documented."""
+    for needle in ["AsyncServingCore", "decode_workers", "queue_depth",
+                   "429", "Retry-After", "503", "draining",
+                   "tacz_server_backpressure_total", "decode unit",
+                   "POST /v1/cache/export", "POST /v1/cache/import",
+                   "ShardMap.grow", "apply_shard_map", "reshard",
+                   "skipped_stale", "skipped_foreign", "all-or-nothing",
+                   "Busy is not down", "Ordering matters", "memoryview",
+                   "bench_loadgen"]:
+        assert needle in serving_doc, f"serving.md lost coverage: {needle}"
+
+
+def test_obs_doc_covers_backpressure_and_handoff(obs_doc):
+    for needle in ["tacz_server_backpressure_total",
+                   "tacz_server_decode_units_total",
+                   "tacz_server_queue_depth",
+                   "tacz_cache_handoff_keys_total",
+                   "tacz_cache_handoff_bytes_total",
+                   "VARIANT_LABEL_BUDGET", "__other__"]:
+        assert needle in obs_doc, f"observability.md lost coverage: {needle}"
+
+
 def test_obs_doc_metric_catalog_matches_registry(obs_doc):
     """The catalog table must name every family in the default registry
     with its exact type, and name nothing the registry does not have."""

@@ -57,19 +57,13 @@ def test_smoke_train_step(arch):
     assert not np.allclose(before, np.asarray(params["lm_head"], np.float32))
 
 
-# Known decode/train mismatches in the seed (rwkv6 state handoff, MoE
-# routing between batch shapes) — kept visible as xfail until fixed
-# (tracked in ROADMAP.md open items), so the CI gate stays meaningful.
-_DECODE_XFAIL = pytest.mark.xfail(
-    reason="pre-existing decode-vs-train mismatch in seed", strict=False)
-
 @pytest.mark.parametrize("arch,tol", [
     ("deepseek_7b", 1e-2), ("starcoder2_3b", 1e-2), ("qwen1_5_32b", 1e-2),
     ("musicgen_medium", 1e-2), ("internvl2_76b", 1e-2), ("llama3_405b", 1e-2),
-    pytest.param("rwkv6_7b", 1e-4, marks=_DECODE_XFAIL),
+    ("rwkv6_7b", 1e-4),
     ("zamba2_2_7b", 2e-2),
-    pytest.param("granite_moe_1b_a400m", 1e-2, marks=_DECODE_XFAIL),
-    pytest.param("qwen3_moe_30b_a3b", 1e-2, marks=_DECODE_XFAIL)])
+    ("granite_moe_1b_a400m", 1e-2),
+    ("qwen3_moe_30b_a3b", 1e-2)])
 def test_decode_matches_train_logits(arch, tol):
     """Serve-path correctness: decode at position S-1 == train logits there.
 

@@ -436,3 +436,29 @@ def test_compress_and_writer_series_populate(snapshot, metrics_enabled,
                    'tacz_writer_level_seconds_count{stage="encode"}',
                    "tacz_writer_bytes_total"):
         assert needle in text, f"missing {needle}"
+
+
+def test_label_budget_routes_overflow_to_other(registry):
+    """A family with ``max_series`` caps its cardinality: once the cap
+    is hit, novel label values collapse into one ``__other__`` series
+    instead of growing the scrape without bound."""
+    fam = registry.counter("t_cap_total", "capped", labels=("variant",),
+                           max_series=3)
+    for i in range(10):
+        fam.labels(f"v{i}").inc()
+    # the first three names got real series; the other seven pooled
+    for name in ("v0", "v1", "v2"):
+        assert fam.labels(name).value == 1
+    assert fam.labels("__other__").value == 7
+    text = registry.render()
+    assert 'variant="__other__"' in text
+    assert text.count("t_cap_total{") == 4          # 3 real + overflow
+    # existing series keep counting normally after the cap is hit
+    fam.labels("v1").inc()
+    assert fam.labels("v1").value == 2
+
+
+def test_variant_requests_family_is_cardinality_bounded():
+    """The process-wide variant counter carries the budget, so a client
+    spraying distinct ``variant`` names cannot blow up the scrape."""
+    assert obsm.VARIANT_REQUESTS.max_series == obsm.VARIANT_LABEL_BUDGET
